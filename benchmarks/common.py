@@ -1,0 +1,100 @@
+"""Shared benchmark harness: dataset/index caches, timing, CSV emission.
+
+Scales are CPU-sized (N = 5k–20k; the paper's 1M/10M regimes are exercised
+structurally by the dry-run). Results go to artifacts/bench/*.csv and the
+run prints ``benchmark,name,metric,value`` rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from functools import lru_cache
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core import auto as auto_mod
+from repro.core.auto import MetricConfig
+from repro.core.baselines import brute_force_hybrid, recall_at_k
+from repro.core.help_graph import HelpConfig, build_help_graph
+from repro.core.routing import RoutingConfig, search
+from repro.data.synthetic import make_hybrid_dataset
+
+BENCH_DIR = os.environ.get(
+    "BENCH_ARTIFACTS",
+    os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench"),
+)
+
+ROWS: list[tuple] = []
+
+
+def emit(bench: str, name: str, metric: str, value) -> None:
+    row = (bench, name, metric, value)
+    ROWS.append(row)
+    print(f"{bench},{name},{metric},{value}", flush=True)
+
+
+def flush_csv(bench: str) -> None:
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    path = os.path.join(BENCH_DIR, f"{bench}.csv")
+    rows = [r for r in ROWS if r[0] == bench]
+    with open(path, "w") as f:
+        f.write("benchmark,name,metric,value\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+
+
+@lru_cache(maxsize=32)
+def dataset(profile: str, attr_dim: int, labels: int, n: int, n_queries: int = 128,
+            seed: int = 0, corr: float = 0.6):
+    return make_hybrid_dataset(
+        n=n, n_queries=n_queries, profile=profile, attr_dim=attr_dim,
+        labels_per_dim=labels, n_clusters=16, attr_cluster_corr=corr, seed=seed,
+    )
+
+
+_INDEX_CACHE: dict = {}
+
+
+def built_index(ds, mode: str = "auto", alpha: Optional[float] = None,
+                gamma: int = 24, sigma: float = 0.44, prune: bool = True,
+                max_rounds: int = 8):
+    key = (id(ds), mode, alpha, gamma, sigma, prune, max_rounds)
+    if key in _INDEX_CACHE:
+        return _INDEX_CACHE[key]
+    stats = auto_mod.sample_stats(ds.features, ds.attrs, seed=0)
+    mc = MetricConfig(
+        mode=mode, alpha=float(alpha) if alpha is not None else stats.alpha
+    )
+    cfg = HelpConfig(gamma=gamma, gamma_new=6, sigma=sigma, prune=prune,
+                     max_rounds=max_rounds, quality_sample=128, node_block=2048)
+    graph, dists, report = build_help_graph(ds.features, ds.attrs, mc, cfg)
+    out = (mc, graph, report, stats)
+    _INDEX_CACHE[key] = out
+    return out
+
+
+def ground_truth(ds, k: int = 10):
+    return brute_force_hybrid(
+        ds.features, ds.attrs, ds.query_features, ds.query_attrs, k
+    )
+
+
+def timed_search(ds, mc, graph, pool: int, k: int = 10, repeats: int = 3,
+                 search_fn=search, **kw):
+    """Returns (recall-ready result, qps, dist_evals). First call compiles;
+    timing excludes compilation (second+ calls)."""
+    cfg = RoutingConfig(k=k, pool_size=pool, pioneer_size=max(4, pool // 8), **kw)
+    res = search_fn(ds.features, ds.attrs, graph, ds.query_features,
+                    ds.query_attrs, mc, cfg)
+    jax.block_until_ready(res.ids)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        res = search_fn(ds.features, ds.attrs, graph, ds.query_features,
+                        ds.query_attrs, mc, cfg)
+        jax.block_until_ready(res.ids)
+    dt = (time.perf_counter() - t0) / repeats
+    qps = ds.query_features.shape[0] / dt
+    return res, qps, int(res.n_dist_evals)

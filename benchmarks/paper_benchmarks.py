@@ -1,0 +1,357 @@
+"""One benchmark per paper table/figure (DESIGN.md §6 experiment index).
+
+Scales are CPU-sized; every function emits ``benchmark,name,metric,value``
+rows and a CSV under artifacts/bench/.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (
+    built_index, dataset, emit, flush_csv, ground_truth, timed_search,
+)
+from repro.core import auto as auto_mod
+from repro.core.auto import MetricConfig
+from repro.core.baselines import (
+    brute_force_hybrid, post_filter_search, pre_filter_search, recall_at_k,
+)
+from repro.core.routing import (
+    RoutingConfig, search, search_greedy_only, search_two_stage,
+)
+from repro.data.synthetic import PROFILES, make_hybrid_dataset
+
+
+# ---------------------------------------------------------------------------
+# Table I — similarity-magnitude statistics across dataset profiles
+# ---------------------------------------------------------------------------
+
+
+def tab1_magnitude_stats(fast: bool = True) -> None:
+    bench = "tab1_magnitude_stats"
+    for profile in PROFILES:
+        ds = dataset(profile, 5, 3, 5000, 64)
+        st = auto_mod.sample_stats(ds.features, ds.attrs, seed=0)
+        emit(bench, profile, "feat_min", round(st.min_feature_dist, 2))
+        emit(bench, profile, "feat_max", round(st.max_feature_dist, 2))
+        emit(bench, profile, "feat_avg", round(st.mean_feature_dist, 2))
+        emit(bench, profile, "attr_min", round(st.min_attribute_dist, 2))
+        emit(bench, profile, "attr_max", round(st.max_attribute_dist, 2))
+        emit(bench, profile, "attr_avg", round(st.mean_attribute_dist, 2))
+        emit(bench, profile, "alpha", round(st.alpha, 3))
+    flush_csv(bench)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 3 — QPS vs Recall@10: STABLE vs baseline strategies
+# ---------------------------------------------------------------------------
+
+
+def fig3_qps_recall(fast: bool = True) -> None:
+    bench = "fig3_qps_recall"
+    n = 10000 if fast else 50000
+    profiles = ["sift", "glove", "crawl"]
+    attr_dims = [5] if fast else [5, 6, 7]
+    pools = [16, 32, 64, 128]
+    for profile in profiles:
+        for L in attr_dims:
+            ds = dataset(profile, L, 3, n, 128)
+            truth = ground_truth(ds)
+            name = f"{profile}-{L}-3"
+
+            mc, graph, _, stats = built_index(ds, "auto")
+            for pool in pools:
+                res, qps, evals = timed_search(ds, mc, graph, pool)
+                r = recall_at_k(res.ids, truth.ids, 10)
+                emit(bench, f"{name}/stable/pool{pool}", "recall", round(r, 4))
+                emit(bench, f"{name}/stable/pool{pool}", "qps", round(qps, 1))
+                emit(bench, f"{name}/stable/pool{pool}", "evals", evals)
+
+            # additive fusion ("w/o AUTO" — static linear metric)
+            mc_add, graph_add, _, _ = built_index(ds, "additive")
+            res, qps, evals = timed_search(ds, mc_add, graph_add, 64)
+            emit(bench, f"{name}/additive/pool64", "recall",
+                 round(recall_at_k(res.ids, truth.ids, 10), 4))
+            emit(bench, f"{name}/additive/pool64", "qps", round(qps, 1))
+
+            # NHQ-style static-weight Hamming fusion
+            mc_nhq, graph_nhq, _, _ = built_index(ds, "nhq")
+            res, qps, evals = timed_search(ds, mc_nhq, graph_nhq, 64)
+            emit(bench, f"{name}/nhq/pool64", "recall",
+                 round(recall_at_k(res.ids, truth.ids, 10), 4))
+            emit(bench, f"{name}/nhq/pool64", "qps", round(qps, 1))
+
+            # post-filter (VSP) on a pure-L2 graph, K' sweep
+            mc_l2, graph_l2, _, _ = built_index(ds, "l2")
+            for kp in (40, 160):
+                t0 = time.perf_counter()
+                res = post_filter_search(
+                    ds.features, ds.attrs, graph_l2,
+                    ds.query_features, ds.query_attrs, 10, kp,
+                )
+                jax.block_until_ready(res.ids)
+                dt = time.perf_counter() - t0
+                emit(bench, f"{name}/postfilter/k{kp}", "recall",
+                     round(recall_at_k(res.ids, truth.ids, 10), 4))
+                emit(bench, f"{name}/postfilter/k{kp}", "qps",
+                     round(ds.query_features.shape[0] / dt, 1))
+
+            # pre-filter (SSP): exact but pays |match| feature evals
+            res = pre_filter_search(
+                ds.features, ds.attrs, ds.query_features, ds.query_attrs, 10
+            )
+            emit(bench, f"{name}/prefilter", "recall",
+                 round(recall_at_k(res.ids, truth.ids, 10), 4))
+            emit(bench, f"{name}/prefilter", "evals", int(res.n_dist_evals))
+    flush_csv(bench)
+
+
+# ---------------------------------------------------------------------------
+# Table IV — robustness across attribute cardinality Θ
+# ---------------------------------------------------------------------------
+
+
+def tab4_cardinality_robustness(fast: bool = True) -> None:
+    bench = "tab4_cardinality_robustness"
+    n = 8000 if fast else 30000
+    # Θ = labels^L
+    grid = [(5, 2, 32), (5, 3, 243), (5, 4, 1024), (7, 3, 2187)]
+    if not fast:
+        grid.append((8, 3, 6561))
+    for L, labels, theta in grid:
+        ds = dataset("sift", L, labels, n, 128)
+        truth = ground_truth(ds)
+        mc, graph, _, _ = built_index(ds, "auto")
+        res, qps, _ = timed_search(ds, mc, graph, 64)
+        emit(bench, f"stable/theta{theta}", "recall",
+             round(recall_at_k(res.ids, truth.ids, 10), 4))
+        emit(bench, f"stable/theta{theta}", "qps", round(qps, 1))
+        mc_a, graph_a, _, _ = built_index(ds, "additive")
+        res, _, _ = timed_search(ds, mc_a, graph_a, 64)
+        emit(bench, f"additive/theta{theta}", "recall",
+             round(recall_at_k(res.ids, truth.ids, 10), 4))
+    flush_csv(bench)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5 — query-selectivity stress test (masking, F = 1..L)
+# ---------------------------------------------------------------------------
+
+
+def fig5_selectivity(fast: bool = True) -> None:
+    bench = "fig5_selectivity"
+    L = 7
+    n = 10000 if fast else 50000
+    ds = dataset("sift", L, 3, n, 128)
+    mc, graph, _, _ = built_index(ds, "auto")
+    for f_active in range(1, L + 1):
+        mask = np.zeros((ds.query_attrs.shape[0], L), np.int32)
+        mask[:, :f_active] = 1
+        m = jnp.asarray(mask)
+        truth = brute_force_hybrid(
+            ds.features, ds.attrs, ds.query_features, ds.query_attrs, 10, mask=m
+        )
+        cfg = RoutingConfig(k=10, pool_size=64, pioneer_size=8)
+        t0 = time.perf_counter()
+        res = search(ds.features, ds.attrs, graph, ds.query_features,
+                     ds.query_attrs, mc, cfg, mask=m)
+        jax.block_until_ready(res.ids)
+        res = search(ds.features, ds.attrs, graph, ds.query_features,
+                     ds.query_attrs, mc, cfg, mask=m)
+        jax.block_until_ready(res.ids)
+        dt = (time.perf_counter() - t0) / 2
+        sel = (1 / 3) ** f_active
+        emit(bench, f"F{f_active}(sel={sel:.2%})", "recall",
+             round(recall_at_k(res.ids, truth.ids, 10), 4))
+        emit(bench, f"F{f_active}(sel={sel:.2%})", "qps",
+             round(ds.query_features.shape[0] / dt, 1))
+    flush_csv(bench)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6 — ablations
+# ---------------------------------------------------------------------------
+
+
+def fig6_ablations(fast: bool = True) -> None:
+    bench = "fig6_ablations"
+    n = 10000 if fast else 50000
+    ds = dataset("sift", 7, 3, n, 128)
+    truth = ground_truth(ds)
+    mc, graph, _, _ = built_index(ds, "auto")
+
+    def run_one(name, mc_, graph_, fn=search):
+        res, qps, evals = timed_search(ds, mc_, graph_, 64, search_fn=fn)
+        emit(bench, name, "recall", round(recall_at_k(res.ids, truth.ids, 10), 4))
+        emit(bench, name, "qps", round(qps, 1))
+        emit(bench, name, "evals", evals)
+
+    run_one("stable", mc, graph)
+    mc_l2, g_l2, _, _ = built_index(ds, "l2")
+    run_one("wo_AttributeDis", mc_l2, g_l2)
+    mc_at, g_at, _, _ = built_index(ds, "attr")
+    run_one("wo_FeatureDis", mc_at, g_at)
+    mc_ad, g_ad, _, _ = built_index(ds, "additive")
+    run_one("wo_AUTO", mc_ad, g_ad)
+    _, g_np, _, _ = built_index(ds, "auto", prune=False)
+    run_one("wo_HSP", mc, g_np)
+    run_one("wo_DCR", mc, graph, fn=search_greedy_only)
+    run_one("wo_Dynamic", mc, graph, fn=search_two_stage)
+    flush_csv(bench)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7 — index build time
+# ---------------------------------------------------------------------------
+
+
+def fig7_build_time(fast: bool = True) -> None:
+    bench = "fig7_build_time"
+    n = 10000 if fast else 50000
+    for profile in ("sift", "glove", "crawl"):
+        ds = dataset(profile, 5, 3, n, 64)
+        _, _, report, _ = built_index(ds, "auto")
+        emit(bench, f"{profile}/stable", "build_s", round(report.build_seconds, 2))
+        emit(bench, f"{profile}/stable", "rounds", report.rounds)
+        emit(bench, f"{profile}/stable", "psi_final",
+             round(report.psi_history[-1], 3))
+        emit(bench, f"{profile}/stable", "pruned_frac",
+             round(report.pruned_edge_fraction, 3))
+        _, _, rep_l2, _ = built_index(ds, "l2")
+        emit(bench, f"{profile}/l2-graph", "build_s",
+             round(rep_l2.build_seconds, 2))
+    flush_csv(bench)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 8 — α validation: computed α vs empirical sweep
+# ---------------------------------------------------------------------------
+
+
+def fig8_alpha_sweep(fast: bool = True) -> None:
+    bench = "fig8_alpha_sweep"
+    n = 5000 if fast else 20000
+    alphas = [0.25, 0.5, 0.8, 1.2, 1.6, 2.0]
+    for profile in ("sift", "glove", "crawl"):
+        ds = dataset(profile, 5, 3, n, 128)
+        truth = ground_truth(ds)
+        stats = auto_mod.sample_stats(ds.features, ds.attrs, seed=0)
+        emit(bench, f"{profile}/computed_alpha", "alpha", round(stats.alpha, 3))
+        best_a, best_r = None, -1.0
+        for a in alphas + [round(stats.alpha, 3)]:
+            mc, graph, _, _ = built_index(ds, "auto", alpha=a, max_rounds=6)
+            res, _, _ = timed_search(ds, mc, graph, 64, repeats=1)
+            r = recall_at_k(res.ids, truth.ids, 10)
+            emit(bench, f"{profile}/alpha{a}", "recall", round(r, 4))
+            if r > best_r:
+                best_a, best_r = a, r
+        emit(bench, f"{profile}/empirical_best", "alpha", best_a)
+        emit(bench, f"{profile}/empirical_best", "recall", round(best_r, 4))
+    flush_csv(bench)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 9 — σ sensitivity
+# ---------------------------------------------------------------------------
+
+
+def fig9_sigma_sweep(fast: bool = True) -> None:
+    bench = "fig9_sigma_sweep"
+    n = 5000 if fast else 20000
+    ds = dataset("sift", 5, 3, n, 128)
+    truth = ground_truth(ds)
+    for sigma in (0.2, 0.3, 0.44, 0.6, 0.8):
+        mc, graph, rep, _ = built_index(ds, "auto", sigma=sigma, max_rounds=6)
+        res, _, evals = timed_search(ds, mc, graph, 64, repeats=1)
+        emit(bench, f"sigma{sigma}", "recall",
+             round(recall_at_k(res.ids, truth.ids, 10), 4))
+        emit(bench, f"sigma{sigma}", "pruned_frac",
+             round(rep.pruned_edge_fraction, 3))
+        emit(bench, f"sigma{sigma}", "evals", evals)
+    flush_csv(bench)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 10 — Γ sweep (index size vs retrieval performance)
+# ---------------------------------------------------------------------------
+
+
+def fig10_gamma_sweep(fast: bool = True) -> None:
+    bench = "fig10_gamma_sweep"
+    n = 5000 if fast else 20000
+    ds = dataset("sift", 5, 3, n, 128)
+    truth = ground_truth(ds)
+    for gamma in (12, 24, 48, 96):
+        mc, graph, _, _ = built_index(ds, "auto", gamma=gamma, max_rounds=6)
+        res, qps, _ = timed_search(ds, mc, graph, 64, repeats=1)
+        size_mb = graph.size * 4 / 2**20
+        emit(bench, f"gamma{gamma}", "recall",
+             round(recall_at_k(res.ids, truth.ids, 10), 4))
+        emit(bench, f"gamma{gamma}", "qps", round(qps, 1))
+        emit(bench, f"gamma{gamma}", "index_mb", round(size_mb, 2))
+    flush_csv(bench)
+
+
+# ---------------------------------------------------------------------------
+# Table V — kernel-fusion overhead (the SIMD/AVX2 analog on TPU)
+# ---------------------------------------------------------------------------
+
+
+def tab5_kernel_fusion(fast: bool = True) -> None:
+    bench = "tab5_kernel_fusion"
+    rng = np.random.default_rng(0)
+    b, n, m, l = 128, 100_000, 128, 7
+    qv = jnp.asarray(rng.normal(size=(b, m)), jnp.float32)
+    xv = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    qa = jnp.asarray(rng.integers(0, 3, (b, l)), jnp.int32)
+    xa = jnp.asarray(rng.integers(0, 3, (n, l)), jnp.int32)
+
+    # HLO-level: flops/bytes of fused-AUTO scorer vs pure-L2 scorer
+    from repro.kernels.fused_auto.ref import fused_auto_ref
+
+    costs = {}
+    for mode in ("l2", "auto"):
+        c = (
+            jax.jit(lambda a, b_, c_, d_: fused_auto_ref(a, b_, c_, d_, 0.8, mode))
+            .lower(qv, qa, xv, xa).compile().cost_analysis()
+        )
+        costs[mode] = (float(c["flops"]), float(c["bytes accessed"]))
+    for mode, (fl, by) in costs.items():
+        emit(bench, mode, "hlo_flops", f"{fl:.4g}")
+        emit(bench, mode, "hlo_bytes", f"{by:.4g}")
+    emit(bench, "overhead", "flops_pct",
+         round(100 * (costs["auto"][0] / costs["l2"][0] - 1), 2))
+    emit(bench, "overhead", "bytes_pct",
+         round(100 * (costs["auto"][1] / costs["l2"][1] - 1), 2))
+
+    # wall-clock on CPU (compiled jnp twins — the scalar-vs-vectorized analog)
+    for mode in ("l2", "auto"):
+        cfg = MetricConfig(mode=mode, alpha=0.8)
+        f = jax.jit(lambda a, b_, c_, d_: auto_mod.brute_fused_sqdist(
+            a, b_, c_, d_, cfg))
+        f(qv, qa, xv, xa).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            f(qv, qa, xv, xa).block_until_ready()
+        dt = (time.perf_counter() - t0) / 3
+        emit(bench, mode, "qps", round(b / dt, 1))
+        emit(bench, mode, "us_per_call", round(dt * 1e6, 1))
+    flush_csv(bench)
+
+
+ALL = [
+    tab1_magnitude_stats,
+    fig3_qps_recall,
+    tab4_cardinality_robustness,
+    fig5_selectivity,
+    fig6_ablations,
+    fig7_build_time,
+    fig8_alpha_sweep,
+    fig9_sigma_sweep,
+    fig10_gamma_sweep,
+    tab5_kernel_fusion,
+]

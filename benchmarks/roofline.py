@@ -1,0 +1,137 @@
+"""§Roofline: three-term roofline per (arch × shape × mesh) from dry-run
+artifacts.
+
+  compute    T_c = HLO_FLOPs_per_device / peak_FLOPs        (197 TF/s bf16)
+  memory     T_m = HLO_bytes_per_device / HBM_bw            (819 GB/s)
+  collective T_x = collective_bytes_per_device / ICI_bw     (~50 GB/s/link)
+
+HLO terms use the loop-corrected totals (artifacts carry both raw and
+corrected — XLA cost analysis counts while bodies once; see
+launch/dryrun.corrected_costs). MODEL_FLOPS = 6·N·D (train) / 2·N·D
+(inference) with N = active params; the MODEL/HLO ratio flags remat and
+dispatch waste. Usage:  PYTHONPATH=src python -m benchmarks.roofline
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+ARTIFACT_DIR = os.environ.get(
+    "DRYRUN_ARTIFACTS",
+    os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun"),
+)
+
+HBM_PER_CHIP = 16 * 2**30  # v5e
+
+
+def model_flops_per_device(r: dict) -> float:
+    """Analytic MODEL_FLOPS (emitted by launch/build.py per cell) / chips."""
+    meta = r.get("meta", {})
+    chips = r.get("n_chips", 256)
+    mf = meta.get("model_flops")
+    if mf:
+        return mf / chips
+    # legacy artifacts: 6·N·D / 2·N·D convention
+    n_active = meta.get("active_params") or meta.get("params") or 0
+    kind = r.get("kind")
+    tokens = meta.get("global_batch", 1) * max(meta.get("seq_len", 1), 1)
+    if kind == "decode":
+        tokens = meta.get("global_batch", 1)
+    return (6.0 if kind == "train" else 2.0) * n_active * tokens / chips
+
+
+def load_rows(mesh: str = "single", tag: str = ""):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        if len(parts) < 3:
+            continue
+        if parts[2] != mesh or (len(parts) > 3) != bool(tag) or (
+            tag and parts[3] != tag
+        ):
+            continue
+        rows.append(json.load(open(path)))
+    return rows
+
+
+def roofline_terms(r: dict) -> dict:
+    corr = r.get("corrected", {})
+    flops = corr.get("flops")
+    if not isinstance(flops, (int, float)) or flops <= 0:
+        flops = r["cost"]["flops"]
+        method = "raw"
+    else:
+        method = corr.get("method", "corrected")
+    bytes_acc = corr.get("bytes_accessed") if isinstance(
+        corr.get("bytes_accessed"), (int, float)) else r["cost"]["bytes_accessed"]
+    if bytes_acc is None or bytes_acc <= 0:
+        bytes_acc = r["cost"]["bytes_accessed"]
+    coll = corr.get("coll_bytes") if isinstance(
+        corr.get("coll_bytes"), (int, float)) else None
+    if coll is None or coll < 0:
+        coll = r["collectives"]["bytes"]["total"]
+
+    t_c = flops / PEAK_FLOPS_BF16
+    t_m = bytes_acc / HBM_BW
+    t_x = coll / ICI_BW
+    dominant = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+                   key=lambda kv: kv[1])[0]
+    mf = model_flops_per_device(r)
+    return {
+        "t_compute_s": t_c,
+        "t_memory_s": t_m,
+        "t_collective_s": t_x,
+        "dominant": dominant,
+        "model_flops_per_dev": mf,
+        "model_over_hlo": (mf / flops) if flops > 0 else 0.0,
+        "mem_gib": r["memory"]["per_device_total"] / 2**30,
+        "fits_hbm": r["memory"]["per_device_total"] <= HBM_PER_CHIP,
+        "method": method,
+        # roofline fraction: useful model flops over the bound implied by
+        # the dominant term (how close the step is to the compute roofline)
+        "roofline_fraction": (
+            (mf / PEAK_FLOPS_BF16) / max(t_c, t_m, t_x)
+            if max(t_c, t_m, t_x) > 0 else 0.0
+        ),
+    }
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--json-out", default="")
+    args = ap.parse_args()
+
+    rows = load_rows(args.mesh, args.tag)
+    print(f"{'arch':22s} {'shape':14s} {'dom':10s} {'T_c(s)':>9s} {'T_m(s)':>9s} "
+          f"{'T_x(s)':>9s} {'mem(GiB)':>8s} {'fit':>3s} {'MF/HLO':>6s} {'RLfrac':>6s}")
+    out = []
+    for r in rows:
+        name = f"{r['arch']:22s} {r['shape']:14s}"
+        if r.get("skipped"):
+            print(f"{name} SKIP: {r['skip_reason'][:70]}")
+            out.append({"arch": r["arch"], "shape": r["shape"], "skip": True})
+            continue
+        if not r.get("ok"):
+            print(f"{name} FAIL: {r.get('error', '?')[:70]}")
+            continue
+        t = roofline_terms(r)
+        print(f"{name} {t['dominant']:10s} {t['t_compute_s']:9.2e} "
+              f"{t['t_memory_s']:9.2e} {t['t_collective_s']:9.2e} "
+              f"{t['mem_gib']:8.2f} {'Y' if t['fits_hbm'] else 'N':>3s} "
+              f"{t['model_over_hlo']:6.2f} {t['roofline_fraction']:6.2f}")
+        out.append({"arch": r["arch"], "shape": r["shape"], **t})
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(out, f, indent=2, default=str)
+
+
+if __name__ == "__main__":
+    main()

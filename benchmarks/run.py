@@ -1,0 +1,36 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]``
+Prints ``benchmark,name,metric,value`` CSV rows; artifacts land in
+artifacts/bench/. The roofline report (§Roofline) is separate:
+``python -m benchmarks.roofline``.
+"""
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale-ish sizes (slower)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import paper_benchmarks as pb
+
+    fns = pb.ALL
+    if args.only:
+        fns = [f for f in fns if args.only in f.__name__]
+        if not fns:
+            raise SystemExit(f"no benchmark matches {args.only!r}")
+    t_start = time.time()
+    for fn in fns:
+        print(f"=== {fn.__name__} ===", flush=True)
+        t0 = time.time()
+        fn(fast=not args.full)
+        print(f"=== {fn.__name__} done in {time.time()-t0:.1f}s ===", flush=True)
+    print(f"ALL BENCHMARKS DONE in {time.time()-t_start:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

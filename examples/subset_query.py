@@ -1,0 +1,34 @@
+"""Masking mechanism demo (paper §III-E): one index serves full-equality,
+subset (wildcard) and missing-value queries via Eq. 8.
+
+    PYTHONPATH=src python examples/subset_query.py
+"""
+import numpy as np
+
+from repro.core.baselines import brute_force_hybrid, recall_at_k
+from repro.core.help_graph import HelpConfig
+from repro.core.index import StableIndex
+from repro.data.synthetic import make_hybrid_dataset
+
+
+def main():
+    ds = make_hybrid_dataset(n=8000, n_queries=64, profile="sift", attr_dim=5,
+                             labels_per_dim=3, n_clusters=16,
+                             attr_cluster_corr=0.6, seed=2)
+    idx = StableIndex.build(ds.features, ds.attrs,
+                            HelpConfig(gamma=24, gamma_new=6, max_rounds=8))
+
+    for f_active in (5, 3, 1, 0):
+        mask = np.zeros_like(ds.query_attrs)
+        mask[:, :f_active] = 1
+        res = idx.search(ds.query_features, ds.query_attrs, 10, mask=mask)
+        truth = brute_force_hybrid(ds.features, ds.attrs, ds.query_features,
+                                   ds.query_attrs, 10, mask=mask)
+        sel = (1 / 3) ** f_active
+        print(f"F={f_active} active filters (selectivity ≈ {sel:7.2%}): "
+              f"Recall@10 = {recall_at_k(res.ids, truth.ids, 10):.3f}")
+    print("F=0 is pure (unfiltered) ANN — one index, every query class.")
+
+
+if __name__ == "__main__":
+    main()

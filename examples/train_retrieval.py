@@ -1,0 +1,70 @@
+"""Train a two-tower FM retrieval model for a few hundred steps (with
+checkpoint/resume), embed an item corpus, then serve hybrid retrieval
+through the STABLE scorer — the full train → index → serve pipeline.
+
+    PYTHONPATH=src python examples/train_retrieval.py
+"""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_arch
+from repro.models import recsys as recsys_mod
+from repro.train import loop as loop_mod, optim as optim_mod, step as step_mod
+
+
+def main():
+    spec = get_arch("fm")
+    cfg = spec.make_reduced()
+    params = recsys_mod.init_params(cfg, jax.random.PRNGKey(0))
+    opt = optim_mod.init_state(spec.optim, params)
+    step = jax.jit(step_mod.make_recsys_train_step(cfg, spec.optim))
+
+    def batch_for_step(s):
+        rng = np.random.default_rng(s)
+        sparse = rng.integers(0, cfg.vocab_per_field, (256, cfg.n_sparse))
+        # planted preference: label depends on a linear score of the ids
+        w = np.linspace(-1, 1, cfg.n_sparse)
+        logits = ((sparse / cfg.vocab_per_field - 0.5) * w).sum(1) * 4
+        y = (rng.random(256) < 1 / (1 + np.exp(-logits))).astype(np.float32)
+        return {"sparse": jnp.asarray(sparse, jnp.int32),
+                "labels": jnp.asarray(y)}
+
+    ckpt_dir = os.path.join(tempfile.gettempdir(), "stable_fm_ckpt")
+    lcfg = loop_mod.LoopConfig(total_steps=300, ckpt_every=100,
+                               ckpt_dir=ckpt_dir, log_every=50)
+    params, opt, res = loop_mod.run(step, params, opt, batch_for_step, lcfg)
+    print(f"loss: {res.losses[0]:.4f} → {res.losses[-1]:.4f} "
+          f"({res.checkpoints_written} checkpoints, resumed_from={res.resumed_from})")
+    assert res.losses[-1] < res.losses[0], "training must reduce loss"
+
+    # embed an item corpus from the trained factors and serve hybrid retrieval
+    rng = np.random.default_rng(7)
+    n_items = 5000
+    item_fields = rng.integers(0, cfg.vocab_per_field, (n_items, cfg.n_sparse))
+    item_embs = np.asarray(
+        recsys_mod.embedding_lookup(
+            params["tables"], jnp.asarray(item_fields, jnp.int32)
+        ).sum(axis=1)
+    )
+    item_attrs = rng.integers(0, 3, (n_items, 4)).astype(np.int32)
+
+    user_batch = batch_for_step(999)
+    user_batch["query_attrs"] = jnp.asarray(
+        rng.integers(0, 3, (256, 4)), jnp.int32)
+    dists, ids = recsys_mod.retrieval_step(
+        cfg, params, user_batch, jnp.asarray(item_embs),
+        jnp.asarray(item_attrs), k=10, alpha=1.0,
+    )
+    match = (item_attrs[np.asarray(ids[0])] ==
+             np.asarray(user_batch["query_attrs"][0])).all(1)
+    print(f"retrieval: top-10 items for user 0 = {np.asarray(ids[0]).tolist()}")
+    print(f"  attribute-matched: {int(match.sum())}/10 "
+          f"(AUTO soft filter at α=1.0)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Fault-tolerant checkpointing: atomic per-leaf .npy + manifest.
+
+Design (1000-node posture, DESIGN.md §4):
+  * every leaf of (params, opt_state, extra) is stored as one .npy holding
+    the full *logical* array — checkpoints are mesh-shape-agnostic, so a
+    restart may use a different device count (elastic resize); jax.device_put
+    with the new sharding re-shards on load;
+  * writes go to ``step_<n>.tmp/`` then a single atomic ``os.replace`` to
+    ``step_<n>/`` + manifest rewrite — a preemption mid-write can never
+    corrupt the latest valid checkpoint;
+  * ``latest_step`` scans manifests only, so resume-after-kill is O(1);
+  * retention keeps the newest K checkpoints (default 3).
+
+On a real multi-host fleet each host writes its addressable shards and a
+coordinator merges manifests; on this single-process container the full
+arrays are written directly (noted in DESIGN.md §4 hardware-adaptation).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_MANIFEST = "manifest.json"
+
+
+def _flatten_with_names(tree: PyTree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        out.append((name or "root", leaf))
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree: PyTree, keep: int = 3,
+         extra: Optional[dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves = _flatten_with_names(tree)
+    index = []
+    for i, (name, leaf) in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        index.append({"name": name, "file": fname,
+                      "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "leaves": index,
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)  # atomic publish
+
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"), ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, d, _MANIFEST)):
+                out.append(int(d[5:]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: PyTree,
+            shardings: Optional[PyTree] = None) -> tuple[PyTree, dict]:
+    """Restore into the structure of ``like``; reshard if shardings given.
+
+    Elastic restart: the stored arrays carry logical shapes, so any mesh
+    (different DP width, different device count) can consume them.
+    """
+    path = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    stored = manifest["leaves"]
+    if len(stored) != len(leaves_like):
+        raise ValueError(
+            f"checkpoint has {len(stored)} leaves, expected {len(leaves_like)}"
+        )
+    arrays = []
+    for rec, ref in zip(stored, leaves_like):
+        arr = np.load(os.path.join(path, rec["file"]))
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(
+                f"leaf {rec['name']}: stored {arr.shape} != expected {ref.shape}"
+            )
+        arrays.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, arrays)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), tree, shardings
+        )
+    else:
+        tree = jax.tree.map(jax.numpy.asarray, tree)
+    return tree, manifest["extra"]

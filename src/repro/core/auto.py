@@ -1,0 +1,334 @@
+"""AUTO metric: enhanced heterogeneous semantic perception (paper §III-B).
+
+Implements, faithfully:
+  Eq. 2  S_A(A_i, Â)   = Σ_l |a_l - â_l|                (Manhattan, integer-mapped)
+  Eq. 3  S_V(V_i, V̂)   = sqrt(Σ_m (v_m - v̂_m)²)          (Euclidean)
+  Eq. 4  U(D_i, Q)     = S_V · (1 + S_A / α)
+  Eq. 5  α             = Norm(N / S̄_V) + Norm(S̄_A / L)
+  Eq. 8  masked S_A    = Σ_l m_l · |a_l - â_l|            (subset / missing-value)
+
+TPU adaptation (documented in DESIGN.md §2): hot paths rank by the *squared*
+fused metric  U² = S_V² · (1 + S_A/α)²  which induces the identical ordering
+(U ≥ 0, squaring is monotone) while avoiding sqrt on the VPU and letting the
+S_V² term come out of an MXU matmul via ‖q-x‖² = ‖q‖² + ‖x‖² - 2 q·x.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Numerical mapping (paper Eq. 1)
+# ---------------------------------------------------------------------------
+
+
+def numerical_map(raw_attrs: np.ndarray) -> tuple[np.ndarray, list[np.ndarray]]:
+    """Map raw (possibly categorical) attribute columns to position ids.
+
+    Returns the int32 mapped matrix and the per-dimension value tables
+    (``MAP(a_u) = u`` — position in the sorted distinct-value set).
+    """
+    raw_attrs = np.asarray(raw_attrs)
+    n, l = raw_attrs.shape
+    mapped = np.empty((n, l), dtype=np.int32)
+    tables = []
+    for j in range(l):
+        values, inverse = np.unique(raw_attrs[:, j], return_inverse=True)
+        mapped[:, j] = inverse.astype(np.int32)
+        tables.append(values)
+    return mapped, tables
+
+
+def map_query_attrs(raw_query: np.ndarray, tables: list[np.ndarray]) -> np.ndarray:
+    """Map query attribute values through the dataset's value tables."""
+    raw_query = np.asarray(raw_query)
+    out = np.empty_like(raw_query, dtype=np.int32)
+    for j, table in enumerate(tables):
+        idx = np.searchsorted(table, raw_query[..., j])
+        idx = np.clip(idx, 0, len(table) - 1)
+        out[..., j] = idx
+    return out.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Basic measurements (Eq. 2, Eq. 3, Eq. 8)
+# ---------------------------------------------------------------------------
+
+
+def attribute_distance(a: Array, b: Array, mask: Optional[Array] = None) -> Array:
+    """Manhattan attribute consistency S_A (Eq. 2); masked variant (Eq. 8).
+
+    ``a``/``b`` are integer-mapped attribute vectors, broadcastable against
+    each other; the trailing axis is L. ``mask`` (same trailing L) selects the
+    active dimensions: 0 ⇒ wildcard / missing value.
+    """
+    diff = jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))
+    if mask is not None:
+        diff = diff * mask.astype(jnp.float32)
+    return diff.sum(axis=-1)
+
+
+def feature_distance(x: Array, y: Array) -> Array:
+    """Euclidean feature similarity S_V (Eq. 3)."""
+    d = x.astype(jnp.float32) - y.astype(jnp.float32)
+    return jnp.sqrt(jnp.maximum((d * d).sum(axis=-1), 0.0))
+
+
+def feature_sqdist(x: Array, y: Array) -> Array:
+    d = x.astype(jnp.float32) - y.astype(jnp.float32)
+    return jnp.maximum((d * d).sum(axis=-1), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# α calibration (Eq. 5)
+# ---------------------------------------------------------------------------
+
+
+def norm_to_unit(x: float) -> float:
+    """Paper's Norm(·): scale by powers of 10 into (0.1, 1]."""
+    if not np.isfinite(x) or x <= 0.0:
+        return 0.1
+    while x > 1.0:
+        x /= 10.0
+    while x <= 0.1:
+        x *= 10.0
+    return float(x)
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetStats:
+    """Sampled statistics feeding Eq. 5 (and Table I style reporting)."""
+
+    n_total: int
+    feat_dim: int
+    attr_dim: int
+    mean_feature_dist: float
+    mean_attribute_dist: float
+    min_feature_dist: float
+    max_feature_dist: float
+    min_attribute_dist: float
+    max_attribute_dist: float
+
+    @property
+    def alpha(self) -> float:
+        return compute_alpha(
+            self.n_total, self.mean_feature_dist, self.mean_attribute_dist, self.attr_dim
+        )
+
+
+def compute_alpha(n_total: int, mean_sv: float, mean_sa: float, attr_dim: int) -> float:
+    """Eq. 5: α = Norm(N / S̄_V) + Norm(S̄_A / L)."""
+    return norm_to_unit(n_total / max(mean_sv, 1e-12)) + norm_to_unit(
+        mean_sa / max(attr_dim, 1)
+    )
+
+
+def sample_stats(
+    features: np.ndarray,
+    attrs: np.ndarray,
+    n_samples: int = 1000,
+    seed: int = 0,
+) -> DatasetStats:
+    """Sample ≤``n_samples`` nodes, compute pairwise distance statistics.
+
+    Mirrors the paper's calibration pass (§III-B2, 1,000 sampled nodes). All
+    pairwise distances among the sample are used (≈ n²/2 pairs), computed with
+    the matmul decomposition so this stays cheap at 1,000 nodes.
+    """
+    features = np.asarray(features, dtype=np.float32)
+    attrs = np.asarray(attrs)
+    n = features.shape[0]
+    rng = np.random.default_rng(seed)
+    take = min(n_samples, n)
+    idx = rng.choice(n, size=take, replace=False)
+    f = features[idx]
+    a = attrs[idx].astype(np.float32)
+
+    sq = (f * f).sum(-1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (f @ f.T)
+    np.maximum(d2, 0.0, out=d2)
+    fd = np.sqrt(d2)
+    ad = np.abs(a[:, None, :] - a[None, :, :]).sum(-1)
+    iu = np.triu_indices(take, k=1)
+    fd, ad = fd[iu], ad[iu]
+
+    return DatasetStats(
+        n_total=n,
+        feat_dim=features.shape[1],
+        attr_dim=attrs.shape[1],
+        mean_feature_dist=float(fd.mean()),
+        mean_attribute_dist=float(ad.mean()),
+        min_feature_dist=float(fd.min()),
+        max_feature_dist=float(fd.max()),
+        min_attribute_dist=float(ad.min()),
+        max_attribute_dist=float(ad.max()),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fused metric (Eq. 4) — pointwise and blocked-brute-force forms
+# ---------------------------------------------------------------------------
+
+#: metric modes shared by index construction, routing and the baselines.
+#:   auto      — paper Eq. 4 (multiplicative fusion)
+#:   l2        — pure feature distance ("w/o AttributeDis"; post-filter stage)
+#:   attr      — attribute distance only   ("w/o FeatureDis" ablation)
+#:   additive  — S_V + S_A                  ("w/o AUTO" ablation)
+#:   nhq       — S_V + w · Hamming(A, Â)    (NHQ-style static fusion baseline)
+METRIC_MODES = ("auto", "l2", "attr", "additive", "nhq")
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricConfig:
+    mode: str = "auto"
+    alpha: float = 1.0
+    nhq_weight: float = 1.0
+
+    def __post_init__(self):
+        if self.mode not in METRIC_MODES:
+            raise ValueError(f"unknown metric mode {self.mode!r}")
+
+
+def auto_distance(
+    qv: Array,
+    qa: Array,
+    xv: Array,
+    xa: Array,
+    alpha: float,
+    mask: Optional[Array] = None,
+) -> Array:
+    """Paper-exact U(D, Q) (Eq. 4), broadcasting over leading dims."""
+    sv = feature_distance(qv, xv)
+    sa = attribute_distance(qa, xa, mask)
+    return sv * (1.0 + sa / alpha)
+
+
+def fused_sqdist(
+    qv: Array,
+    qa: Array,
+    xv: Array,
+    xa: Array,
+    cfg: MetricConfig,
+    mask: Optional[Array] = None,
+) -> Array:
+    """Squared fused metric for ranking (ordering ≡ the mode's distance).
+
+    Pointwise/broadcast form used by routing over gathered candidates.
+    ``l2``/``additive``/``nhq`` square their respective distances so every
+    mode ranks identically to its un-squared definition.
+    """
+    sv2 = feature_sqdist(qv, xv)
+    if cfg.mode == "l2":
+        return sv2
+    sa = attribute_distance(qa, xa, mask)
+    if cfg.mode == "attr":
+        return sa * sa + 1e-6 * sv2  # feature term only tie-breaks
+    if cfg.mode == "auto":
+        pen = 1.0 + sa / cfg.alpha
+        return sv2 * pen * pen
+    if cfg.mode == "additive":
+        u = jnp.sqrt(sv2) + sa
+        return u * u
+    # nhq: static-weight fusion over Hamming distance
+    ham = (
+        (qa != xa)
+        if mask is None
+        else jnp.logical_and(qa != xa, mask.astype(bool))
+    )
+    ham = ham.astype(jnp.float32).sum(axis=-1)
+    u = jnp.sqrt(sv2) + cfg.nhq_weight * ham
+    return u * u
+
+
+def _penalty(sa: Array, cfg: MetricConfig) -> Array:
+    if cfg.mode == "auto":
+        p = 1.0 + sa / cfg.alpha
+        return p * p
+    raise ValueError(cfg.mode)
+
+
+@partial(jax.jit, static_argnames=("cfg", "chunk"))
+def brute_fused_sqdist(
+    qv: Array,
+    qa: Array,
+    db_v: Array,
+    db_a: Array,
+    cfg: MetricConfig,
+    mask: Optional[Array] = None,
+    chunk: int = 16384,
+) -> Array:
+    """(B, N) squared fused distances, MXU decomposition, chunked over N.
+
+    This is the pure-jnp oracle twin of ``kernels/fused_auto`` (same math,
+    same blocking philosophy) used for ground truth, reranking and the
+    ``retrieval_cand`` recsys path on CPU.
+    """
+    qv = qv.astype(jnp.float32)
+    db_v = db_v.astype(jnp.float32)
+    qsq = (qv * qv).sum(-1)[:, None]  # (B, 1)
+    n = db_v.shape[0]
+    n_chunks = max(1, (n + chunk - 1) // chunk)
+
+    def score_block(xv, xa):
+        xsq = (xv * xv).sum(-1)[None, :]
+        sv2 = jnp.maximum(qsq + xsq - 2.0 * (qv @ xv.T), 0.0)
+        if cfg.mode == "l2":
+            return sv2
+        diff = jnp.abs(
+            qa.astype(jnp.float32)[:, None, :] - xa.astype(jnp.float32)[None, :, :]
+        )
+        if mask is not None:
+            diff = diff * mask.astype(jnp.float32)[:, None, :]
+        sa = diff.sum(-1)
+        if cfg.mode == "attr":
+            return sa * sa + 1e-6 * sv2
+        if cfg.mode == "auto":
+            pen = 1.0 + sa / cfg.alpha
+            return sv2 * pen * pen
+        if cfg.mode == "additive":
+            u = jnp.sqrt(sv2) + sa
+            return u * u
+        ham = (qa[:, None, :] != xa[None, :, :])
+        if mask is not None:
+            ham = jnp.logical_and(ham, mask.astype(bool)[:, None, :])
+        u = jnp.sqrt(sv2) + cfg.nhq_weight * ham.astype(jnp.float32).sum(-1)
+        return u * u
+
+    if n_chunks == 1:
+        return score_block(db_v, db_a)
+
+    pad = n_chunks * chunk - n
+    db_vp = jnp.pad(db_v, ((0, pad), (0, 0)))
+    db_ap = jnp.pad(db_a, ((0, pad), (0, 0)))
+    db_vp = db_vp.reshape(n_chunks, chunk, -1)
+    db_ap = db_ap.reshape(n_chunks, chunk, -1)
+
+    def body(_, blocks):
+        xv, xa = blocks
+        return None, score_block(xv, xa)
+
+    _, scores = jax.lax.scan(body, None, (db_vp, db_ap))
+    scores = jnp.moveaxis(scores, 0, 1).reshape(qv.shape[0], n_chunks * chunk)
+    return scores[:, :n]
+
+
+def brute_topk(
+    qv: Array,
+    qa: Array,
+    db_v: Array,
+    db_a: Array,
+    k: int,
+    cfg: MetricConfig,
+    mask: Optional[Array] = None,
+) -> tuple[Array, Array]:
+    """Exact top-k under the fused metric: (sq-dists, ids), ascending."""
+    scores = brute_fused_sqdist(qv, qa, db_v, db_a, cfg, mask)
+    neg, idx = jax.lax.top_k(-scores, k)
+    return -neg, idx

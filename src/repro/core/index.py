@@ -1,0 +1,119 @@
+"""Public STABLE index API.
+
+``StableIndex`` bundles the AUTO-calibrated metric, the HELP graph and the
+dynamic router behind build/search/save/load. ``ShardedStableIndex``
+(distributed/search.py) wraps it for the multi-device mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import auto as auto_mod
+from repro.core import help_graph as help_mod
+from repro.core import routing as routing_mod
+from repro.core.auto import DatasetStats, MetricConfig
+from repro.core.help_graph import BuildReport, HelpConfig
+from repro.core.routing import RoutingConfig, SearchResult
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class StableIndex:
+    features: Array  # (N, M) f32
+    attrs: Array  # (N, L) int32 (numerically mapped)
+    graph: Array  # (N, Γ) int32 HELP adjacency
+    metric_cfg: MetricConfig
+    help_cfg: HelpConfig
+    stats: DatasetStats
+    report: Optional[BuildReport] = None
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        features,
+        attrs,
+        help_cfg: HelpConfig = HelpConfig(),
+        metric_mode: str = "auto",
+        alpha: Optional[float] = None,
+        nhq_weight: float = 1.0,
+        stats_seed: int = 0,
+    ) -> "StableIndex":
+        features = jnp.asarray(features, jnp.float32)
+        attrs = jnp.asarray(attrs, jnp.int32)
+        stats = auto_mod.sample_stats(
+            np.asarray(features), np.asarray(attrs), seed=stats_seed
+        )
+        metric_cfg = MetricConfig(
+            mode=metric_mode,
+            alpha=float(alpha) if alpha is not None else stats.alpha,
+            nhq_weight=nhq_weight,
+        )
+        graph, dists, report = help_mod.build_help_graph(
+            features, attrs, metric_cfg, help_cfg
+        )
+        return cls(
+            features=features, attrs=attrs, graph=graph,
+            metric_cfg=metric_cfg, help_cfg=help_cfg, stats=stats, report=report,
+        )
+
+    # -- search ---------------------------------------------------------------
+
+    def search(
+        self,
+        qv,
+        qa,
+        k: int = 10,
+        routing_cfg: Optional[RoutingConfig] = None,
+        mask=None,
+        seed: int = 0,
+    ) -> SearchResult:
+        cfg = routing_cfg or RoutingConfig(k=k, pool_size=max(4 * k, 32))
+        if cfg.k != k:
+            cfg = dataclasses.replace(cfg, k=k)
+        return routing_mod.search(
+            self.features, self.attrs, self.graph,
+            jnp.asarray(qv, jnp.float32), jnp.asarray(qa, jnp.int32),
+            self.metric_cfg, cfg,
+            mask=None if mask is None else jnp.asarray(mask),
+            seed=seed,
+        )
+
+    # -- persistence ----------------------------------------------------------
+
+    def save(self, path: str) -> None:
+        os.makedirs(path, exist_ok=True)
+        np.save(os.path.join(path, "features.npy"), np.asarray(self.features))
+        np.save(os.path.join(path, "attrs.npy"), np.asarray(self.attrs))
+        np.save(os.path.join(path, "graph.npy"), np.asarray(self.graph))
+        meta = {
+            "metric_cfg": dataclasses.asdict(self.metric_cfg),
+            "help_cfg": dataclasses.asdict(self.help_cfg),
+            "stats": dataclasses.asdict(self.stats),
+        }
+        tmp = os.path.join(path, "meta.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump(meta, f, indent=2)
+        os.replace(tmp, os.path.join(path, "meta.json"))
+
+    @classmethod
+    def load(cls, path: str) -> "StableIndex":
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        return cls(
+            features=jnp.asarray(np.load(os.path.join(path, "features.npy"))),
+            attrs=jnp.asarray(np.load(os.path.join(path, "attrs.npy"))),
+            graph=jnp.asarray(np.load(os.path.join(path, "graph.npy"))),
+            metric_cfg=MetricConfig(**meta["metric_cfg"]),
+            help_cfg=HelpConfig(**meta["help_cfg"]),
+            stats=DatasetStats(**meta["stats"]),
+        )

@@ -1,0 +1,128 @@
+"""Distributed hybrid search: database sharded over `model`, queries over
+`data`, exact per-shard top-k merge (DESIGN.md §4).
+
+Each model-shard owns an independent HELP sub-index over its slice of the
+database (sub-indices are built per shard — embarrassingly parallel at fleet
+scale). A query batch is searched on every shard via `shard_map`; local ids
+are offset to global ids and the per-shard top-k results are all-gathered
+over `model` and reduced with one global top-k — an EXACT merge (top-k of a
+union equals top-k of per-shard top-k's).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import routing as routing_mod
+from repro.core.auto import MetricConfig
+from repro.core.graph_ops import INF, INVALID
+from repro.core.help_graph import HelpConfig, build_help_graph
+from repro.core.routing import RoutingConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class ShardedStableIndex:
+    """Database + per-shard HELP graphs laid out for a (data, model) mesh."""
+
+    mesh: Mesh
+    features: Array  # (N, M) sharded P("model", None)
+    attrs: Array  # (N, L) sharded P("model", None)
+    graphs: Array  # (N, Γ) per-shard LOCAL adjacency, sharded P("model", None)
+    metric_cfg: MetricConfig
+    shard_rows: int  # rows per model shard
+
+    @classmethod
+    def build(
+        cls,
+        mesh: Mesh,
+        features: np.ndarray,
+        attrs: np.ndarray,
+        metric_cfg: MetricConfig,
+        help_cfg: HelpConfig = HelpConfig(),
+    ) -> "ShardedStableIndex":
+        """Build one HELP sub-index per model shard (host-side loop here; a
+        real deployment builds shards on their owning hosts in parallel)."""
+        n = features.shape[0]
+        n_shards = mesh.shape["model"]
+        assert n % n_shards == 0, (n, n_shards)
+        rows = n // n_shards
+        graphs = np.full((n, help_cfg.gamma), -1, np.int32)
+        for s in range(n_shards):
+            sl = slice(s * rows, (s + 1) * rows)
+            g, _, _ = build_help_graph(
+                features[sl], attrs[sl], metric_cfg, help_cfg
+            )
+            graphs[sl] = np.asarray(g)  # LOCAL ids within the shard
+        fsh = NamedSharding(mesh, P("model", None))
+        return cls(
+            mesh=mesh,
+            features=jax.device_put(jnp.asarray(features, jnp.float32), fsh),
+            attrs=jax.device_put(jnp.asarray(attrs, jnp.int32), fsh),
+            graphs=jax.device_put(jnp.asarray(graphs), fsh),
+            metric_cfg=metric_cfg,
+            shard_rows=rows,
+        )
+
+    def search(
+        self,
+        qv: Array,
+        qa: Array,
+        k: int = 10,
+        routing_cfg: Optional[RoutingConfig] = None,
+        seed: int = 0,
+    ):
+        cfg = routing_cfg or RoutingConfig(k=k, pool_size=max(4 * k, 32))
+        if cfg.k != k:
+            cfg = dataclasses.replace(cfg, k=k)
+        mesh = self.mesh
+        rows = self.shard_rows
+        metric_cfg = self.metric_cfg
+        b = qv.shape[0]
+        entry = routing_mod.make_entry_ids(rows, b, cfg.pool_size, seed)
+
+        def local_search(feats, attrs, graph, qv, qa, entry):
+            # one model shard: this data-shard's query block vs the local
+            # sub-index (NOTE: shapes here are per-device, not global)
+            b_loc = qv.shape[0]
+            res = routing_mod._search_jit(
+                feats, attrs, graph, qv, qa, entry, metric_cfg, cfg, rows, None
+            )
+            shard_id = jax.lax.axis_index("model")
+            gids = jnp.where(
+                res.ids >= 0, res.ids + shard_id * rows, INVALID
+            )
+            # exact merge: all-gather per-shard top-k, re-top-k
+            all_ids = jax.lax.all_gather(gids, "model", axis=0)  # (S, b, K)
+            all_d = jax.lax.all_gather(res.sqdists, "model", axis=0)
+            all_ids = jnp.moveaxis(all_ids, 0, 1).reshape(b_loc, -1)
+            all_d = jnp.moveaxis(all_d, 0, 1).reshape(b_loc, -1)
+            neg, take = jax.lax.top_k(-all_d, k)
+            evals = jax.lax.psum(res.n_dist_evals, ("data", "model"))
+            return (
+                jnp.take_along_axis(all_ids, take, axis=1),
+                -neg,
+                evals[None],
+            )
+
+        fn = jax.shard_map(
+            local_search,
+            mesh=mesh,
+            in_specs=(
+                P("model", None), P("model", None), P("model", None),
+                P("data", None), P("data", None), P("data", None),
+            ),
+            out_specs=(P("data", None), P("data", None), P(None)),
+            check_vma=False,
+        )
+        qv = jnp.asarray(qv, jnp.float32)
+        qa = jnp.asarray(qa, jnp.int32)
+        ids, sqd, evals = fn(self.features, self.attrs, self.graphs, qv, qa, entry)
+        return ids, jnp.sqrt(jnp.maximum(sqd, 0.0)), evals.sum()

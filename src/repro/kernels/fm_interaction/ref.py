@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the FM second-order interaction (Rendle ICDM'10).
+
+second_order(E) = ½ Σ_d [ (Σ_f e_fd)² − Σ_f e_fd² ]   for E (B, F, D)
+— the O(F·D) sum-square trick replacing the O(F²·D) pairwise expansion.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def fm_interaction_ref(emb: Array) -> Array:
+    e = emb.astype(jnp.float32)
+    s = e.sum(axis=1)  # (B, D)
+    sq = (e * e).sum(axis=1)  # (B, D)
+    return 0.5 * (s * s - sq).sum(axis=-1)  # (B,)
+
+
+def fm_interaction_pairwise_ref(emb: Array) -> Array:
+    """O(F²) literal definition Σ_{i<j} ⟨v_i, v_j⟩ — used to validate ref."""
+    e = emb.astype(jnp.float32)
+    gram = jnp.einsum("bfd,bgd->bfg", e, e)
+    f = e.shape[1]
+    iu = jnp.triu_indices(f, k=1)
+    return gram[:, iu[0], iu[1]].sum(axis=-1)

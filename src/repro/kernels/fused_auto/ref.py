@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the fused AUTO brute-force scorer.
+
+Computes the (B, N) squared fused metric
+    U² = max(‖q‖² + ‖x‖² − 2 q·x, 0) · (1 + S_A/α)²
+with S_A the (optionally masked) Manhattan distance between integer-mapped
+attribute vectors. ``mode='l2'`` drops the attribute factor (the paper's
+"Pure L2" row in Table V).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def fused_auto_ref(
+    qv: Array,  # (B, M)
+    qa: Array,  # (B, L) int
+    xv: Array,  # (N, M)
+    xa: Array,  # (N, L) int
+    alpha: float,
+    mode: str = "auto",
+    mask: Optional[Array] = None,  # (B, L)
+) -> Array:
+    qv = qv.astype(jnp.float32)
+    xv = xv.astype(jnp.float32)
+    qsq = (qv * qv).sum(-1)[:, None]
+    xsq = (xv * xv).sum(-1)[None, :]
+    sv2 = jnp.maximum(qsq + xsq - 2.0 * (qv @ xv.T), 0.0)
+    if mode == "l2":
+        return sv2
+    diff = jnp.abs(qa.astype(jnp.float32)[:, None, :] - xa.astype(jnp.float32)[None, :, :])
+    if mask is not None:
+        diff = diff * mask.astype(jnp.float32)[:, None, :]
+    sa = diff.sum(-1)
+    pen = 1.0 + sa / alpha
+    return sv2 * pen * pen

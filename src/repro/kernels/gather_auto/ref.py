@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the gathered-candidate fused AUTO scorer."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def gather_auto_ref(
+    qv: Array,  # (B, M)
+    qa: Array,  # (B, L)
+    cv: Array,  # (B, C, M) pre-gathered candidate features
+    ca: Array,  # (B, C, L)
+    alpha: float,
+    mode: str = "auto",
+    mask: Optional[Array] = None,  # (B, L)
+) -> Array:
+    d = cv.astype(jnp.float32) - qv.astype(jnp.float32)[:, None, :]
+    sv2 = jnp.maximum((d * d).sum(-1), 0.0)  # (B, C)
+    if mode == "l2":
+        return sv2
+    diff = jnp.abs(ca.astype(jnp.float32) - qa.astype(jnp.float32)[:, None, :])
+    if mask is not None:
+        diff = diff * mask.astype(jnp.float32)[:, None, :]
+    sa = diff.sum(-1)
+    pen = 1.0 + sa / alpha
+    return sv2 * pen * pen

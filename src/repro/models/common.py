@@ -1,0 +1,119 @@
+"""Shared model-building blocks: init helpers, norms, mixed precision.
+
+Pure-JAX (no flax): parameters are pytrees of jnp arrays; every model module
+exposes ``init(rng) -> params`` and a functional ``apply``. Abstract
+initialization for the dry-run goes through ``jax.eval_shape`` so no memory
+is allocated for the full-size configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    """Mixed-precision policy: f32 master params, bf16 compute (TPU default)."""
+
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    output_dtype: Any = jnp.float32
+
+    def cast_in(self, x: Array) -> Array:
+        return x.astype(self.compute_dtype)
+
+    def cast_param(self, p: Array) -> Array:
+        return p.astype(self.compute_dtype)
+
+
+FP32 = Precision(param_dtype=jnp.float32, compute_dtype=jnp.float32)
+MIXED = Precision()
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32) -> Array:
+    scale = 1.0 / np.sqrt(in_dim)
+    return jax.random.uniform(key, (in_dim, out_dim), dtype, -scale, scale)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32) -> Array:
+    return jax.random.normal(key, (vocab, dim), dtype) * 0.02
+
+
+def rms_norm(x: Array, weight: Array, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = (x * x).mean(-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: Array, weight: Array, bias: Array, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def mlp_params(key, dims: list[int], dtype=jnp.float32) -> dict:
+    """Plain MLP parameter stack: dims = [in, h1, ..., out]."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"w{i}": dense_init(keys[i], dims[i], dims[i + 1], dtype)
+        for i in range(len(dims) - 1)
+    } | {
+        f"b{i}": jnp.zeros((dims[i + 1],), dtype) for i in range(len(dims) - 1)
+    }
+
+
+def mlp_apply(params: dict, x: Array, act=jax.nn.relu, final_act=None) -> Array:
+    n = len([k for k in params if k.startswith("w")])
+    for i in range(n):
+        x = x @ params[f"w{i}"].astype(x.dtype) + params[f"b{i}"].astype(x.dtype)
+        if i < n - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+def abstract_like(init_fn: Callable[[], PyTree]) -> PyTree:
+    """ShapeDtypeStruct pytree of ``init_fn()`` with zero allocation."""
+    return jax.eval_shape(init_fn)
+
+
+def count_params(tree: PyTree) -> int:
+    leaves = jax.tree.leaves(tree)
+    return int(sum(np.prod(l.shape) for l in leaves))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    leaves = jax.tree.leaves(tree)
+    return int(sum(np.prod(l.shape) * l.dtype.itemsize for l in leaves))
+
+
+def cross_entropy_loss(logits: Array, labels: Array, z_loss: float = 0.0) -> Array:
+    """Token-mean CE in f32 with optional z-loss (stabilizes big-vocab LM)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = (lse - ll).mean()
+    if z_loss > 0.0:
+        loss = loss + z_loss * (lse**2).mean()
+    return loss
+
+
+def bce_with_logits(logits: Array, labels: Array) -> Array:
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.maximum(logits, 0.0).mean() - (logits * labels).mean() + jnp.log1p(
+        jnp.exp(-jnp.abs(logits))
+    ).mean()

@@ -1,0 +1,168 @@
+"""GraphCast-style GNN: encoder → message-passing processor → decoder.
+
+[arXiv:2212.12794] encode-process-decode on a mesh graph. Here the processor
+is a stack of interaction-network layers (edge MLP on [h_src, h_dst] →
+segment-sum aggregation → node MLP, both residual), shared between the four
+assigned graph shapes (full-batch small/large, sampled-training with a real
+neighbor sampler, batched small molecules).
+
+Message passing is built on `jax.ops.segment_sum` over an edge index —
+JAX has no CSR SpMM; the gather→MLP→scatter pipeline IS the system
+(kernel_taxonomy §GNN). Distribution: edge-parallel — edge lists sharded
+across all mesh axes, node states replicated (small) and message
+aggregation reconciled by the psum XLA inserts for the segment-sum output
+sharding (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common
+from repro.models.common import MIXED, Precision
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    n_layers: int = 16
+    d_hidden: int = 512
+    d_in: int = 227  # n_vars for graphcast; dataset feature dim otherwise
+    d_out: int = 227
+    mesh_refinement: int = 6  # recorded from the paper config (affects the
+    # multimesh edge count in the weather use; generic graphs supply edges)
+    aggregator: str = "sum"
+    precision: Precision = MIXED
+    unroll_layers: bool = False  # dry-run FLOP passes (see transformer.py)
+    # Activation sharding (set by the launcher from the mesh): edge-message
+    # tensors over the edge axes, node states over all axes. Without these
+    # XLA replicates the (E, d) message tensor — +63 GiB/device on
+    # ogb_products (EXPERIMENTS.md §Perf hillclimb 1).
+    edge_shard_axes: object = None
+    node_shard_axes: object = None
+
+    @property
+    def param_count(self) -> int:
+        d = self.d_hidden
+        enc = self.d_in * d + d
+        dec = d * self.d_out + self.d_out
+        per_layer = (2 * d) * d + d + d * d + d + (2 * d) * d + d  # edge+node MLPs
+        return enc + dec + self.n_layers * per_layer
+
+
+def init_params(cfg: GNNConfig, key: Array) -> dict:
+    d = cfg.d_hidden
+    pd = cfg.precision.param_dtype
+    ks = jax.random.split(key, 4)
+    L = cfg.n_layers
+
+    def stack(k, i, o):
+        return common.dense_init(k, i, o, pd)[None].repeat(L, 0)
+
+    k_e1, k_e2, k_n1 = jax.random.split(ks[2], 3)
+    return {
+        "encoder": {
+            "w": common.dense_init(ks[0], cfg.d_in, d, pd),
+            "b": jnp.zeros((d,), pd),
+        },
+        "layers": {
+            # edge MLP: [h_src ; h_dst] → d → d
+            "we1": stack(k_e1, 2 * d, d),
+            "be1": jnp.zeros((L, d), pd),
+            "we2": stack(k_e2, d, d),
+            "be2": jnp.zeros((L, d), pd),
+            # node MLP: [h ; agg] → d
+            "wn1": stack(k_n1, 2 * d, d),
+            "bn1": jnp.zeros((L, d), pd),
+            "ln": jnp.ones((L, d), pd),
+        },
+        "decoder": {
+            "w": common.dense_init(ks[1], d, cfg.d_out, pd),
+            "b": jnp.zeros((cfg.d_out,), pd),
+        },
+    }
+
+
+def abstract_params(cfg: GNNConfig) -> dict:
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def _aggregate(cfg: GNNConfig, messages: Array, dst: Array, n_nodes: int) -> Array:
+    if cfg.aggregator == "sum":
+        return jax.ops.segment_sum(messages, dst, num_segments=n_nodes)
+    if cfg.aggregator == "mean":
+        s = jax.ops.segment_sum(messages, dst, num_segments=n_nodes)
+        c = jax.ops.segment_sum(
+            jnp.ones_like(dst, jnp.float32), dst, num_segments=n_nodes
+        )
+        return s / jnp.maximum(c, 1.0)[:, None]
+    if cfg.aggregator == "max":
+        return jax.ops.segment_max(messages, dst, num_segments=n_nodes)
+    raise ValueError(cfg.aggregator)
+
+
+def forward(
+    cfg: GNNConfig,
+    params: dict,
+    node_feats: Array,  # (N, d_in)
+    src: Array,  # (E,) int32
+    dst: Array,  # (E,) int32
+    edge_mask: Optional[Array] = None,  # (E,) bool for padded edge lists
+) -> Array:
+    """Returns per-node outputs (N, d_out)."""
+    cdt = cfg.precision.compute_dtype
+    n = node_feats.shape[0]
+    h = jax.nn.relu(
+        node_feats.astype(cdt) @ params["encoder"]["w"].astype(cdt)
+        + params["encoder"]["b"].astype(cdt)
+    )
+
+    def _c(t, axes):
+        if axes is None:
+            return t
+        from jax.sharding import PartitionSpec as P
+
+        return jax.lax.with_sharding_constraint(t, P(tuple(axes), None))
+
+    def body(h, lp):
+        h = _c(h, cfg.node_shard_axes)
+        hs = _c(h[src], cfg.edge_shard_axes)  # gather (E, d)
+        hd = _c(h[dst], cfg.edge_shard_axes)
+        m = jnp.concatenate([hs, hd], axis=-1)
+        m = jax.nn.relu(m @ lp["we1"].astype(cdt) + lp["be1"].astype(cdt))
+        m = _c(m @ lp["we2"].astype(cdt) + lp["be2"].astype(cdt),
+               cfg.edge_shard_axes)
+        if edge_mask is not None:
+            m = jnp.where(edge_mask[:, None], m, 0.0)
+        agg = _c(_aggregate(cfg, m, dst, n), cfg.node_shard_axes)  # (N, d)
+        upd = jnp.concatenate([h, agg.astype(cdt)], axis=-1)
+        upd = upd @ lp["wn1"].astype(cdt) + lp["bn1"].astype(cdt)
+        h = common.rms_norm(h + jax.nn.relu(upd), lp["ln"])
+        return _c(h, cfg.node_shard_axes), None
+
+    h, _ = jax.lax.scan(body, h, params["layers"],
+                        unroll=cfg.n_layers if cfg.unroll_layers else 1)
+    out = h.astype(jnp.float32) @ params["decoder"]["w"].astype(jnp.float32)
+    return out + params["decoder"]["b"].astype(jnp.float32)
+
+
+def loss_fn(cfg: GNNConfig, params: dict, batch: dict) -> Array:
+    """MSE regression on (masked) target nodes — the GraphCast objective
+    shape; classification datasets pass one-hot targets through the same
+    head."""
+    out = forward(
+        cfg, params, batch["node_feats"], batch["src"], batch["dst"],
+        batch.get("edge_mask"),
+    )
+    target = batch["targets"].astype(jnp.float32)
+    err = (out - target) ** 2
+    if "node_mask" in batch:
+        w = batch["node_mask"].astype(jnp.float32)[:, None]
+        return (err * w).sum() / jnp.maximum(w.sum() * out.shape[-1], 1.0)
+    return err.mean()

@@ -1,0 +1,401 @@
+"""RecSys family: DLRM, xDeepFM (CIN), BERT4Rec, FM — on a sharded
+EmbeddingBag substrate, with a hybrid-retrieval head that routes the
+``retrieval_cand`` shape through the paper's STABLE scorer.
+
+JAX has no native EmbeddingBag: lookups are ``jnp.take`` (+ masked reduction
+over the multi-hot axis / ``segment_sum`` for ragged bags) — this IS part of
+the system (kernel_taxonomy §RecSys). Tables are stacked (F, V, D) and
+row-sharded over the ``model`` axis (DLRM-style embedding parallelism);
+the batch is sharded over (pod, data).
+
+Retrieval integration (DESIGN.md §5): scoring one user against 10⁶ candidates
+under attribute constraints is hybrid ANNS — the candidate set is sharded
+over ``model``, each shard scores with the fused AUTO metric
+(kernels/fused_auto on TPU) and per-shard top-k merge is exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import auto as auto_mod
+from repro.core.auto import MetricConfig
+from repro.models import common
+from repro.models.common import MIXED, Precision
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    kind: str  # dlrm | xdeepfm | bert4rec | fm
+    n_dense: int = 0
+    n_sparse: int = 26
+    vocab_per_field: int = 1_000_000
+    embed_dim: int = 64
+    bot_mlp: tuple = ()
+    top_mlp: tuple = ()
+    cin_layers: tuple = ()
+    mlp: tuple = ()
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    n_items: int = 200_000
+    n_attr_dims: int = 4  # filterable attribute dims on retrieval candidates
+    precision: Precision = MIXED
+    unroll_blocks: bool = False  # dry-run FLOP passes (see transformer.py)
+
+    @property
+    def param_count(self) -> int:
+        return common.count_params(abstract_params(self))
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag substrate
+# ---------------------------------------------------------------------------
+
+
+def embedding_lookup(tables: Array, ids: Array) -> Array:
+    """tables (F, V, D), ids (B, F) → (B, F, D)."""
+    return jax.vmap(
+        lambda t, i: jnp.take(t, i, axis=0), in_axes=(0, 1), out_axes=1
+    )(tables, ids)
+
+
+def embedding_bag(
+    tables: Array, ids: Array, mask: Optional[Array] = None, mode: str = "sum"
+) -> Array:
+    """Multi-hot bag: tables (F, V, D), ids (B, F, NNZ) → (B, F, D)."""
+    g = jax.vmap(
+        lambda t, i: jnp.take(t, i, axis=0), in_axes=(0, 1), out_axes=1
+    )(tables, ids)  # (B, F, NNZ, D)
+    if mask is not None:
+        g = g * mask[..., None].astype(g.dtype)
+    if mode == "sum":
+        return g.sum(axis=2)
+    if mode == "mean":
+        denom = (
+            mask.sum(axis=2)[..., None].astype(g.dtype)
+            if mask is not None
+            else jnp.asarray(ids.shape[2], g.dtype)
+        )
+        return g.sum(axis=2) / jnp.maximum(denom, 1.0)
+    if mode == "max":
+        if mask is not None:
+            g = jnp.where(mask[..., None].astype(bool), g, -jnp.inf)
+        return g.max(axis=2)
+    raise ValueError(mode)
+
+
+def embedding_bag_ragged(
+    table: Array, flat_ids: Array, bag_ids: Array, n_bags: int
+) -> Array:
+    """Ragged bags via take + segment_sum: table (V, D), flat_ids (T,),
+    bag_ids (T,) → (n_bags, D)."""
+    rows = jnp.take(table, flat_ids, axis=0)
+    return jax.ops.segment_sum(rows, bag_ids, num_segments=n_bags)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init per kind
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: RecsysConfig, key: Array) -> dict:
+    pd = cfg.precision.param_dtype
+    ks = jax.random.split(key, 8)
+    d = cfg.embed_dim
+    if cfg.kind == "bert4rec":
+        p = {
+            "item_embed": common.embed_init(ks[0], cfg.n_items, d, pd),
+            "pos_embed": common.embed_init(ks[1], cfg.seq_len, d, pd),
+            "blocks": _bert_blocks_init(cfg, ks[2]),
+            "final_ln_w": jnp.ones((d,), pd),
+            "final_ln_b": jnp.zeros((d,), pd),
+        }
+        return p
+    tables = (
+        jax.random.normal(ks[0], (cfg.n_sparse, cfg.vocab_per_field, d), pd) * 0.01
+    )
+    p = {"tables": tables}
+    if cfg.kind == "dlrm":
+        n_int = (cfg.n_sparse + 1) * cfg.n_sparse // 2  # pairwise dots incl. bottom
+        p["bot"] = common.mlp_params(ks[1], [cfg.n_dense, *cfg.bot_mlp], pd)
+        p["top"] = common.mlp_params(
+            ks[2], [cfg.bot_mlp[-1] + n_int, *cfg.top_mlp], pd
+        )
+    elif cfg.kind == "xdeepfm":
+        f0 = cfg.n_sparse
+        hs = [f0, *cfg.cin_layers]
+        p["cin"] = {
+            f"w{i}": common.dense_init(ks[3], hs[i] * f0, hs[i + 1], pd)
+            for i in range(len(cfg.cin_layers))
+        }
+        p["cin_out"] = common.dense_init(ks[4], sum(cfg.cin_layers), 1, pd)
+        p["dnn"] = common.mlp_params(ks[5], [f0 * d, *cfg.mlp, 1], pd)
+        p["linear"] = jax.random.normal(ks[6], (cfg.n_sparse, cfg.vocab_per_field), pd) * 0.01
+    elif cfg.kind == "fm":
+        p["linear"] = jax.random.normal(ks[1], (cfg.n_sparse, cfg.vocab_per_field), pd) * 0.01
+        p["bias"] = jnp.zeros((), pd)
+    else:
+        raise ValueError(cfg.kind)
+    return p
+
+
+def _bert_blocks_init(cfg: RecsysConfig, key: Array) -> dict:
+    d, L = cfg.embed_dim, cfg.n_blocks
+    pd = cfg.precision.param_dtype
+    ks = jax.random.split(key, 8)
+
+    def stack(k, i, o):
+        return common.dense_init(k, i, o, pd)[None].repeat(L, 0)
+
+    return {
+        "wq": stack(ks[0], d, d), "wk": stack(ks[1], d, d),
+        "wv": stack(ks[2], d, d), "wo": stack(ks[3], d, d),
+        "w1": stack(ks[4], d, 4 * d), "w2": stack(ks[5], 4 * d, d),
+        "b1": jnp.zeros((L, 4 * d), pd), "b2": jnp.zeros((L, d), pd),
+        "ln1": jnp.ones((L, d), pd), "ln2": jnp.ones((L, d), pd),
+    }
+
+
+def abstract_params(cfg: RecsysConfig) -> dict:
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# Forward per kind
+# ---------------------------------------------------------------------------
+
+
+def _dlrm_forward(cfg: RecsysConfig, p: dict, batch: dict) -> Array:
+    cdt = cfg.precision.compute_dtype
+    dense = batch["dense"].astype(cdt)  # (B, 13)
+    emb = embedding_lookup(p["tables"], batch["sparse"]).astype(cdt)  # (B, F, D)
+    bot = common.mlp_apply(p["bot"], dense)  # (B, D)
+    z = jnp.concatenate([bot[:, None, :], emb], axis=1)  # (B, F+1, D)
+    gram = jnp.einsum("bfd,bgd->bfg", z, z)  # dot interaction
+    f = z.shape[1]
+    iu = jnp.triu_indices(f, k=1)
+    inter = gram[:, iu[0], iu[1]]  # (B, F(F+1)/2... pairs)
+    x = jnp.concatenate([bot, inter], axis=-1)
+    return common.mlp_apply(p["top"], x)[:, 0]  # logits (B,)
+
+
+def _xdeepfm_forward(cfg: RecsysConfig, p: dict, batch: dict) -> Array:
+    cdt = cfg.precision.compute_dtype
+    emb = embedding_lookup(p["tables"], batch["sparse"]).astype(cdt)  # (B, F0, D)
+    x0 = emb
+    xk = emb
+    pools = []
+    for i in range(len(cfg.cin_layers)):
+        z = jnp.einsum("bhd,bfd->bhfd", xk, x0)  # outer product over fields
+        b, h, f, d = z.shape
+        z = z.reshape(b, h * f, d)
+        xk = jnp.einsum(
+            "bzd,zh->bhd", z, p["cin"][f"w{i}"].astype(cdt)
+        )  # 1×1 conv ≡ field-mix matmul
+        pools.append(xk.sum(axis=-1))  # (B, H_i) sum-pool over D
+    cin_logit = jnp.concatenate(pools, axis=-1) @ p["cin_out"].astype(cdt)
+    dnn_logit = common.mlp_apply(p["dnn"], emb.reshape(emb.shape[0], -1))
+    lin = jax.vmap(
+        lambda w, i: jnp.take(w, i, axis=0), in_axes=(0, 1), out_axes=1
+    )(p["linear"], batch["sparse"]).sum(axis=1)
+    return (cin_logit[:, 0] + dnn_logit[:, 0] + lin.astype(jnp.float32)).astype(
+        jnp.float32
+    )
+
+
+def _fm_forward(cfg: RecsysConfig, p: dict, batch: dict) -> Array:
+    from repro.kernels.fm_interaction.ref import fm_interaction_ref
+
+    emb = embedding_lookup(p["tables"], batch["sparse"])  # (B, F, D)
+    second = fm_interaction_ref(emb)  # (B,) — Pallas twin validated in tests
+    lin = jax.vmap(
+        lambda w, i: jnp.take(w, i, axis=0), in_axes=(0, 1), out_axes=1
+    )(p["linear"], batch["sparse"]).sum(axis=1)
+    return second + lin.astype(jnp.float32) + p["bias"].astype(jnp.float32)
+
+
+def _bert4rec_encode(cfg: RecsysConfig, p: dict, items: Array) -> Array:
+    """items (B, S) → hidden (B, S, D); bidirectional encoder."""
+    cdt = cfg.precision.compute_dtype
+    b, s = items.shape
+    d, h = cfg.embed_dim, cfg.n_heads
+    dh = d // h
+    x = (
+        jnp.take(p["item_embed"], items, axis=0)
+        + p["pos_embed"][None, :s]
+    ).astype(cdt)
+
+    def body(x, lp):
+        y = common.layer_norm(x, lp["ln1"], jnp.zeros_like(lp["ln1"]))
+        q = (y @ lp["wq"].astype(cdt)).reshape(b, s, h, dh)
+        k = (y @ lp["wk"].astype(cdt)).reshape(b, s, h, dh)
+        v = (y @ lp["wv"].astype(cdt)).reshape(b, s, h, dh)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+        probs = jax.nn.softmax(scores / np.sqrt(dh), axis=-1).astype(cdt)
+        o = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, s, d)
+        x = x + o @ lp["wo"].astype(cdt)
+        y = common.layer_norm(x, lp["ln2"], jnp.zeros_like(lp["ln2"]))
+        y = jax.nn.gelu(y @ lp["w1"].astype(cdt) + lp["b1"].astype(cdt))
+        x = x + (y @ lp["w2"].astype(cdt) + lp["b2"].astype(cdt))
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, p["blocks"],
+                        unroll=cfg.n_blocks if cfg.unroll_blocks else 1)
+    return common.layer_norm(x, p["final_ln_w"], p["final_ln_b"])
+
+
+def _bert4rec_forward(cfg: RecsysConfig, p: dict, batch: dict) -> Array:
+    """Masked-item logits at masked positions: (B, S, n_items)."""
+    h = _bert4rec_encode(cfg, p, batch["items"])
+    return h.astype(jnp.float32) @ p["item_embed"].astype(jnp.float32).T
+
+
+def bert4rec_sampled_loss(cfg: RecsysConfig, p: dict, batch: dict) -> Array:
+    """Masked-item prediction with sampled softmax (full softmax over 10⁶
+    items at batch 65536 × 200 positions is ~10¹⁶ logits — nobody trains
+    that; shared-negative sampled softmax is the industry norm).
+
+    batch: items (B,S), masked_pos (B,P), labels (B,P), neg_ids (N_neg,).
+    """
+    h = _bert4rec_encode(cfg, p, batch["items"]).astype(jnp.float32)  # (B,S,D)
+    hm = jnp.take_along_axis(
+        h, batch["masked_pos"][..., None], axis=1
+    )  # (B, P, D)
+    emb = p["item_embed"].astype(jnp.float32)
+    e_true = jnp.take(emb, batch["labels"], axis=0)  # (B, P, D)
+    e_neg = jnp.take(emb, batch["neg_ids"], axis=0)  # (N_neg, D)
+    s_true = (hm * e_true).sum(-1)  # (B, P)
+    s_neg = jnp.einsum("bpd,nd->bpn", hm, e_neg)  # (B, P, N_neg)
+    all_s = jnp.concatenate([s_true[..., None], s_neg], axis=-1)
+    return (jax.nn.logsumexp(all_s, axis=-1) - s_true).mean()
+
+
+def bert4rec_serve_topk(
+    cfg: RecsysConfig, p: dict, items: Array, k: int = 100,
+    batch_chunk: int = 4096,
+) -> tuple[Array, Array]:
+    """Next-item top-k for a batch of histories, batch-chunked so the
+    (chunk, n_items) score block stays bounded (serve_bulk = 262144 users ×
+    10⁶ items never materializes)."""
+    b = items.shape[0]
+    emb_t = p["item_embed"].astype(jnp.float32).T  # (D, I)
+    chunk = min(batch_chunk, b)
+    n_chunks = (b + chunk - 1) // chunk
+    pad = n_chunks * chunk - b
+    items_p = jnp.pad(items, ((0, pad), (0, 0))).reshape(n_chunks, chunk, -1)
+
+    def body(_, it):
+        h = _bert4rec_encode(cfg, p, it)[:, -1].astype(jnp.float32)  # (c, D)
+        scores = h @ emb_t  # (c, I)
+        top, idx = jax.lax.top_k(scores, k)
+        return _, (top, idx)
+
+    _, (tops, idxs) = jax.lax.scan(body, None, items_p)
+    return (
+        tops.reshape(n_chunks * chunk, k)[:b],
+        idxs.reshape(n_chunks * chunk, k)[:b],
+    )
+
+
+def forward(cfg: RecsysConfig, params: dict, batch: dict) -> Array:
+    if cfg.kind == "dlrm":
+        return _dlrm_forward(cfg, params, batch)
+    if cfg.kind == "xdeepfm":
+        return _xdeepfm_forward(cfg, params, batch)
+    if cfg.kind == "fm":
+        return _fm_forward(cfg, params, batch)
+    if cfg.kind == "bert4rec":
+        return _bert4rec_forward(cfg, params, batch)
+    raise ValueError(cfg.kind)
+
+
+def loss_fn(cfg: RecsysConfig, params: dict, batch: dict) -> Array:
+    if cfg.kind == "bert4rec":
+        return bert4rec_sampled_loss(cfg, params, batch)
+    logits = forward(cfg, params, batch)
+    return common.bce_with_logits(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Hybrid retrieval head (retrieval_cand → STABLE scorer)
+# ---------------------------------------------------------------------------
+
+
+def user_tower(cfg: RecsysConfig, params: dict, batch: dict) -> Array:
+    """(B, D) user embedding for factorized retrieval."""
+    if cfg.kind == "bert4rec":
+        h = _bert4rec_encode(cfg, params, batch["items"])
+        return h[:, -1].astype(jnp.float32)  # last-position encoding
+    emb = embedding_lookup(params["tables"], batch["sparse"]).astype(jnp.float32)
+    vec = emb.sum(axis=1)  # FM-style user factor
+    if cfg.kind == "dlrm":
+        vec = vec + common.mlp_apply(
+            params["bot"], batch["dense"].astype(jnp.float32)
+        )
+    return vec
+
+
+def hybrid_retrieval_topk(
+    user_vec: Array,  # (B, D)
+    user_attrs: Array,  # (B, L) attribute constraints
+    item_embs: Array,  # (N, D)
+    item_attrs: Array,  # (N, L)
+    k: int,
+    alpha: float = 1.0,
+    mode: str = "auto",
+    score_chunk: int = 16384,
+    topk_shards: int = 1,
+) -> tuple[Array, Array]:
+    """STABLE-scored candidate retrieval (paper's technique as the
+    first-class retrieval path). Exact top-k under the fused AUTO metric.
+
+    ``topk_shards > 1`` enables the two-stage exact merge: per-shard local
+    top-k (stays on the owning device when the candidate axis is sharded
+    over ``model``) followed by a global top-k over shards·k survivors —
+    the all-gather shrinks from the full score row (4 MB at 10⁶ candidates)
+    to shards·k entries (6.4 kB): the sharded-ANN merge from
+    distributed/search.py expressed in the jit/pjit path
+    (EXPERIMENTS.md §Perf hillclimb 3)."""
+    cfg = MetricConfig(mode=mode, alpha=alpha)
+    scores = auto_mod.brute_fused_sqdist(
+        user_vec, user_attrs, item_embs, item_attrs, cfg, chunk=score_chunk
+    )
+    b, n = scores.shape
+    if topk_shards > 1 and n % topk_shards == 0:
+        chunk = n // topk_shards
+        s3 = scores.reshape(b, topk_shards, chunk)
+        neg_l, idx_l = jax.lax.top_k(-s3, k)  # (b, shards, k) — shard-local
+        gidx = idx_l + (jnp.arange(topk_shards, dtype=idx_l.dtype) * chunk)[
+            None, :, None
+        ]
+        neg, take = jax.lax.top_k(neg_l.reshape(b, -1), k)
+        idx = jnp.take_along_axis(gidx.reshape(b, -1), take, axis=1)
+        return -neg, idx
+    neg, idx = jax.lax.top_k(-scores, k)
+    return -neg, idx
+
+
+def retrieval_step(
+    cfg: RecsysConfig,
+    params: dict,
+    batch: dict,
+    item_embs: Array,
+    item_attrs: Array,
+    k: int = 100,
+    alpha: float = 1.0,
+    score_chunk: int = 16384,
+    topk_shards: int = 1,
+) -> tuple[Array, Array]:
+    u = user_tower(cfg, params, batch)
+    return hybrid_retrieval_topk(
+        u, batch["query_attrs"], item_embs, item_attrs, k, alpha,
+        score_chunk=score_chunk, topk_shards=topk_shards,
+    )

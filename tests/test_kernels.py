@@ -1,0 +1,156 @@
+"""Per-kernel validation: shape/dtype sweeps, allclose vs the ref.py oracles.
+
+Kernels execute in interpret mode on CPU (the kernel body itself runs, so
+BlockSpec indexing, accumulation-over-grid and padding logic are all
+exercised); tolerances follow DESIGN.md §7 (f32 1e-5 rel, bf16 2e-2 rel).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.fused_auto.fused_auto import fused_auto_scores
+from repro.kernels.fused_auto.ref import fused_auto_ref
+from repro.kernels.gather_auto.gather_auto import gather_auto_scores
+from repro.kernels.gather_auto.ref import gather_auto_ref
+from repro.kernels.fm_interaction.fm_interaction import fm_interaction_pallas
+from repro.kernels.fm_interaction.ref import (
+    fm_interaction_pairwise_ref,
+    fm_interaction_ref,
+)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-4, atol=1e-4)
+
+
+def relerr(a, b):
+    a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    return np.abs(a - b).max() / (np.abs(b).max() + 1e-9)
+
+
+class TestFusedAuto:
+    @pytest.mark.parametrize("b,n,m,l", [
+        (4, 64, 32, 5),          # tiny, everything padded
+        (128, 256, 512, 7),      # exactly one block
+        (130, 300, 96, 3),       # ragged in every dim
+        (1, 1, 8, 1),            # degenerate
+        (256, 512, 1024, 6),     # multiple M blocks (accumulation path)
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, b, n, m, l, dtype):
+        rng = np.random.default_rng(b * 7 + n)
+        qv = jnp.asarray(rng.normal(size=(b, m)), dtype)
+        xv = jnp.asarray(rng.normal(size=(n, m)), dtype)
+        qa = jnp.asarray(rng.integers(0, 4, size=(b, l)), jnp.int32)
+        xa = jnp.asarray(rng.integers(0, 4, size=(n, l)), jnp.int32)
+        got = fused_auto_scores(qv, qa, xv, xa, alpha=0.8, interpret=True)
+        want = fused_auto_ref(
+            qv.astype(jnp.float32), qa, xv.astype(jnp.float32), xa, alpha=0.8
+        )
+        assert relerr(got, want) < (3e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+    def test_l2_mode(self):
+        rng = np.random.default_rng(0)
+        qv = jnp.asarray(rng.normal(size=(16, 64)), jnp.float32)
+        xv = jnp.asarray(rng.normal(size=(96, 64)), jnp.float32)
+        qa = jnp.zeros((16, 4), jnp.int32)
+        xa = jnp.ones((96, 4), jnp.int32)
+        got = fused_auto_scores(qv, qa, xv, xa, mode="l2", interpret=True)
+        want = fused_auto_ref(qv, qa, xv, xa, alpha=1.0, mode="l2")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol(jnp.float32))
+
+    def test_mask(self):
+        rng = np.random.default_rng(1)
+        qv = jnp.asarray(rng.normal(size=(8, 32)), jnp.float32)
+        xv = jnp.asarray(rng.normal(size=(40, 32)), jnp.float32)
+        qa = jnp.asarray(rng.integers(0, 3, size=(8, 5)), jnp.int32)
+        xa = jnp.asarray(rng.integers(0, 3, size=(40, 5)), jnp.int32)
+        mask = jnp.asarray(rng.integers(0, 2, size=(8, 5)), jnp.int32)
+        got = fused_auto_scores(qv, qa, xv, xa, alpha=1.3, mask=mask, interpret=True)
+        want = fused_auto_ref(qv, qa, xv, xa, alpha=1.3, mask=mask)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol(jnp.float32))
+
+    def test_matches_core_brute(self):
+        """Kernel == the core library's chunked jnp scorer (integration)."""
+        from repro.core import auto as A
+        from repro.core.auto import MetricConfig
+
+        rng = np.random.default_rng(2)
+        qv = jnp.asarray(rng.normal(size=(8, 48)), jnp.float32)
+        xv = jnp.asarray(rng.normal(size=(200, 48)), jnp.float32)
+        qa = jnp.asarray(rng.integers(0, 3, size=(8, 5)), jnp.int32)
+        xa = jnp.asarray(rng.integers(0, 3, size=(200, 5)), jnp.int32)
+        got = fused_auto_scores(qv, qa, xv, xa, alpha=0.9, interpret=True)
+        want = A.brute_fused_sqdist(qv, qa, xv, xa, MetricConfig(mode="auto", alpha=0.9))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-3)
+
+    @pytest.mark.parametrize("blocks", [(32, 64, 32), (64, 128, 128)])
+    def test_block_shape_invariance(self, blocks):
+        bb, bn, bm = blocks
+        rng = np.random.default_rng(3)
+        qv = jnp.asarray(rng.normal(size=(48, 100)), jnp.float32)
+        xv = jnp.asarray(rng.normal(size=(150, 100)), jnp.float32)
+        qa = jnp.asarray(rng.integers(0, 3, size=(48, 4)), jnp.int32)
+        xa = jnp.asarray(rng.integers(0, 3, size=(150, 4)), jnp.int32)
+        a = fused_auto_scores(qv, qa, xv, xa, alpha=1.1, interpret=True)
+        b = fused_auto_scores(
+            qv, qa, xv, xa, alpha=1.1,
+            block_b=bb, block_n=bn, block_m=bm, interpret=True,
+        )
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+class TestGatherAuto:
+    @pytest.mark.parametrize("b,c,m,l", [
+        (4, 16, 32, 5),
+        (8, 128, 128, 7),
+        (9, 130, 64, 3),
+        (1, 1, 16, 1),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, b, c, m, l, dtype):
+        rng = np.random.default_rng(c)
+        qv = jnp.asarray(rng.normal(size=(b, m)), dtype)
+        cv = jnp.asarray(rng.normal(size=(b, c, m)), dtype)
+        qa = jnp.asarray(rng.integers(0, 4, size=(b, l)), jnp.int32)
+        ca = jnp.asarray(rng.integers(0, 4, size=(b, c, l)), jnp.int32)
+        got = gather_auto_scores(qv, qa, cv, ca, alpha=0.7, interpret=True)
+        want = gather_auto_ref(
+            qv.astype(jnp.float32), qa, cv.astype(jnp.float32), ca, alpha=0.7
+        )
+        assert relerr(got, want) < (3e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+    def test_consistent_with_fused_auto(self):
+        """Gathered scoring of the full DB == brute scorer row-for-row."""
+        rng = np.random.default_rng(5)
+        b, n, m, l = 4, 60, 24, 5
+        qv = jnp.asarray(rng.normal(size=(b, m)), jnp.float32)
+        xv = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+        qa = jnp.asarray(rng.integers(0, 3, size=(b, l)), jnp.int32)
+        xa = jnp.asarray(rng.integers(0, 3, size=(n, l)), jnp.int32)
+        cv = jnp.broadcast_to(xv[None], (b, n, m))
+        ca = jnp.broadcast_to(xa[None], (b, n, l))
+        g = gather_auto_scores(qv, qa, cv, ca, alpha=1.0, interpret=True)
+        f = fused_auto_scores(qv, qa, xv, xa, alpha=1.0, interpret=True)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(f), rtol=1e-4, atol=1e-4)
+
+
+class TestFMInteraction:
+    @pytest.mark.parametrize("b,f,d", [(4, 8, 16), (256, 26, 64), (300, 39, 10), (1, 2, 4)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, b, f, d, dtype):
+        rng = np.random.default_rng(f)
+        e = jnp.asarray(rng.normal(size=(b, f, d)), dtype)
+        got = fm_interaction_pallas(e, interpret=True)
+        want = fm_interaction_ref(e.astype(jnp.float32))
+        assert relerr(got, want) < (5e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+    def test_sum_square_trick_equals_pairwise(self):
+        rng = np.random.default_rng(9)
+        e = jnp.asarray(rng.normal(size=(16, 10, 8)), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(fm_interaction_ref(e)),
+            np.asarray(fm_interaction_pairwise_ref(e)),
+            rtol=1e-4, atol=1e-4,
+        )

@@ -1,0 +1,53 @@
+"""Two-stage sharded top-k merge (EXPERIMENTS.md §Perf hillclimb 3):
+exactness vs single-stage, across shard counts and metric modes."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.recsys import hybrid_retrieval_topk
+
+
+def _case(seed, b=3, n=960, d=12, l=4):
+    rng = np.random.default_rng(seed)
+    return (
+        jnp.asarray(rng.normal(size=(b, d)), jnp.float32),
+        jnp.asarray(rng.integers(0, 3, (b, l)), jnp.int32),
+        jnp.asarray(rng.normal(size=(n, d)), jnp.float32),
+        jnp.asarray(rng.integers(0, 3, (n, l)), jnp.int32),
+    )
+
+
+@pytest.mark.parametrize("shards", [1, 2, 4, 16])
+@pytest.mark.parametrize("mode", ["auto", "l2"])
+def test_two_stage_equals_single_stage(shards, mode):
+    u, ua, e, ea = _case(0)
+    d1, i1 = hybrid_retrieval_topk(u, ua, e, ea, k=10, alpha=0.8, mode=mode,
+                                   topk_shards=1)
+    d2, i2 = hybrid_retrieval_topk(u, ua, e, ea, k=10, alpha=0.8, mode=mode,
+                                   topk_shards=shards)
+    np.testing.assert_allclose(np.sort(np.asarray(d1), 1),
+                               np.sort(np.asarray(d2), 1), rtol=1e-5)
+    for r1, r2 in zip(np.asarray(i1), np.asarray(i2)):
+        assert set(r1.tolist()) == set(r2.tolist())
+
+
+@given(st.integers(0, 200))
+@settings(max_examples=20, deadline=None)
+def test_two_stage_property(seed):
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(1, 8))
+    shards = int(rng.choice([2, 4, 8]))
+    n = shards * int(rng.integers(8, 40))
+    u, ua, e, ea = _case(seed, b=2, n=n)
+    d1, i1 = hybrid_retrieval_topk(u, ua, e, ea, k=k, topk_shards=1)
+    d2, i2 = hybrid_retrieval_topk(u, ua, e, ea, k=k, topk_shards=shards)
+    np.testing.assert_allclose(np.sort(np.asarray(d1), 1),
+                               np.sort(np.asarray(d2), 1), rtol=1e-5)
+
+
+def test_non_divisible_falls_back_to_single_stage():
+    u, ua, e, ea = _case(1, n=961)  # 961 % 16 != 0
+    d, i = hybrid_retrieval_topk(u, ua, e, ea, k=5, topk_shards=16)
+    d0, i0 = hybrid_retrieval_topk(u, ua, e, ea, k=5, topk_shards=1)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(d0), rtol=1e-6)
