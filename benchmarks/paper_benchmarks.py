@@ -343,6 +343,74 @@ def tab5_kernel_fusion(fast: bool = True) -> None:
     flush_csv(bench)
 
 
+# ---------------------------------------------------------------------------
+# Quantized serving — recall vs throughput: exact vs sq8 vs pq (+rerank)
+# ---------------------------------------------------------------------------
+
+
+def quant_sweep(fast: bool = True) -> None:
+    """Two-stage quantized search trade-off curve; also emits
+    ``BENCH_quant.json`` (qps / recall@10 / eval counts per mode)."""
+    import json
+    import os
+
+    from benchmarks.common import BENCH_DIR
+    from repro.core.routing import RoutingConfig
+    from repro.quant import QuantConfig, QuantizedVectors
+
+    bench = "quant_sweep"
+    n = 10000 if fast else 50000
+    pool = 64
+    ds = dataset("sift", 5, 3, n, 128)
+    truth = ground_truth(ds)
+    mc, graph, _, _ = built_index(ds, "auto")
+
+    stores = {
+        "sq8": QuantizedVectors.build(ds.features, QuantConfig(mode="sq8")),
+        "pq": QuantizedVectors.build(
+            ds.features, QuantConfig(mode="pq", pq_subspaces=32)
+        ),
+    }
+    reranks = [pool // 2, pool] if fast else [16, pool // 2, pool]
+
+    summary = {}
+    for mode in ("none", "sq8", "pq"):
+        sweeps = [0] if mode == "none" else reranks
+        for rr in sweeps:
+            cfg = RoutingConfig(
+                k=10, pool_size=pool, pioneer_size=max(4, pool // 8),
+                quant_mode=mode, rerank_size=rr,
+            )
+            quant = stores.get(mode)
+            res = search(ds.features, ds.attrs, graph, ds.query_features,
+                         ds.query_attrs, mc, cfg, quant=quant)
+            jax.block_until_ready(res.ids)
+            t0 = time.perf_counter()
+            for _ in range(3):
+                res = search(ds.features, ds.attrs, graph, ds.query_features,
+                             ds.query_attrs, mc, cfg, quant=quant)
+                jax.block_until_ready(res.ids)
+            dt = (time.perf_counter() - t0) / 3
+            nq = ds.query_features.shape[0]
+            qps = nq / dt
+            r = recall_at_k(res.ids, truth.ids, 10)
+            name = mode if mode == "none" else f"{mode}/rerank{rr}"
+            emit(bench, name, "recall", round(r, 4))
+            emit(bench, name, "qps", round(qps, 1))
+            emit(bench, name, "fp_evals_per_q", int(res.n_dist_evals) // nq)
+            emit(bench, name, "code_evals_per_q", int(res.n_code_evals) // nq)
+            summary[name] = {
+                "recall_at_10": round(float(r), 4),
+                "qps": round(float(qps), 1),
+                "fp_evals_per_query": int(res.n_dist_evals) // nq,
+                "code_evals_per_query": int(res.n_code_evals) // nq,
+            }
+    flush_csv(bench)
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    with open(os.path.join(BENCH_DIR, "BENCH_quant.json"), "w") as f:
+        json.dump({"n": n, "pool": pool, "modes": summary}, f, indent=2)
+
+
 ALL = [
     tab1_magnitude_stats,
     fig3_qps_recall,
@@ -354,4 +422,5 @@ ALL = [
     fig9_sigma_sweep,
     fig10_gamma_sweep,
     tab5_kernel_fusion,
+    quant_sweep,
 ]

@@ -1,4 +1,6 @@
-"""Benchmark entry point: one function per paper table/figure.
+"""Benchmark entry point: one function per paper table/figure, plus the
+quantized-serving sweep (``--only quant`` → quant_sweep, which also writes
+the ``BENCH_quant.json`` artifact).
 
 ``PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]``
 Prints ``benchmark,name,metric,value`` CSV rows; artifacts land in

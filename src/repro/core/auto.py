@@ -210,21 +210,16 @@ def auto_distance(
     return sv * (1.0 + sa / alpha)
 
 
-def fused_sqdist(
-    qv: Array,
+def fused_sqdist_from_sv2(
+    sv2: Array,
     qa: Array,
-    xv: Array,
     xa: Array,
     cfg: MetricConfig,
     mask: Optional[Array] = None,
 ) -> Array:
-    """Squared fused metric for ranking (ordering ≡ the mode's distance).
-
-    Pointwise/broadcast form used by routing over gathered candidates.
-    ``l2``/``additive``/``nhq`` square their respective distances so every
-    mode ranks identically to its un-squared definition.
-    """
-    sv2 = feature_sqdist(qv, xv)
+    """Apply the mode's attribute fusion to a precomputed squared feature
+    term. Shared by the exact path (sv2 from f32 vectors) and the quantized
+    path (sv2 from ADC/SQ8 codes — attributes stay full-precision)."""
     if cfg.mode == "l2":
         return sv2
     sa = attribute_distance(qa, xa, mask)
@@ -245,6 +240,23 @@ def fused_sqdist(
     ham = ham.astype(jnp.float32).sum(axis=-1)
     u = jnp.sqrt(sv2) + cfg.nhq_weight * ham
     return u * u
+
+
+def fused_sqdist(
+    qv: Array,
+    qa: Array,
+    xv: Array,
+    xa: Array,
+    cfg: MetricConfig,
+    mask: Optional[Array] = None,
+) -> Array:
+    """Squared fused metric for ranking (ordering ≡ the mode's distance).
+
+    Pointwise/broadcast form used by routing over gathered candidates.
+    ``l2``/``additive``/``nhq`` square their respective distances so every
+    mode ranks identically to its un-squared definition.
+    """
+    return fused_sqdist_from_sv2(feature_sqdist(qv, xv), qa, xa, cfg, mask)
 
 
 def _penalty(sa: Array, cfg: MetricConfig) -> Array:

@@ -21,6 +21,7 @@ from repro.core import routing as routing_mod
 from repro.core.auto import DatasetStats, MetricConfig
 from repro.core.help_graph import BuildReport, HelpConfig
 from repro.core.routing import RoutingConfig, SearchResult
+from repro.quant import QuantConfig, QuantizedVectors
 
 Array = jax.Array
 
@@ -34,6 +35,7 @@ class StableIndex:
     help_cfg: HelpConfig
     stats: DatasetStats
     report: Optional[BuildReport] = None
+    quant: Optional[QuantizedVectors] = None  # codes + codec state (or None)
 
     # -- construction --------------------------------------------------------
 
@@ -47,6 +49,7 @@ class StableIndex:
         alpha: Optional[float] = None,
         nhq_weight: float = 1.0,
         stats_seed: int = 0,
+        quant_cfg: QuantConfig = QuantConfig(),
     ) -> "StableIndex":
         features = jnp.asarray(features, jnp.float32)
         attrs = jnp.asarray(attrs, jnp.int32)
@@ -64,6 +67,7 @@ class StableIndex:
         return cls(
             features=features, attrs=attrs, graph=graph,
             metric_cfg=metric_cfg, help_cfg=help_cfg, stats=stats, report=report,
+            quant=QuantizedVectors.build(features, quant_cfg),
         )
 
     # -- search ---------------------------------------------------------------
@@ -77,6 +81,9 @@ class StableIndex:
         mask=None,
         seed: int = 0,
     ) -> SearchResult:
+        """Quantized indexes always route over codes and rerank at full
+        precision (two-stage), matching ShardedStableIndex — to force exact
+        search on a quantized index, search a copy with ``quant=None``."""
         cfg = routing_cfg or RoutingConfig(k=k, pool_size=max(4 * k, 32))
         if cfg.k != k:
             cfg = dataclasses.replace(cfg, k=k)
@@ -86,6 +93,7 @@ class StableIndex:
             self.metric_cfg, cfg,
             mask=None if mask is None else jnp.asarray(mask),
             seed=seed,
+            quant=self.quant,
         )
 
     # -- persistence ----------------------------------------------------------
@@ -99,6 +107,7 @@ class StableIndex:
             "metric_cfg": dataclasses.asdict(self.metric_cfg),
             "help_cfg": dataclasses.asdict(self.help_cfg),
             "stats": dataclasses.asdict(self.stats),
+            "quant": self.quant.save(path) if self.quant is not None else None,
         }
         tmp = os.path.join(path, "meta.json.tmp")
         with open(tmp, "w") as f:
@@ -109,6 +118,7 @@ class StableIndex:
     def load(cls, path: str) -> "StableIndex":
         with open(os.path.join(path, "meta.json")) as f:
             meta = json.load(f)
+        quant_meta = meta.get("quant")
         return cls(
             features=jnp.asarray(np.load(os.path.join(path, "features.npy"))),
             attrs=jnp.asarray(np.load(os.path.join(path, "attrs.npy"))),
@@ -116,4 +126,8 @@ class StableIndex:
             metric_cfg=MetricConfig(**meta["metric_cfg"]),
             help_cfg=HelpConfig(**meta["help_cfg"]),
             stats=DatasetStats(**meta["stats"]),
+            quant=(
+                QuantizedVectors.load(path, quant_meta)
+                if quant_meta is not None else None
+            ),
         )

@@ -13,6 +13,14 @@ expanded in one iteration (bulk) instead of one at a time; insertion sort is
 replaced by a dedup-merge + `top_k`; an optional (B, N) visited map suppresses
 re-scoring. Distance evaluations are counted exactly so efficiency comparisons
 against baselines are architecture-neutral.
+
+Quantized two-stage mode (``RoutingConfig.quant_mode`` ∈ {sq8, pq}): the
+traversal scores candidates from compressed codes only — SQ8 codes decode
+in-register, PQ codes go through the per-query ADC tables — filling the
+(oversized) pool without touching f32 vectors; the final ``rerank_size``
+pool entries are then re-scored with exact fused distances before emitting
+top-k. ``n_dist_evals`` counts *only* full-precision evaluations (the rerank);
+compressed-code evaluations are reported separately as ``n_code_evals``.
 """
 from __future__ import annotations
 
@@ -27,6 +35,8 @@ from repro.core import auto as auto_mod
 from repro.core import graph_ops as gops
 from repro.core.auto import MetricConfig
 from repro.core.graph_ops import INF, INVALID
+from repro.quant import pq as pq_mod
+from repro.quant import sq as sq_mod
 
 Array = jax.Array
 
@@ -40,20 +50,71 @@ class RoutingConfig:
     refine_max_iters: int = 256
     use_visited: bool = True  # (B, N) scored-map; disable for huge shards
     enforce_equality: bool = False  # final hard filter (off: paper behavior)
+    quant_mode: str = "none"  # none | sq8 | pq — traversal scoring codec
+    rerank_size: int = 0  # pool entries re-scored exactly (0 → pool_size)
 
     def __post_init__(self):
         if self.k > self.pool_size:
             raise ValueError("k must be ≤ pool_size")
         if self.pioneer_size > self.pool_size:
             raise ValueError("pioneer_size must be ≤ pool_size")
+        if self.quant_mode not in ("none", "sq8", "pq"):
+            raise ValueError(f"unknown quant_mode {self.quant_mode!r}")
+        if self.rerank_size:
+            if not (self.k <= self.rerank_size <= self.pool_size):
+                raise ValueError("need k ≤ rerank_size ≤ pool_size")
+
+    @property
+    def effective_rerank(self) -> int:
+        return self.rerank_size or self.pool_size
 
 
 class SearchResult(NamedTuple):
     ids: Array  # (B, K) node ids (INVALID-padded)
     dists: Array  # (B, K) fused distances U (paper Eq. 4 scale, sqrt applied)
     sqdists: Array  # (B, K) squared fused metric (ranking scale)
-    n_dist_evals: Array  # () total distance evaluations (efficiency proxy)
+    n_dist_evals: Array  # () full-precision distance evaluations
     n_hops: Array  # () total expansion iterations executed
+    n_code_evals: Array | int = 0  # () compressed-code evaluations (quant mode)
+
+
+def _score_candidates(
+    db_v: Array,
+    db_a: Array,
+    cand: Array,  # (B, C) node ids (INVALID allowed)
+    qv: Array,
+    qa: Array,
+    metric_cfg: MetricConfig,
+    mask: Optional[Array],
+    quant: tuple,
+    quant_mode: str,
+) -> Array:
+    """(B, C) squared fused distances for gathered candidates.
+
+    quant_mode='none' reads f32 vectors; 'sq8' dequantizes gathered int8
+    codes in-register; 'pq' sums per-query ADC table entries. Attributes are
+    never quantized — the AUTO penalty is exact in every mode.
+    """
+    ca = gops.gather_rows(db_a, cand)
+    m = mask[:, None, :] if mask is not None else None
+    if quant_mode == "none":
+        cv = gops.gather_rows(db_v, cand)
+        return auto_mod.fused_sqdist(
+            qv[:, None, :], qa[:, None, :], cv, ca, metric_cfg, m
+        )
+    if quant_mode == "sq8":
+        codes, scale, zero = quant
+        cv = sq_mod.sq8_decode(
+            gops.gather_rows(codes, cand), sq_mod.SQParams(scale, zero)
+        )
+        return auto_mod.fused_sqdist(
+            qv[:, None, :], qa[:, None, :], cv, ca, metric_cfg, m
+        )
+    # pq: ADC — Σ_s lut[b, s, code] replaces the f32 squared feature term
+    codes, lut = quant
+    cc = gops.gather_rows(codes, cand)  # (B, C, S)
+    sv2 = jnp.maximum(pq_mod.adc_gathered_sqdist(lut, cc), 0.0)
+    return auto_mod.fused_sqdist_from_sv2(sv2, qa[:, None, :], ca, metric_cfg, m)
 
 
 class _State(NamedTuple):
@@ -80,6 +141,8 @@ def _expand(
     fanout: int,  # neighbors taken per expanded entry (Γ/2 or Γ)
     watch: int,  # improvement watched over R[:watch] (P or pool_size)
     use_visited: bool,
+    quant: tuple = (),
+    quant_mode: str = "none",
 ) -> _State:
     b, pool = state.r_ids.shape
     gamma = graph.shape[1]
@@ -102,10 +165,9 @@ def _expand(
         cand = jnp.where(seen, INVALID, cand)
 
     # --- score ----------------------------------------------------------------
-    cv = gops.gather_rows(db_v, cand)
-    ca = gops.gather_rows(db_a, cand)
-    m = mask[:, None, :] if mask is not None else None
-    cd = auto_mod.fused_sqdist(qv[:, None, :], qa[:, None, :], cv, ca, metric_cfg, m)
+    cd = _score_candidates(
+        db_v, db_a, cand, qv, qa, metric_cfg, mask, quant, quant_mode
+    )
     cd = jnp.where(cand < 0, INF, cd)
     n_new_evals = (cand >= 0).sum()
 
@@ -158,17 +220,18 @@ def _search_jit(
     cfg: RoutingConfig,
     n_nodes: int,
     mask: Optional[Array] = None,
+    quant: tuple = (),
 ) -> SearchResult:
     b = qv.shape[0]
     pool = cfg.pool_size
     gamma = graph.shape[1]
     half = max(1, gamma // 2)
+    qmode = cfg.quant_mode
 
     # (1) Initialization — random-K seed pool, sorted ascending.
-    cv = gops.gather_rows(db_v, entry_ids)
-    ca = gops.gather_rows(db_a, entry_ids)
-    m = mask[:, None, :] if mask is not None else None
-    d0 = auto_mod.fused_sqdist(qv[:, None, :], qa[:, None, :], cv, ca, metric_cfg, m)
+    d0 = _score_candidates(
+        db_v, db_a, entry_ids, qv, qa, metric_cfg, mask, quant, qmode
+    )
     d0 = jnp.where(entry_ids < 0, INF, d0)
     r_ids, r_d, _ = gops.merge_pools(
         jnp.full((b, pool), INVALID), jnp.full((b, pool), INF),
@@ -199,7 +262,7 @@ def _search_jit(
         return _expand(
             s, db_v, db_a, graph, qv, qa, metric_cfg, mask,
             scope=cfg.pioneer_size, fanout=half, watch=cfg.pioneer_size,
-            use_visited=cfg.use_visited,
+            use_visited=cfg.use_visited, quant=quant, quant_mode=qmode,
         )
 
     state = jax.lax.while_loop(coarse_cond, coarse_body, state)
@@ -215,13 +278,35 @@ def _search_jit(
         return _expand(
             s, db_v, db_a, graph, qv, qa, metric_cfg, mask,
             scope=pool, fanout=gamma, watch=pool,
-            use_visited=cfg.use_visited,
+            use_visited=cfg.use_visited, quant=quant, quant_mode=qmode,
         )
 
     state = jax.lax.while_loop(refine_cond, refine_body, state)
 
-    out_ids = state.r_ids[:, : cfg.k]
-    out_sq = state.r_d[:, : cfg.k]
+    # (4) Two-stage output: exact mode emits the pool head directly; quant
+    # mode reranks the top rerank_size pool entries with exact fused
+    # distances (the only full-precision evaluations of the whole search).
+    if qmode == "none":
+        out_ids = state.r_ids[:, : cfg.k]
+        out_sq = state.r_d[:, : cfg.k]
+        n_dist_evals = state.evals
+        n_code_evals = jnp.zeros((), jnp.int32)
+    else:
+        rr = cfg.effective_rerank
+        r_ids = state.r_ids[:, :rr]
+        cv = gops.gather_rows(db_v, r_ids)
+        ca = gops.gather_rows(db_a, r_ids)
+        m = mask[:, None, :] if mask is not None else None
+        rd = auto_mod.fused_sqdist(
+            qv[:, None, :], qa[:, None, :], cv, ca, metric_cfg, m
+        )
+        rd = jnp.where(r_ids < 0, INF, rd)
+        neg, take = jax.lax.top_k(-rd, cfg.k)
+        out_sq = -neg
+        out_ids = jnp.take_along_axis(r_ids, take, axis=1)
+        out_ids = jnp.where(out_sq < INF / 2, out_ids, INVALID)
+        n_dist_evals = (r_ids >= 0).sum().astype(jnp.int32)
+        n_code_evals = state.evals
     if cfg.enforce_equality:
         oa = gops.gather_rows(db_a, out_ids)
         ok = (oa == qa[:, None, :]).all(-1) if mask is None else (
@@ -233,8 +318,9 @@ def _search_jit(
         ids=out_ids,
         dists=jnp.sqrt(jnp.maximum(out_sq, 0.0)),
         sqdists=out_sq,
-        n_dist_evals=state.evals,
+        n_dist_evals=n_dist_evals,
         n_hops=state.hops,
+        n_code_evals=n_code_evals,
     )
 
 
@@ -259,15 +345,32 @@ def search(
     mask: Optional[Array] = None,
     entry_ids: Optional[Array] = None,
     seed: int = 0,
+    quant=None,  # Optional[repro.quant.QuantizedVectors]
 ) -> SearchResult:
-    """Batched hybrid ANNS over a HELP index (public entry point)."""
+    """Batched hybrid ANNS over a HELP index (public entry point).
+
+    Pass a ``QuantizedVectors`` store to run the traversal over compressed
+    codes with a full-precision rerank (quant_mode is taken from the store
+    when the config leaves it at 'none').
+    """
     qv = jnp.asarray(qv, jnp.float32)
     qa = jnp.asarray(qa, jnp.int32)
     n = db_v.shape[0]
     if entry_ids is None:
         entry_ids = make_entry_ids(n, qv.shape[0], cfg.pool_size, seed)
+    operand: tuple = ()
+    if quant is not None:
+        if cfg.quant_mode == "none":
+            cfg = dataclasses.replace(cfg, quant_mode=quant.cfg.mode)
+        elif cfg.quant_mode != quant.cfg.mode:
+            raise ValueError(
+                f"cfg.quant_mode={cfg.quant_mode!r} != store mode {quant.cfg.mode!r}"
+            )
+        operand = quant.routing_operand(qv)
+    elif cfg.quant_mode != "none":
+        raise ValueError(f"quant_mode={cfg.quant_mode!r} needs a quant store")
     return _search_jit(
-        db_v, db_a, graph, qv, qa, entry_ids, metric_cfg, cfg, n, mask
+        db_v, db_a, graph, qv, qa, entry_ids, metric_cfg, cfg, n, mask, operand
     )
 
 

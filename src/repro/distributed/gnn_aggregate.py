@@ -17,6 +17,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.sharding import named_axis_size
+
 Array = jax.Array
 
 
@@ -33,7 +35,7 @@ def ring_partitioned_aggregate(
     the running sum downstream and adds the local edges' contribution to the
     shard now in hand; after ``size-1`` hops device ``i`` holds shard ``i``.
     """
-    size = jax.lax.axis_size(axis_name)
+    size = named_axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     assert n_nodes % size == 0, (n_nodes, size)
     rows = n_nodes // size

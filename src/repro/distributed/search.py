@@ -7,6 +7,14 @@ scale). A query batch is searched on every shard via `shard_map`; local ids
 are offset to global ids and the per-shard top-k results are all-gathered
 over `model` and reduced with one global top-k — an EXACT merge (top-k of a
 union equals top-k of per-shard top-k's).
+
+Quantized serving (``quant_cfg.mode`` ∈ {sq8, pq}): codes are sharded over
+`model` alongside the graph; codec state (SQ8 affine params / PQ codebooks)
+is replicated, and PQ ADC tables are computed per data-shard inside the
+shard_map body. Each shard routes over its codes and reranks its own pool
+slice at full precision before the exact global merge, so the merge stays
+exact w.r.t. the fused metric (sharded *quantized* rerank — pooling rerank
+across shards before the merge — is a tracked ROADMAP follow-on).
 """
 from __future__ import annotations
 
@@ -21,9 +29,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import routing as routing_mod
 from repro.core.auto import MetricConfig
+from repro.distributed import sharding as sharding_mod
 from repro.core.graph_ops import INF, INVALID
 from repro.core.help_graph import HelpConfig, build_help_graph
 from repro.core.routing import RoutingConfig
+from repro.quant import PQCodebook, QuantConfig, QuantizedVectors, adc_lut
 
 Array = jax.Array
 
@@ -38,6 +48,12 @@ class ShardedStableIndex:
     graphs: Array  # (N, Γ) per-shard LOCAL adjacency, sharded P("model", None)
     metric_cfg: MetricConfig
     shard_rows: int  # rows per model shard
+    quant_mode: str = "none"
+    codes: Optional[Array] = None  # sharded P("model", None) alongside graph
+    sq_scale: Optional[Array] = None  # (M,) replicated
+    sq_zero: Optional[Array] = None  # (M,) replicated
+    pq_centroids: Optional[Array] = None  # (S, K, D_sub) replicated
+    pq_dim: int = 0  # original feature dim (PQ codebook metadata)
 
     @classmethod
     def build(
@@ -47,9 +63,12 @@ class ShardedStableIndex:
         attrs: np.ndarray,
         metric_cfg: MetricConfig,
         help_cfg: HelpConfig = HelpConfig(),
+        quant_cfg: QuantConfig = QuantConfig(),
     ) -> "ShardedStableIndex":
         """Build one HELP sub-index per model shard (host-side loop here; a
-        real deployment builds shards on their owning hosts in parallel)."""
+        real deployment builds shards on their owning hosts in parallel).
+        The quant codec trains once on the full database (codebooks are
+        global), codes shard row-aligned with the features."""
         n = features.shape[0]
         n_shards = mesh.shape["model"]
         assert n % n_shards == 0, (n, n_shards)
@@ -62,6 +81,18 @@ class ShardedStableIndex:
             )
             graphs[sl] = np.asarray(g)  # LOCAL ids within the shard
         fsh = NamedSharding(mesh, P("model", None))
+        rep = NamedSharding(mesh, P())
+        kw: dict = {}
+        store = QuantizedVectors.build(features, quant_cfg)
+        if store is not None:
+            kw["quant_mode"] = quant_cfg.mode
+            kw["codes"] = jax.device_put(store.codes, fsh)
+            if store.sq_params is not None:
+                kw["sq_scale"] = jax.device_put(store.sq_params.scale, rep)
+                kw["sq_zero"] = jax.device_put(store.sq_params.zero, rep)
+            if store.codebook is not None:
+                kw["pq_centroids"] = jax.device_put(store.codebook.centroids, rep)
+                kw["pq_dim"] = store.codebook.dim
         return cls(
             mesh=mesh,
             features=jax.device_put(jnp.asarray(features, jnp.float32), fsh),
@@ -69,6 +100,7 @@ class ShardedStableIndex:
             graphs=jax.device_put(jnp.asarray(graphs), fsh),
             metric_cfg=metric_cfg,
             shard_rows=rows,
+            **kw,
         )
 
     def search(
@@ -82,24 +114,44 @@ class ShardedStableIndex:
         cfg = routing_cfg or RoutingConfig(k=k, pool_size=max(4 * k, 32))
         if cfg.k != k:
             cfg = dataclasses.replace(cfg, k=k)
+        if self.quant_mode != "none" and cfg.quant_mode == "none":
+            cfg = dataclasses.replace(cfg, quant_mode=self.quant_mode)
+        if cfg.quant_mode != self.quant_mode:
+            raise ValueError(
+                f"routing_cfg.quant_mode={cfg.quant_mode!r} but this index "
+                f"was built with quant mode {self.quant_mode!r}"
+            )
         mesh = self.mesh
         rows = self.shard_rows
         metric_cfg = self.metric_cfg
+        qmode = cfg.quant_mode
+        pq_dim = self.pq_dim
         b = qv.shape[0]
         entry = routing_mod.make_entry_ids(rows, b, cfg.pool_size, seed)
 
-        def local_search(feats, attrs, graph, qv, qa, entry):
+        def local_search(feats, attrs, graph, qv, qa, entry, *qops):
             # one model shard: this data-shard's query block vs the local
             # sub-index (NOTE: shapes here are per-device, not global)
             b_loc = qv.shape[0]
+            if qmode == "sq8":
+                codes, scale, zero = qops
+                operand = (codes, scale, zero)
+            elif qmode == "pq":
+                codes, centroids = qops
+                # per data-shard ADC tables from the replicated codebook
+                operand = (codes, adc_lut(qv, PQCodebook(centroids, pq_dim)))
+            else:
+                operand = ()
             res = routing_mod._search_jit(
-                feats, attrs, graph, qv, qa, entry, metric_cfg, cfg, rows, None
+                feats, attrs, graph, qv, qa, entry, metric_cfg, cfg, rows,
+                None, operand,
             )
             shard_id = jax.lax.axis_index("model")
             gids = jnp.where(
                 res.ids >= 0, res.ids + shard_id * rows, INVALID
             )
-            # exact merge: all-gather per-shard top-k, re-top-k
+            # exact merge: all-gather per-shard top-k, re-top-k (per-shard
+            # rerank already restored exact fused distances in quant mode)
             all_ids = jax.lax.all_gather(gids, "model", axis=0)  # (S, b, K)
             all_d = jax.lax.all_gather(res.sqdists, "model", axis=0)
             all_ids = jnp.moveaxis(all_ids, 0, 1).reshape(b_loc, -1)
@@ -112,17 +164,28 @@ class ShardedStableIndex:
                 evals[None],
             )
 
-        fn = jax.shard_map(
+        extra_args: tuple = ()
+        extra_specs: tuple = ()
+        if qmode == "sq8":
+            extra_args = (self.codes, self.sq_scale, self.sq_zero)
+            extra_specs = (P("model", None), P(None), P(None))
+        elif qmode == "pq":
+            extra_args = (self.codes, self.pq_centroids)
+            extra_specs = (P("model", None), P(None, None, None))
+
+        fn = sharding_mod.shard_map(
             local_search,
             mesh=mesh,
             in_specs=(
                 P("model", None), P("model", None), P("model", None),
                 P("data", None), P("data", None), P("data", None),
-            ),
+            ) + extra_specs,
             out_specs=(P("data", None), P("data", None), P(None)),
             check_vma=False,
         )
         qv = jnp.asarray(qv, jnp.float32)
         qa = jnp.asarray(qa, jnp.int32)
-        ids, sqd, evals = fn(self.features, self.attrs, self.graphs, qv, qa, entry)
+        ids, sqd, evals = fn(
+            self.features, self.attrs, self.graphs, qv, qa, entry, *extra_args
+        )
         return ids, jnp.sqrt(jnp.maximum(sqd, 0.0)), evals.sum()

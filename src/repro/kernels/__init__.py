@@ -1,3 +1,13 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Kernel families (each <name>/ is kernel + ops.py dispatch + ref.py oracle):
+#   fused_auto  — brute-force fused AUTO hybrid scorer (MXU matmul decomp)
+#   gather_auto — fused AUTO over pre-gathered beam candidates (VPU)
+#   adc_scan    — fused ADC scan over PQ codes + AUTO penalty (one-hot MXU)
+#   fm_interaction — FM pairwise-interaction pooling for the recsys family
+from repro.kernels.adc_scan.ops import adc_scan, adc_scan_topk
+from repro.kernels.fused_auto.ops import fused_auto, fused_auto_topk
+
+__all__ = ["adc_scan", "adc_scan_topk", "fused_auto", "fused_auto_topk"]

@@ -1,0 +1,59 @@
+"""Jit'd public wrapper for the fused ADC scan kernel.
+
+Selects Pallas compiled mode on TPU, interpret mode elsewhere (this container
+is CPU-only; interpret executes the kernel body in Python for correctness).
+Also exposes a top-k convenience used by the quantized serving path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.adc_scan.adc_scan import adc_scan_scores
+from repro.kernels.adc_scan.ref import adc_scan_ref
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def adc_scan(
+    lut: Array,
+    codes: Array,
+    qa: Array,
+    xa: Array,
+    alpha: float = 1.0,
+    mode: str = "auto",
+    mask: Optional[Array] = None,
+    block_b: int = 8,
+    block_n: int = 256,
+) -> Array:
+    """(B, N) squared fused ADC distances (Pallas on TPU, interpret on CPU)."""
+    return adc_scan_scores(
+        lut, codes, qa, xa, alpha=alpha, mode=mode, mask=mask,
+        block_b=block_b, block_n=block_n,
+        interpret=not _on_tpu(),
+    )
+
+
+def adc_scan_topk(
+    lut: Array,
+    codes: Array,
+    qa: Array,
+    xa: Array,
+    k: int,
+    alpha: float = 1.0,
+    mode: str = "auto",
+    mask: Optional[Array] = None,
+) -> tuple[Array, Array]:
+    """Approximate hybrid top-k over PQ codes via the fused ADC kernel."""
+    scores = adc_scan(lut, codes, qa, xa, alpha=alpha, mode=mode, mask=mask)
+    neg, idx = jax.lax.top_k(-scores, k)
+    return -neg, idx
+
+
+__all__ = ["adc_scan", "adc_scan_topk", "adc_scan_ref"]

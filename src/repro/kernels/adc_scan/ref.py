@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the fused ADC scanner.
+
+Computes the (B, N) squared fused metric over PQ codes
+    U² ≈ (Σ_s LUT[b, s, codes[n, s]]) · (1 + S_A/α)²
+with S_A the (optionally masked) Manhattan distance between integer-mapped
+attribute vectors. ``mode='l2'`` drops the attribute factor. Attributes stay
+full-precision — only the feature term is quantized.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def adc_scan_ref(
+    lut: Array,  # (B, S, K) f32
+    codes: Array,  # (N, S) int
+    qa: Array,  # (B, L) int
+    xa: Array,  # (N, L) int
+    alpha: float,
+    mode: str = "auto",
+    mask: Optional[Array] = None,  # (B, L)
+) -> Array:
+    if mode not in ("auto", "l2"):
+        raise ValueError(f"adc_scan supports modes ('auto', 'l2'), got {mode!r}")
+    lut = lut.astype(jnp.float32)
+    codes = codes.astype(jnp.int32)
+    s_dim = lut.shape[1]
+    sv2 = jnp.zeros((lut.shape[0], codes.shape[0]), jnp.float32)
+    for s in range(s_dim):
+        sv2 = sv2 + jnp.take(lut[:, s, :], codes[:, s], axis=1)
+    sv2 = jnp.maximum(sv2, 0.0)
+    if mode == "l2":
+        return sv2
+    diff = jnp.abs(
+        qa.astype(jnp.float32)[:, None, :] - xa.astype(jnp.float32)[None, :, :]
+    )
+    if mask is not None:
+        diff = diff * mask.astype(jnp.float32)[:, None, :]
+    sa = diff.sum(-1)
+    pen = 1.0 + sa / alpha
+    return sv2 * pen * pen

@@ -4,6 +4,11 @@ shardings. Shared by the dry-run, the launcher and the distributed tests.
 ``input_specs()`` returns ShapeDtypeStruct stand-ins for every input (weak-
 type-correct, shardable, zero allocation) — params, optimizer state, KV
 caches and data batches alike.
+
+Also the offline STABLE index builder CLI —
+``python -m repro.launch.build --n 20000 --quant pq --out DIR`` builds (and
+optionally quantizes) an index over a synthetic hybrid dataset and saves it
+for ``repro.launch.serve --index-dir DIR``.
 """
 from __future__ import annotations
 
@@ -320,3 +325,52 @@ def build_cell(spec: ArchSpec, cell: ShapeCell, mesh: Mesh,
     if spec.family == "recsys":
         return _build_recsys(spec, cell, mesh, overrides)
     raise ValueError(spec.family)
+
+
+# ---------------------------------------------------------------------------
+# Offline STABLE index builder CLI
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    import argparse
+    import time
+
+    from repro.core.help_graph import HelpConfig
+    from repro.core.index import StableIndex
+    from repro.data.synthetic import make_hybrid_dataset
+    from repro.quant import QUANT_MODES, QuantConfig
+
+    ap = argparse.ArgumentParser(description="build + save a STABLE index")
+    ap.add_argument("--out", required=True, help="output index directory")
+    ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--profile", default="sift")
+    ap.add_argument("--attr-dim", type=int, default=5)
+    ap.add_argument("--gamma", type=int, default=24)
+    ap.add_argument("--max-rounds", type=int, default=8)
+    ap.add_argument("--quant", default="none", choices=QUANT_MODES,
+                    help="attach a quantized code store to the index")
+    ap.add_argument("--pq-subspaces", type=int, default=32)
+    args = ap.parse_args()
+
+    ds = make_hybrid_dataset(
+        n=args.n, n_queries=1, profile=args.profile, attr_dim=args.attr_dim,
+        labels_per_dim=3, n_clusters=16, attr_cluster_corr=0.6, seed=0,
+    )
+    t0 = time.time()
+    idx = StableIndex.build(
+        ds.features, ds.attrs,
+        HelpConfig(gamma=args.gamma, gamma_new=6, max_rounds=args.max_rounds),
+        quant_cfg=QuantConfig(mode=args.quant, pq_subspaces=args.pq_subspaces),
+    )
+    idx.save(args.out)
+    quant_note = (
+        f", {idx.quant.code_bytes / 2**20:.1f} MiB codes ({args.quant})"
+        if idx.quant is not None else ""
+    )
+    print(f"built {args.n}×{ds.features.shape[1]} index in {time.time()-t0:.1f}s"
+          f" (α={idx.metric_cfg.alpha:.3f}{quant_note}) → {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,8 +5,14 @@ Single-process serving here; on a mesh the same search path runs through
 ``distributed.search.ShardedStableIndex`` (database sharded over `model`,
 queries over `data`, exact top-k merge).
 
-Example:
+``--quant {none,sq8,pq}`` serves through the quantized two-stage path:
+traversal over compressed codes, exact rerank of the pool head — the
+reported evals/query then counts only full-precision evaluations (code
+evaluations are reported separately).
+
+Examples:
   PYTHONPATH=src python -m repro.launch.serve --n 20000 --batches 8
+  PYTHONPATH=src python -m repro.launch.serve --n 20000 --quant pq
 """
 from __future__ import annotations
 
@@ -23,6 +29,7 @@ def main() -> None:
     from repro.core.index import StableIndex
     from repro.core.routing import RoutingConfig
     from repro.data.synthetic import make_hybrid_dataset
+    from repro.quant import QUANT_MODES, QuantConfig
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--index-dir", default=None,
@@ -35,6 +42,11 @@ def main() -> None:
     ap.add_argument("--batches", type=int, default=8)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--pool", type=int, default=64)
+    ap.add_argument("--quant", default="none", choices=QUANT_MODES,
+                    help="serve over compressed codes + full-precision rerank")
+    ap.add_argument("--rerank", type=int, default=0,
+                    help="pool entries reranked exactly (0 = whole pool)")
+    ap.add_argument("--pq-subspaces", type=int, default=32)
     args = ap.parse_args()
 
     ds = make_hybrid_dataset(
@@ -46,23 +58,35 @@ def main() -> None:
         print(f"loading index from {args.index_dir}")
         idx = StableIndex.load(args.index_dir)
     else:
-        print(f"building index over {args.n} nodes ({args.profile} profile)")
+        print(f"building index over {args.n} nodes ({args.profile} profile, "
+              f"quant={args.quant})")
         t0 = time.perf_counter()
-        idx = StableIndex.build(ds.features, ds.attrs,
-                                HelpConfig(gamma=24, gamma_new=6, max_rounds=8))
+        idx = StableIndex.build(
+            ds.features, ds.attrs,
+            HelpConfig(gamma=24, gamma_new=6, max_rounds=8),
+            quant_cfg=QuantConfig(mode=args.quant,
+                                  pq_subspaces=args.pq_subspaces),
+        )
         print(f"  built in {time.perf_counter()-t0:.1f}s "
               f"(α={idx.metric_cfg.alpha:.3f}, "
               f"ψ={idx.report.psi_history[-1]:.3f})")
+        if idx.quant is not None:
+            f32_mb = idx.features.size * 4 / 2**20
+            code_mb = idx.quant.code_bytes / 2**20
+            print(f"  codes: {code_mb:.1f} MiB vs {f32_mb:.1f} MiB f32 "
+                  f"({f32_mb/code_mb:.0f}× compression)")
         if args.save_index:
             idx.save(args.save_index)
             print(f"  saved to {args.save_index}")
 
+    quant_mode = idx.quant.cfg.mode if idx.quant is not None else "none"
     cfg = RoutingConfig(k=args.k, pool_size=args.pool,
-                        pioneer_size=max(4, args.pool // 8))
+                        pioneer_size=max(4, args.pool // 8),
+                        quant_mode=quant_mode, rerank_size=args.rerank)
     idx.search(ds.query_features[: args.batch],
                ds.query_attrs[: args.batch], args.k, cfg)  # warm compile
 
-    lat, recalls, evals = [], [], 0
+    lat, recalls, evals, code_evals = [], [], 0, 0
     for b in range(args.batches):
         sl = slice(b * args.batch, (b + 1) * args.batch)
         qv, qa = ds.query_features[sl], ds.query_attrs[sl]
@@ -71,6 +95,7 @@ def main() -> None:
         jax.block_until_ready(res.ids)
         lat.append(time.perf_counter() - t0)
         evals += int(res.n_dist_evals)
+        code_evals += int(res.n_code_evals)
         truth = brute_force_hybrid(ds.features, ds.attrs, qv, qa, args.k)
         recalls.append(recall_at_k(res.ids, truth.ids, args.k))
 
@@ -80,7 +105,8 @@ def main() -> None:
           f"p50={np.percentile(lat_ms, 50):.1f}ms "
           f"p99={np.percentile(lat_ms, 99):.1f}ms  "
           f"Recall@{args.k}={np.mean(recalls):.3f}  "
-          f"evals/query={evals/total_q:.0f}")
+          f"evals/query={evals/total_q:.0f}  "
+          f"code_evals/query={code_evals/total_q:.0f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,69 @@
+"""Quantized search subsystem: compressed-code scanning + exact rerank.
+
+STABLE's hot path is fused AUTO distance evaluation over full-precision f32
+feature vectors; at serving scale the HBM read of those vectors is the
+throughput ceiling. This package adds the standard production counter-move
+(cf. HQANN, the FANNS survey's compressed-index taxonomy): scan *compressed*
+codes to build an oversized candidate pool, then rerank a small top slice at
+full precision — trading a bounded recall loss for a large cut in
+full-precision distance evaluations and memory traffic.
+
+Codecs
+------
+``sq8``  — int8 per-dimension affine scalar quantization (4× compression).
+           Gathered codes are dequantized in-register and scored with the
+           exact fused-AUTO math; the saving is pure memory traffic.
+``pq``   — product quantization: S subspaces × 256 K-means centroids
+           (trained in JAX, ``pq.pq_train``), a vector compresses to S bytes
+           (e.g. 64× at M=128, S=8). Distances use asymmetric distance
+           computation (ADC): a per-query (S, 256) LUT of partial squared
+           distances, S lookups+adds per candidate — never touching f32.
+
+Layers
+------
+* ``sq`` / ``pq``          — codec math (encode/decode/train/LUT).
+* ``store.QuantizedVectors`` — codes + codec state + persistence; produces
+  the flat operand tuple the jitted router consumes.
+* ``kernels/adc_scan``     — Pallas kernel fusing the ADC scan with the AUTO
+  attribute-consistency penalty (one-hot MXU contraction; see its docstring).
+* ``core/routing``         — ``RoutingConfig(quant_mode=..., rerank_size=...)``
+  drives graph traversal over codes and reranks the pool top slice with
+  exact fused distances; ``SearchResult.n_dist_evals`` then counts *only*
+  full-precision evaluations (``n_code_evals`` counts the compressed ones).
+
+Typical use::
+
+    from repro.core.index import StableIndex
+    from repro.quant import QuantConfig
+
+    idx = StableIndex.build(features, attrs, quant_cfg=QuantConfig(mode="pq"))
+    res = idx.search(qv, qa, k=10)           # code scan + exact rerank
+    res.n_dist_evals                         # == rerank evals only
+
+Follow-ons tracked in ROADMAP.md: OPQ rotation, 4-bit PQ, quantized
+sharded rerank.
+"""
+from repro.kernels.adc_scan.ops import adc_scan, adc_scan_topk
+from repro.quant.pq import (
+    PQCodebook, adc_gathered_sqdist, adc_lut, pq_decode, pq_encode, pq_train,
+)
+from repro.quant.sq import SQParams, sq8_decode, sq8_encode, sq8_train
+from repro.quant.store import QUANT_MODES, QuantConfig, QuantizedVectors
+
+__all__ = [
+    "QUANT_MODES",
+    "QuantConfig",
+    "QuantizedVectors",
+    "PQCodebook",
+    "SQParams",
+    "adc_gathered_sqdist",
+    "adc_lut",
+    "adc_scan",
+    "adc_scan_topk",
+    "pq_decode",
+    "pq_encode",
+    "pq_train",
+    "sq8_decode",
+    "sq8_encode",
+    "sq8_train",
+]

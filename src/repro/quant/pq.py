@@ -1,0 +1,169 @@
+"""Product quantization codec: per-subspace K-means codebooks, trained in JAX.
+
+The M-dim feature space is split into S subspaces of D_sub = ceil(M/S) dims
+(zero-padded to a multiple of S); each subspace gets its own 256-centroid
+codebook via Lloyd's K-means, so a vector compresses to S bytes. Asymmetric
+distance computation (ADC) precomputes, per query, a (S, 256) look-up table of
+partial squared distances ‖q_s − c_{s,j}‖²; the squared distance to any code
+is then S table lookups and adds — never touching the f32 vector. Padding
+dims are zero in both query and centroids, so they contribute nothing.
+
+Training runs per-subspace on a bounded sample (K-means over ≤ ``n_samples``
+rows) with empty clusters re-seeded from the previous centroid — the standard
+PQ recipe (Jégou et al., TPAMI'11) sized so build time stays index-build-
+dominated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class PQCodebook:
+    """Trained per-subspace centroids plus original-dimension metadata."""
+
+    centroids: Array  # (S, K, D_sub) f32, zero-padded beyond `dim`
+    dim: int  # original feature dimension M (before padding)
+
+    @property
+    def n_subspaces(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def n_centroids(self) -> int:
+        return self.centroids.shape[1]
+
+    @property
+    def sub_dim(self) -> int:
+        return self.centroids.shape[2]
+
+
+def _split_subspaces(x: Array, n_subspaces: int) -> Array:
+    """(N, M) → (N, S, D_sub) with zero padding up to S · D_sub."""
+    n, m = x.shape
+    sub = -(-m // n_subspaces)  # ceil
+    pad = n_subspaces * sub - m
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    return x.reshape(n, n_subspaces, sub)
+
+
+def _pairwise_sqdist(a: Array, b: Array) -> Array:
+    """(N, D) × (K, D) → (N, K) squared distances, MXU decomposition.
+
+    Single source of truth for train/encode/LUT so the three stages can
+    never drift numerically.
+    """
+    return (
+        (a * a).sum(-1)[:, None]
+        + (b * b).sum(-1)[None, :]
+        - 2.0 * (a @ b.T)
+    )
+
+
+@partial(jax.jit, static_argnames=("n_iters",))
+def _kmeans_one_subspace(x: Array, init: Array, n_iters: int) -> Array:
+    """Lloyd iterations for one subspace: x (N, D), init (K, D) → (K, D)."""
+    k = init.shape[0]
+
+    def step(_, cents):
+        d2 = _pairwise_sqdist(x, cents)
+        assign = jnp.argmin(d2, axis=1)
+        onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)  # (N, K)
+        counts = onehot.sum(0)  # (K,)
+        sums = onehot.T @ x  # (K, D)
+        new = sums / jnp.maximum(counts, 1.0)[:, None]
+        # empty clusters keep their previous centroid (re-seed-in-place)
+        return jnp.where((counts > 0.5)[:, None], new, cents)
+
+    return jax.lax.fori_loop(0, n_iters, step, init)
+
+
+def pq_train(
+    x: Array,
+    n_subspaces: int = 8,
+    n_centroids: int = 256,
+    n_iters: int = 15,
+    n_samples: int = 16384,
+    seed: int = 0,
+) -> PQCodebook:
+    """Train S independent K-means codebooks over (a sample of) the database."""
+    x = jnp.asarray(x, jnp.float32)
+    n, m = x.shape
+    rng = np.random.default_rng(seed)
+    take = min(n, n_samples)
+    sample_idx = rng.choice(n, size=take, replace=False)
+    xs = _split_subspaces(x[jnp.asarray(sample_idx)], n_subspaces)  # (take, S, D)
+
+    cents = []
+    for s in range(n_subspaces):
+        # init from data points (with replacement iff the sample is tiny)
+        init_idx = rng.choice(take, size=n_centroids, replace=take < n_centroids)
+        init = xs[jnp.asarray(init_idx), s, :]
+        cents.append(_kmeans_one_subspace(xs[:, s, :], init, n_iters))
+    return PQCodebook(centroids=jnp.stack(cents), dim=m)
+
+
+@jax.jit
+def _encode_block(xs: Array, centroids: Array) -> Array:
+    """xs (N, S, D), centroids (S, K, D) → (N, S) int32 nearest-centroid ids."""
+
+    def one(s_x, s_c):  # (N, D), (K, D)
+        return jnp.argmin(_pairwise_sqdist(s_x, s_c), axis=1).astype(jnp.int32)
+
+    return jax.vmap(one, in_axes=(1, 0), out_axes=1)(xs, centroids)
+
+
+def pq_encode(x: Array, codebook: PQCodebook, block: int = 8192) -> Array:
+    """Encode (N, M) f32 → (N, S) int32 codes (values < 256), blocked over N."""
+    x = jnp.asarray(x, jnp.float32)
+    n = x.shape[0]
+    xs = _split_subspaces(x, codebook.n_subspaces)
+    out = []
+    for i in range(0, n, block):
+        out.append(_encode_block(xs[i : i + block], codebook.centroids))
+    return jnp.concatenate(out, axis=0) if len(out) > 1 else out[0]
+
+
+def pq_decode(codes: Array, codebook: PQCodebook) -> Array:
+    """Decode (N, S) codes → (N, M) f32 centroid reconstructions."""
+    gathered = jax.vmap(
+        lambda c, cb: cb[c], in_axes=(1, 0), out_axes=1
+    )(codes, codebook.centroids)  # (N, S, D)
+    n = codes.shape[0]
+    return gathered.reshape(n, -1)[:, : codebook.dim]
+
+
+@jax.jit
+def _lut_jit(qs: Array, centroids: Array) -> Array:
+    # qs (B, S, D), centroids (S, K, D) → (B, S, K)
+    return jax.vmap(_pairwise_sqdist, in_axes=(1, 0), out_axes=1)(qs, centroids)
+
+
+def adc_lut(qv: Array, codebook: PQCodebook) -> Array:
+    """Per-query ADC tables: (B, S, K) partial squared distances."""
+    qv = jnp.asarray(qv, jnp.float32)
+    qs = _split_subspaces(qv, codebook.n_subspaces)
+    return jnp.maximum(_lut_jit(qs, codebook.centroids), 0.0)
+
+
+def adc_gathered_sqdist(lut: Array, codes: Array) -> Array:
+    """ADC squared distances for per-query gathered codes.
+
+    lut (B, S, K), codes (B, C, S) → (B, C): Σ_s lut[b, s, codes[b, c, s]].
+    Used by the routing inner loop where each query expands its own
+    candidate set (the full-scan analog is the ``adc_scan`` Pallas kernel).
+    """
+
+    def one(lut_b, codes_b):  # (S, K), (C, S)
+        g = jnp.take_along_axis(lut_b, codes_b.T, axis=1)  # (S, C)
+        return g.sum(axis=0)
+
+    return jax.vmap(one)(lut, codes)

@@ -1,0 +1,116 @@
+"""Quantized vector store: codec selection, training, persistence.
+
+``QuantizedVectors`` owns whatever a codec needs at search time (codes +
+dequantization parameters or codebooks) and produces the flat array operand
+tuple the jitted router consumes (`routing_operand`). Codec choice is a
+config string so the index/serving layers stay codec-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.pq import PQCodebook, adc_lut, pq_encode, pq_train
+from repro.quant.sq import SQParams, sq8_encode
+
+Array = jax.Array
+
+#: codec modes shared by RoutingConfig.quant_mode and the launch flags.
+QUANT_MODES = ("none", "sq8", "pq")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    mode: str = "none"
+    pq_subspaces: int = 8
+    pq_centroids: int = 256
+    pq_train_iters: int = 15
+    pq_train_samples: int = 16384
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.mode not in QUANT_MODES:
+            raise ValueError(f"unknown quant mode {self.mode!r} (have {QUANT_MODES})")
+
+
+@dataclasses.dataclass
+class QuantizedVectors:
+    """Codes + codec state for one database; ``None`` stands for mode='none'."""
+
+    cfg: QuantConfig
+    codes: Array  # sq8: (N, M) int8 · pq: (N, S) int32 (values < 256)
+    sq_params: Optional[SQParams] = None
+    codebook: Optional[PQCodebook] = None
+
+    @classmethod
+    def build(cls, features, cfg: QuantConfig) -> Optional["QuantizedVectors"]:
+        """Train the configured codec over the database; None for mode='none'."""
+        if cfg.mode == "none":
+            return None
+        features = jnp.asarray(features, jnp.float32)
+        if cfg.mode == "sq8":
+            codes, params = sq8_encode(features)
+            return cls(cfg=cfg, codes=codes, sq_params=params)
+        codebook = pq_train(
+            features,
+            n_subspaces=cfg.pq_subspaces,
+            n_centroids=cfg.pq_centroids,
+            n_iters=cfg.pq_train_iters,
+            n_samples=cfg.pq_train_samples,
+            seed=cfg.seed,
+        )
+        codes = pq_encode(features, codebook)
+        return cls(cfg=cfg, codes=codes, codebook=codebook)
+
+    def routing_operand(self, qv: Array) -> tuple[Array, ...]:
+        """Flat array tuple for ``routing``'s jitted search (query-dependent
+        for PQ: the per-query ADC tables are computed here, outside the jit
+        cache key)."""
+        if self.cfg.mode == "sq8":
+            return (self.codes, self.sq_params.scale, self.sq_params.zero)
+        return (self.codes, adc_lut(qv, self.codebook))
+
+    @property
+    def code_bytes(self) -> int:
+        return int(self.codes.size * self.codes.dtype.itemsize)
+
+    # -- persistence (piggybacks on StableIndex.save/load) -------------------
+
+    def save(self, path: str) -> dict:
+        """Write code/codebook arrays under ``path``; returns meta json dict."""
+        np.save(os.path.join(path, "quant_codes.npy"), np.asarray(self.codes))
+        if self.sq_params is not None:
+            np.save(os.path.join(path, "quant_sq_scale.npy"),
+                    np.asarray(self.sq_params.scale))
+            np.save(os.path.join(path, "quant_sq_zero.npy"),
+                    np.asarray(self.sq_params.zero))
+        if self.codebook is not None:
+            np.save(os.path.join(path, "quant_centroids.npy"),
+                    np.asarray(self.codebook.centroids))
+        return {"cfg": dataclasses.asdict(self.cfg),
+                "dim": self.codebook.dim if self.codebook else None}
+
+    @classmethod
+    def load(cls, path: str, meta: dict) -> "QuantizedVectors":
+        cfg = QuantConfig(**meta["cfg"])
+        codes = jnp.asarray(np.load(os.path.join(path, "quant_codes.npy")))
+        sq_params = None
+        codebook = None
+        if cfg.mode == "sq8":
+            sq_params = SQParams(
+                scale=jnp.asarray(np.load(os.path.join(path, "quant_sq_scale.npy"))),
+                zero=jnp.asarray(np.load(os.path.join(path, "quant_sq_zero.npy"))),
+            )
+        else:
+            codebook = PQCodebook(
+                centroids=jnp.asarray(
+                    np.load(os.path.join(path, "quant_centroids.npy"))
+                ),
+                dim=int(meta["dim"]),
+            )
+        return cls(cfg=cfg, codes=codes, sq_params=sq_params, codebook=codebook)

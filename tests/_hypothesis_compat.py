@@ -1,0 +1,67 @@
+"""Deterministic stand-in for the subset of hypothesis used by the tests.
+
+The container image ships without ``hypothesis``; rather than skipping the
+property tests wholesale, this shim re-runs each property against a fixed
+pseudo-random sweep of examples drawn from the declared strategies. It covers
+exactly the API surface the test-suite uses — ``given``, ``settings`` and the
+``st.integers``/``st.floats`` strategies — and intentionally nothing more.
+
+Usage (in test modules):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:  # container has no hypothesis — deterministic fallback
+        from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample
+
+
+class st:  # noqa: N801 — mirrors `hypothesis.strategies as st`
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        n_examples = getattr(fn, "_compat_max_examples", DEFAULT_MAX_EXAMPLES)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = np.random.default_rng(0)
+            for _ in range(n_examples):
+                drawn = [s.sample(rng) for s in strats]
+                fn(*args, *drawn, **kwargs)
+
+        # Hide the strategy-supplied params from pytest's fixture resolution:
+        # the wrapper fills the trailing len(strats) args itself.
+        params = list(inspect.signature(fn).parameters.values())
+        wrapper.__signature__ = inspect.Signature(params[: len(params) - len(strats)])
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

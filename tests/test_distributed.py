@@ -127,7 +127,8 @@ def test_ring_collective_matmuls_match_psum():
         def f_psum(x, w):
             return jax.lax.psum(x @ w, "model")
 
-        sm = lambda f: jax.shard_map(
+        from repro.distributed.sharding import shard_map
+        sm = lambda f: shard_map(
             f, mesh=mesh, in_specs=(P(None, "model"), P("model", None)),
             out_specs=P(None, None), check_vma=False)
         y1 = sm(f_ring)(x, w)
@@ -142,7 +143,7 @@ def test_ring_collective_matmuls_match_psum():
             i = jax.lax.axis_index("model")
             return jax.lax.dynamic_slice_in_dim(full, i * 2, 2, axis=0)
 
-        sm2 = lambda f: jax.shard_map(
+        sm2 = lambda f: shard_map(
             f, mesh=mesh, in_specs=(P(None, "model"), P("model", None)),
             out_specs=P("model", None), check_vma=False)
         z1 = sm2(g_ring)(x, w)
@@ -239,7 +240,8 @@ def test_ring_partitioned_gnn_aggregate_matches_segment_sum():
         def f(m, dd):
             return ring_partitioned_aggregate(m, dd, n_nodes, "model")
 
-        got = jax.shard_map(
+        from repro.distributed.sharding import shard_map
+        got = shard_map(
             f, mesh=mesh, in_specs=(P("model", None), P("model")),
             out_specs=P("model", None), check_vma=False)(msgs, dst)
         err = float(jnp.abs(got - want).max() / (jnp.abs(want).max() + 1e-9))

@@ -1,0 +1,231 @@
+"""Quantized search subsystem: codec roundtrips, ADC kernel parity
+(interpret mode), quantized index persistence, end-to-end recall."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import auto as auto_mod
+from repro.core.auto import MetricConfig
+from repro.core.baselines import brute_force_hybrid, recall_at_k
+from repro.core.help_graph import HelpConfig
+from repro.core.index import StableIndex
+from repro.core.routing import RoutingConfig
+from repro.data.synthetic import make_hybrid_dataset
+from repro.kernels.adc_scan.adc_scan import adc_scan_scores
+from repro.kernels.adc_scan.ref import adc_scan_ref
+from repro.quant import (
+    QuantConfig,
+    QuantizedVectors,
+    adc_gathered_sqdist,
+    adc_lut,
+    pq_decode,
+    pq_encode,
+    pq_train,
+    sq8_decode,
+    sq8_encode,
+)
+
+
+@pytest.fixture(scope="module")
+def small_ds():
+    return make_hybrid_dataset(
+        n=4000, n_queries=32, profile="sift", attr_dim=5, labels_per_dim=3,
+        n_clusters=16, attr_cluster_corr=0.6, seed=0,
+    )
+
+
+@pytest.fixture(scope="module")
+def small_index(small_ds):
+    return StableIndex.build(
+        small_ds.features, small_ds.attrs,
+        HelpConfig(gamma=16, gamma_new=4, max_rounds=4,
+                   quality_sample=64, node_block=1024),
+    )
+
+
+class TestSQ8Codec:
+    def test_roundtrip_error_bounded_by_step(self):
+        rng = np.random.default_rng(0)
+        x = (rng.normal(size=(512, 32)) * rng.uniform(0.1, 30, 32)).astype(
+            np.float32
+        )
+        codes, params = sq8_encode(x)
+        assert codes.dtype == jnp.int8
+        dec = np.asarray(sq8_decode(codes, params))
+        # affine rounding: per-dim error ≤ half a quantization step
+        step = np.asarray(params.scale)
+        assert (np.abs(dec - x) <= 0.5 * step[None, :] + 1e-6).all()
+
+    def test_range_endpoints_exact(self):
+        x = np.array([[0.0], [255.0]], np.float32)
+        codes, params = sq8_encode(x)
+        dec = np.asarray(sq8_decode(codes, params))
+        np.testing.assert_allclose(dec[:, 0], [0.0, 255.0], atol=1e-4)
+
+
+class TestPQCodec:
+    def test_encode_shapes_and_reconstruction(self):
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=(2000, 48)).astype(np.float32)
+        cb = pq_train(x, n_subspaces=8, n_iters=8, n_samples=1000, seed=0)
+        codes = pq_encode(x, cb)
+        assert codes.shape == (2000, 8)
+        assert int(codes.max()) < 256 and int(codes.min()) >= 0
+        dec = np.asarray(pq_decode(codes, cb))
+        assert dec.shape == x.shape
+        # reconstruction must beat the trivial zero codebook by a wide margin
+        rel_mse = np.mean((dec - x) ** 2) / np.mean(x**2)
+        assert rel_mse < 0.5, rel_mse
+
+    def test_ragged_dim_zero_padded(self):
+        """M not divisible by S: padding dims must not perturb distances."""
+        rng = np.random.default_rng(2)
+        x = rng.normal(size=(500, 30)).astype(np.float32)  # 30 / 8 ragged
+        cb = pq_train(x, n_subspaces=8, n_iters=5, n_samples=500, seed=0)
+        codes = pq_encode(x, cb)
+        q = rng.normal(size=(3, 30)).astype(np.float32)
+        lut = adc_lut(q, cb)
+        d_adc = np.asarray(
+            adc_gathered_sqdist(lut, jnp.broadcast_to(codes[None], (3,) + codes.shape))
+        )
+        dec = np.asarray(pq_decode(codes, cb))
+        d_exact = ((q[:, None, :] - dec[None]) ** 2).sum(-1)
+        np.testing.assert_allclose(d_adc, d_exact, rtol=1e-4, atol=1e-3)
+
+
+class TestADCScanKernel:
+    @pytest.mark.parametrize("b,n,s,l", [
+        (4, 300, 8, 5),          # ragged N, everything padded
+        (8, 256, 16, 7),         # exact blocks
+        (1, 1, 4, 1),            # degenerate
+        (9, 513, 8, 3),          # ragged in B and N
+    ])
+    def test_matches_ref(self, b, n, s, l):
+        rng = np.random.default_rng(n + s)
+        lut = jnp.asarray(rng.uniform(0, 4, size=(b, s, 256)), jnp.float32)
+        codes = jnp.asarray(rng.integers(0, 256, size=(n, s)), jnp.int32)
+        qa = jnp.asarray(rng.integers(0, 4, size=(b, l)), jnp.int32)
+        xa = jnp.asarray(rng.integers(0, 4, size=(n, l)), jnp.int32)
+        got = adc_scan_scores(lut, codes, qa, xa, alpha=0.8, interpret=True)
+        want = adc_scan_ref(lut, codes, qa, xa, alpha=0.8)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-5
+        )
+
+    def test_l2_mode_and_mask(self):
+        rng = np.random.default_rng(3)
+        lut = jnp.asarray(rng.uniform(0, 2, size=(5, 8, 256)), jnp.float32)
+        codes = jnp.asarray(rng.integers(0, 256, size=(100, 8)), jnp.int32)
+        qa = jnp.asarray(rng.integers(0, 3, size=(5, 4)), jnp.int32)
+        xa = jnp.asarray(rng.integers(0, 3, size=(100, 4)), jnp.int32)
+        mask = jnp.asarray(rng.integers(0, 2, size=(5, 4)), jnp.int32)
+        for mode, m in (("l2", None), ("auto", mask)):
+            got = adc_scan_scores(
+                lut, codes, qa, xa, alpha=1.3, mode=mode, mask=m, interpret=True
+            )
+            want = adc_scan_ref(lut, codes, qa, xa, alpha=1.3, mode=mode, mask=m)
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-5
+            )
+
+    def test_consistent_with_exact_on_decoded_vectors(self):
+        """ADC fused scores == exact fused scores of the reconstruction."""
+        rng = np.random.default_rng(4)
+        x = rng.normal(size=(400, 32)).astype(np.float32)
+        cb = pq_train(x, n_subspaces=8, n_iters=8, n_samples=400, seed=0)
+        codes = pq_encode(x, cb)
+        dec = pq_decode(codes, cb)
+        q = rng.normal(size=(6, 32)).astype(np.float32)
+        qa = jnp.asarray(rng.integers(0, 3, size=(6, 5)), jnp.int32)
+        xa = jnp.asarray(rng.integers(0, 3, size=(400, 5)), jnp.int32)
+        lut = adc_lut(q, cb)
+        got = adc_scan_scores(lut, codes, qa, xa, alpha=0.9, interpret=True)
+        want = auto_mod.brute_fused_sqdist(
+            jnp.asarray(q), qa, dec, xa, MetricConfig(mode="auto", alpha=0.9)
+        )
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-2
+        )
+
+
+class TestQuantizedIndex:
+    @pytest.mark.parametrize("mode", ["sq8", "pq"])
+    def test_save_load_roundtrip(self, small_ds, tmp_path, mode):
+        idx = StableIndex.build(
+            small_ds.features[:1000], small_ds.attrs[:1000],
+            HelpConfig(gamma=12, gamma_new=4, max_rounds=2,
+                       quality_sample=64, node_block=512),
+            quant_cfg=QuantConfig(mode=mode, pq_subspaces=8, pq_train_iters=5),
+        )
+        path = os.path.join(tmp_path, f"idx_{mode}")
+        idx.save(path)
+        idx2 = StableIndex.load(path)
+        assert idx2.quant is not None and idx2.quant.cfg.mode == mode
+        np.testing.assert_array_equal(
+            np.asarray(idx.quant.codes), np.asarray(idx2.quant.codes)
+        )
+        if mode == "sq8":
+            np.testing.assert_allclose(
+                np.asarray(idx.quant.sq_params.scale),
+                np.asarray(idx2.quant.sq_params.scale),
+            )
+        else:
+            np.testing.assert_allclose(
+                np.asarray(idx.quant.codebook.centroids),
+                np.asarray(idx2.quant.codebook.centroids),
+            )
+        # loaded index must search identically to the in-memory one
+        r1 = idx.search(small_ds.query_features, small_ds.query_attrs, 10)
+        r2 = idx2.search(small_ds.query_features, small_ds.query_attrs, 10)
+        np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+
+    def test_unquantized_save_load_unaffected(self, small_index, tmp_path):
+        path = os.path.join(tmp_path, "idx_plain")
+        small_index.save(path)
+        idx2 = StableIndex.load(path)
+        assert idx2.quant is None
+
+    @pytest.mark.parametrize("mode", ["sq8", "pq"])
+    def test_recall_within_3_points_and_fewer_fp_evals(self, small_ds,
+                                                       small_index, mode):
+        ds = small_ds
+        truth = brute_force_hybrid(
+            ds.features, ds.attrs, ds.query_features, ds.query_attrs, 10
+        )
+        cfg = RoutingConfig(k=10, pool_size=64, pioneer_size=8)
+        exact = small_index.search(ds.query_features, ds.query_attrs, 10, cfg)
+        r_exact = recall_at_k(exact.ids, truth.ids, 10)
+
+        quant = QuantizedVectors.build(
+            ds.features, QuantConfig(mode=mode, pq_subspaces=16)
+        )
+        idx_q = dataclasses.replace(small_index, quant=quant)
+        qcfg = dataclasses.replace(cfg, quant_mode=mode)
+        res = idx_q.search(ds.query_features, ds.query_attrs, 10, qcfg)
+        r_quant = recall_at_k(res.ids, truth.ids, 10)
+
+        assert r_quant >= r_exact - 0.03, (mode, r_exact, r_quant)
+        assert int(res.n_dist_evals) < int(exact.n_dist_evals)
+        assert int(res.n_code_evals) > 0
+        assert int(exact.n_code_evals) == 0
+
+    def test_rerank_size_bounds_fp_evals(self, small_ds, small_index):
+        quant = QuantizedVectors.build(small_ds.features, QuantConfig(mode="sq8"))
+        idx_q = dataclasses.replace(small_index, quant=quant)
+        nq = small_ds.query_features.shape[0]
+        cfg = RoutingConfig(k=10, pool_size=64, pioneer_size=8,
+                            quant_mode="sq8", rerank_size=16)
+        res = idx_q.search(small_ds.query_features, small_ds.query_attrs, 10, cfg)
+        assert int(res.n_dist_evals) <= 16 * nq
+
+    def test_bad_configs_rejected(self):
+        with pytest.raises(ValueError):
+            RoutingConfig(quant_mode="fp4")
+        with pytest.raises(ValueError):
+            RoutingConfig(k=10, pool_size=64, rerank_size=4)  # < k
+        with pytest.raises(ValueError):
+            QuantConfig(mode="int2")

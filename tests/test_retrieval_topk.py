@@ -3,7 +3,10 @@ exactness vs single-stage, across shard counts and metric modes."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis — deterministic fallback
+    from _hypothesis_compat import given, settings, st
 
 from repro.models.recsys import hybrid_retrieval_topk
 
