@@ -6,7 +6,6 @@ run prints ``benchmark,name,metric,value`` rows.
 """
 from __future__ import annotations
 
-import dataclasses
 import os
 import time
 from functools import lru_cache
@@ -15,11 +14,12 @@ from typing import Optional
 import jax
 import numpy as np
 
+from repro.api import Engine, QueryBatch, SearchParams
 from repro.core import auto as auto_mod
 from repro.core.auto import MetricConfig
 from repro.core.baselines import brute_force_hybrid, recall_at_k
 from repro.core.help_graph import HelpConfig, build_help_graph
-from repro.core.routing import RoutingConfig, search
+from repro.core.routing import RoutingConfig
 from repro.data.synthetic import make_hybrid_dataset
 
 BENCH_DIR = os.environ.get(
@@ -76,25 +76,53 @@ def built_index(ds, mode: str = "auto", alpha: Optional[float] = None,
     return out
 
 
+def built_engine(ds, mode: str = "auto", quant=None, **kw) -> Engine:
+    """Engine over the cached prebuilt graph/metric for one dataset."""
+    mc, graph, _, stats = built_index(ds, mode, **kw)
+    return Engine.from_parts(
+        ds.features, ds.attrs, graph, mc, stats=stats, quant=quant
+    )
+
+
 def ground_truth(ds, k: int = 10):
     return brute_force_hybrid(
         ds.features, ds.attrs, ds.query_features, ds.query_attrs, k
     )
 
 
-def timed_search(ds, mc, graph, pool: int, k: int = 10, repeats: int = 3,
-                 search_fn=search, **kw):
-    """Returns (recall-ready result, qps, dist_evals). First call compiles;
-    timing excludes compilation (second+ calls)."""
-    cfg = RoutingConfig(k=k, pool_size=pool, pioneer_size=max(4, pool // 8), **kw)
-    res = search_fn(ds.features, ds.attrs, graph, ds.query_features,
-                    ds.query_attrs, mc, cfg)
+def timed_search(ds, engine: Engine, pool: int, k: int = 10, repeats: int = 3,
+                 search_fn=None, **params_kw):
+    """Engine-path timing: (recall-ready result, qps, total dist evals).
+    First call compiles; timing excludes compilation (second+ calls).
+
+    ``search_fn`` keeps the low-level escape hatch for routing-ablation
+    variants (``search_greedy_only`` / ``search_two_stage``) that are not
+    engine backends; everything else goes through ``Engine.search``.
+    """
+    if search_fn is not None:
+        idx = engine.index
+        cfg = RoutingConfig(k=k, pool_size=pool,
+                            pioneer_size=max(4, pool // 8), **params_kw)
+
+        def run():
+            return search_fn(idx.features, idx.attrs, idx.graph,
+                             ds.query_features, ds.query_attrs,
+                             idx.metric_cfg, cfg)
+    else:
+        batch = QueryBatch.match(ds.query_features, ds.query_attrs)
+        params = SearchParams(k=k, pool_size=pool,
+                              pioneer_size=max(4, pool // 8),
+                              backend="graph", **params_kw)
+
+        def run():
+            return engine.search(batch, params)
+
+    res = run()
     jax.block_until_ready(res.ids)
     t0 = time.perf_counter()
     for _ in range(repeats):
-        res = search_fn(ds.features, ds.attrs, graph, ds.query_features,
-                        ds.query_attrs, mc, cfg)
+        res = run()
         jax.block_until_ready(res.ids)
     dt = (time.perf_counter() - t0) / repeats
     qps = ds.query_features.shape[0] / dt
-    return res, qps, int(res.n_dist_evals)
+    return res, qps, res.total_dist_evals

@@ -5,7 +5,6 @@ rows and a CSV under artifacts/bench/.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 
 import jax
@@ -13,16 +12,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import (
-    built_index, dataset, emit, flush_csv, ground_truth, timed_search,
+    built_engine, built_index, dataset, emit, flush_csv, ground_truth,
+    timed_search,
 )
+from repro.api import QueryBatch, SearchParams
 from repro.core import auto as auto_mod
 from repro.core.auto import MetricConfig
 from repro.core.baselines import (
     brute_force_hybrid, post_filter_search, pre_filter_search, recall_at_k,
 )
-from repro.core.routing import (
-    RoutingConfig, search, search_greedy_only, search_two_stage,
-)
+from repro.core.routing import search_greedy_only, search_two_stage
 from repro.data.synthetic import PROFILES, make_hybrid_dataset
 
 
@@ -63,24 +62,22 @@ def fig3_qps_recall(fast: bool = True) -> None:
             truth = ground_truth(ds)
             name = f"{profile}-{L}-3"
 
-            mc, graph, _, stats = built_index(ds, "auto")
+            eng = built_engine(ds, "auto")
             for pool in pools:
-                res, qps, evals = timed_search(ds, mc, graph, pool)
+                res, qps, evals = timed_search(ds, eng, pool)
                 r = recall_at_k(res.ids, truth.ids, 10)
                 emit(bench, f"{name}/stable/pool{pool}", "recall", round(r, 4))
                 emit(bench, f"{name}/stable/pool{pool}", "qps", round(qps, 1))
                 emit(bench, f"{name}/stable/pool{pool}", "evals", evals)
 
             # additive fusion ("w/o AUTO" — static linear metric)
-            mc_add, graph_add, _, _ = built_index(ds, "additive")
-            res, qps, evals = timed_search(ds, mc_add, graph_add, 64)
+            res, qps, evals = timed_search(ds, built_engine(ds, "additive"), 64)
             emit(bench, f"{name}/additive/pool64", "recall",
                  round(recall_at_k(res.ids, truth.ids, 10), 4))
             emit(bench, f"{name}/additive/pool64", "qps", round(qps, 1))
 
             # NHQ-style static-weight Hamming fusion
-            mc_nhq, graph_nhq, _, _ = built_index(ds, "nhq")
-            res, qps, evals = timed_search(ds, mc_nhq, graph_nhq, 64)
+            res, qps, evals = timed_search(ds, built_engine(ds, "nhq"), 64)
             emit(bench, f"{name}/nhq/pool64", "recall",
                  round(recall_at_k(res.ids, truth.ids, 10), 4))
             emit(bench, f"{name}/nhq/pool64", "qps", round(qps, 1))
@@ -106,7 +103,7 @@ def fig3_qps_recall(fast: bool = True) -> None:
             )
             emit(bench, f"{name}/prefilter", "recall",
                  round(recall_at_k(res.ids, truth.ids, 10), 4))
-            emit(bench, f"{name}/prefilter", "evals", int(res.n_dist_evals))
+            emit(bench, f"{name}/prefilter", "evals", res.total_dist_evals)
     flush_csv(bench)
 
 
@@ -125,13 +122,11 @@ def tab4_cardinality_robustness(fast: bool = True) -> None:
     for L, labels, theta in grid:
         ds = dataset("sift", L, labels, n, 128)
         truth = ground_truth(ds)
-        mc, graph, _, _ = built_index(ds, "auto")
-        res, qps, _ = timed_search(ds, mc, graph, 64)
+        res, qps, _ = timed_search(ds, built_engine(ds, "auto"), 64)
         emit(bench, f"stable/theta{theta}", "recall",
              round(recall_at_k(res.ids, truth.ids, 10), 4))
         emit(bench, f"stable/theta{theta}", "qps", round(qps, 1))
-        mc_a, graph_a, _, _ = built_index(ds, "additive")
-        res, _, _ = timed_search(ds, mc_a, graph_a, 64)
+        res, _, _ = timed_search(ds, built_engine(ds, "additive"), 64)
         emit(bench, f"additive/theta{theta}", "recall",
              round(recall_at_k(res.ids, truth.ids, 10), 4))
     flush_csv(bench)
@@ -147,21 +142,20 @@ def fig5_selectivity(fast: bool = True) -> None:
     L = 7
     n = 10000 if fast else 50000
     ds = dataset("sift", L, 3, n, 128)
-    mc, graph, _, _ = built_index(ds, "auto")
+    eng = built_engine(ds, "auto")
+    params = SearchParams(k=10, pool_size=64, pioneer_size=8, backend="graph")
     for f_active in range(1, L + 1):
-        mask = np.zeros((ds.query_attrs.shape[0], L), np.int32)
-        mask[:, :f_active] = 1
-        m = jnp.asarray(mask)
+        # subset query declared via predicates: first F attrs active
+        batch = QueryBatch.match(ds.query_features, ds.query_attrs,
+                                 active=range(f_active))
         truth = brute_force_hybrid(
-            ds.features, ds.attrs, ds.query_features, ds.query_attrs, 10, mask=m
+            ds.features, ds.attrs, ds.query_features, ds.query_attrs, 10,
+            mask=jnp.asarray(batch.mask),
         )
-        cfg = RoutingConfig(k=10, pool_size=64, pioneer_size=8)
         t0 = time.perf_counter()
-        res = search(ds.features, ds.attrs, graph, ds.query_features,
-                     ds.query_attrs, mc, cfg, mask=m)
+        res = eng.search(batch, params)
         jax.block_until_ready(res.ids)
-        res = search(ds.features, ds.attrs, graph, ds.query_features,
-                     ds.query_attrs, mc, cfg, mask=m)
+        res = eng.search(batch, params)
         jax.block_until_ready(res.ids)
         dt = (time.perf_counter() - t0) / 2
         sel = (1 / 3) ** f_active
@@ -182,25 +176,22 @@ def fig6_ablations(fast: bool = True) -> None:
     n = 10000 if fast else 50000
     ds = dataset("sift", 7, 3, n, 128)
     truth = ground_truth(ds)
-    mc, graph, _, _ = built_index(ds, "auto")
+    eng = built_engine(ds, "auto")
 
-    def run_one(name, mc_, graph_, fn=search):
-        res, qps, evals = timed_search(ds, mc_, graph_, 64, search_fn=fn)
+    def run_one(name, engine, fn=None):
+        res, qps, evals = timed_search(ds, engine, 64, search_fn=fn)
         emit(bench, name, "recall", round(recall_at_k(res.ids, truth.ids, 10), 4))
         emit(bench, name, "qps", round(qps, 1))
         emit(bench, name, "evals", evals)
 
-    run_one("stable", mc, graph)
-    mc_l2, g_l2, _, _ = built_index(ds, "l2")
-    run_one("wo_AttributeDis", mc_l2, g_l2)
-    mc_at, g_at, _, _ = built_index(ds, "attr")
-    run_one("wo_FeatureDis", mc_at, g_at)
-    mc_ad, g_ad, _, _ = built_index(ds, "additive")
-    run_one("wo_AUTO", mc_ad, g_ad)
-    _, g_np, _, _ = built_index(ds, "auto", prune=False)
-    run_one("wo_HSP", mc, g_np)
-    run_one("wo_DCR", mc, graph, fn=search_greedy_only)
-    run_one("wo_Dynamic", mc, graph, fn=search_two_stage)
+    run_one("stable", eng)
+    run_one("wo_AttributeDis", built_engine(ds, "l2"))
+    run_one("wo_FeatureDis", built_engine(ds, "attr"))
+    run_one("wo_AUTO", built_engine(ds, "additive"))
+    run_one("wo_HSP", built_engine(ds, "auto", prune=False))
+    # routing ablations are not engine backends — low-level escape hatch
+    run_one("wo_DCR", eng, fn=search_greedy_only)
+    run_one("wo_Dynamic", eng, fn=search_two_stage)
     flush_csv(bench)
 
 
@@ -243,8 +234,8 @@ def fig8_alpha_sweep(fast: bool = True) -> None:
         emit(bench, f"{profile}/computed_alpha", "alpha", round(stats.alpha, 3))
         best_a, best_r = None, -1.0
         for a in alphas + [round(stats.alpha, 3)]:
-            mc, graph, _, _ = built_index(ds, "auto", alpha=a, max_rounds=6)
-            res, _, _ = timed_search(ds, mc, graph, 64, repeats=1)
+            eng = built_engine(ds, "auto", alpha=a, max_rounds=6)
+            res, _, _ = timed_search(ds, eng, 64, repeats=1)
             r = recall_at_k(res.ids, truth.ids, 10)
             emit(bench, f"{profile}/alpha{a}", "recall", round(r, 4))
             if r > best_r:
@@ -265,8 +256,9 @@ def fig9_sigma_sweep(fast: bool = True) -> None:
     ds = dataset("sift", 5, 3, n, 128)
     truth = ground_truth(ds)
     for sigma in (0.2, 0.3, 0.44, 0.6, 0.8):
-        mc, graph, rep, _ = built_index(ds, "auto", sigma=sigma, max_rounds=6)
-        res, _, evals = timed_search(ds, mc, graph, 64, repeats=1)
+        _, _, rep, _ = built_index(ds, "auto", sigma=sigma, max_rounds=6)
+        eng = built_engine(ds, "auto", sigma=sigma, max_rounds=6)
+        res, _, evals = timed_search(ds, eng, 64, repeats=1)
         emit(bench, f"sigma{sigma}", "recall",
              round(recall_at_k(res.ids, truth.ids, 10), 4))
         emit(bench, f"sigma{sigma}", "pruned_frac",
@@ -286,9 +278,9 @@ def fig10_gamma_sweep(fast: bool = True) -> None:
     ds = dataset("sift", 5, 3, n, 128)
     truth = ground_truth(ds)
     for gamma in (12, 24, 48, 96):
-        mc, graph, _, _ = built_index(ds, "auto", gamma=gamma, max_rounds=6)
-        res, qps, _ = timed_search(ds, mc, graph, 64, repeats=1)
-        size_mb = graph.size * 4 / 2**20
+        eng = built_engine(ds, "auto", gamma=gamma, max_rounds=6)
+        res, qps, _ = timed_search(ds, eng, 64, repeats=1)
+        size_mb = eng.index.graph.size * 4 / 2**20
         emit(bench, f"gamma{gamma}", "recall",
              round(recall_at_k(res.ids, truth.ids, 10), 4))
         emit(bench, f"gamma{gamma}", "qps", round(qps, 1))
@@ -355,7 +347,6 @@ def quant_sweep(fast: bool = True) -> None:
     import os
 
     from benchmarks.common import BENCH_DIR
-    from repro.core.routing import RoutingConfig
     from repro.quant import QuantConfig, QuantizedVectors
 
     bench = "quant_sweep"
@@ -363,9 +354,9 @@ def quant_sweep(fast: bool = True) -> None:
     pool = 64
     ds = dataset("sift", 5, 3, n, 128)
     truth = ground_truth(ds)
-    mc, graph, _, _ = built_index(ds, "auto")
 
     stores = {
+        "none": None,
         "sq8": QuantizedVectors.build(ds.features, QuantConfig(mode="sq8")),
         "pq": QuantizedVectors.build(
             ds.features, QuantConfig(mode="pq", pq_subspaces=32)
@@ -374,36 +365,25 @@ def quant_sweep(fast: bool = True) -> None:
     reranks = [pool // 2, pool] if fast else [16, pool // 2, pool]
 
     summary = {}
-    for mode in ("none", "sq8", "pq"):
+    batch = QueryBatch.match(ds.query_features, ds.query_attrs)
+    for mode, store in stores.items():
+        # quant mode is derived from the engine's code store (quant="auto")
+        eng = built_engine(ds, "auto", quant=store)
         sweeps = [0] if mode == "none" else reranks
         for rr in sweeps:
-            cfg = RoutingConfig(
-                k=10, pool_size=pool, pioneer_size=max(4, pool // 8),
-                quant_mode=mode, rerank_size=rr,
-            )
-            quant = stores.get(mode)
-            res = search(ds.features, ds.attrs, graph, ds.query_features,
-                         ds.query_attrs, mc, cfg, quant=quant)
-            jax.block_until_ready(res.ids)
-            t0 = time.perf_counter()
-            for _ in range(3):
-                res = search(ds.features, ds.attrs, graph, ds.query_features,
-                             ds.query_attrs, mc, cfg, quant=quant)
-                jax.block_until_ready(res.ids)
-            dt = (time.perf_counter() - t0) / 3
+            res, qps, _ = timed_search(ds, eng, pool, rerank_size=rr)
             nq = ds.query_features.shape[0]
-            qps = nq / dt
             r = recall_at_k(res.ids, truth.ids, 10)
             name = mode if mode == "none" else f"{mode}/rerank{rr}"
             emit(bench, name, "recall", round(r, 4))
             emit(bench, name, "qps", round(qps, 1))
-            emit(bench, name, "fp_evals_per_q", int(res.n_dist_evals) // nq)
-            emit(bench, name, "code_evals_per_q", int(res.n_code_evals) // nq)
+            emit(bench, name, "fp_evals_per_q", res.total_dist_evals // nq)
+            emit(bench, name, "code_evals_per_q", res.total_code_evals // nq)
             summary[name] = {
                 "recall_at_10": round(float(r), 4),
                 "qps": round(float(qps), 1),
-                "fp_evals_per_query": int(res.n_dist_evals) // nq,
-                "code_evals_per_query": int(res.n_code_evals) // nq,
+                "fp_evals_per_query": res.total_dist_evals // nq,
+                "code_evals_per_query": res.total_code_evals // nq,
             }
     flush_csv(bench)
     os.makedirs(BENCH_DIR, exist_ok=True)

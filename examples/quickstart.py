@@ -1,43 +1,59 @@
-"""Quickstart: build a STABLE index on synthetic hybrid data and search it.
+"""Quickstart: build a STABLE engine on synthetic hybrid data and search it
+through the unified declarative API.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--n 10000] [--queries 100]
 """
+import argparse
+
 import numpy as np
 
+from repro.api import Engine, QueryBatch, SearchParams
 from repro.core.baselines import brute_force_hybrid, recall_at_k
 from repro.core.help_graph import HelpConfig
-from repro.core.index import StableIndex
 from repro.data.synthetic import make_hybrid_dataset
 
 
 def main():
-    print("Generating a SIFT-like hybrid dataset (10k vectors × 5 attrs)...")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=10_000)
+    ap.add_argument("--queries", type=int, default=100)
+    args = ap.parse_args()
+
+    print(f"Generating a SIFT-like hybrid dataset ({args.n} vectors × 5 attrs)...")
     ds = make_hybrid_dataset(
-        n=10_000, n_queries=100, profile="sift", attr_dim=5, labels_per_dim=3,
-        n_clusters=16, attr_cluster_corr=0.6, seed=0,
+        n=args.n, n_queries=args.queries, profile="sift", attr_dim=5,
+        labels_per_dim=3, n_clusters=16, attr_cluster_corr=0.6, seed=0,
     )
 
     print("Building the HELP index under the AUTO metric (α auto-calibrated)...")
-    idx = StableIndex.build(
+    eng = Engine.build(
         ds.features, ds.attrs,
         HelpConfig(gamma=24, gamma_new=6, max_rounds=8),
     )
+    idx = eng.index
     print(f"  α = {idx.metric_cfg.alpha:.3f}  "
           f"ψ history = {[round(p, 3) for p in idx.report.psi_history]}  "
           f"pruned {idx.report.pruned_edge_fraction:.1%} of edges "
           f"in {idx.report.build_seconds:.1f}s")
 
-    print("Searching 100 hybrid queries (feature NN + exact attribute match)...")
-    res = idx.search(ds.query_features, ds.query_attrs, k=10)
+    print(f"Searching {args.queries} hybrid queries "
+          "(feature NN + exact attribute match)...")
+    batch = QueryBatch.match(ds.query_features, ds.query_attrs)
+    params = SearchParams(k=10)
+    plan = eng.plan(batch, params)
+    print(f"  planner: backend={plan.backend} quant={plan.quant_mode} "
+          f"({plan.reason})")
+    res = eng.search(batch, params)
     truth = brute_force_hybrid(
         ds.features, ds.attrs, ds.query_features, ds.query_attrs, 10
     )
     r = recall_at_k(res.ids, truth.ids, 10)
-    brute_evals = ds.features.shape[0] * 100
+    brute_evals = ds.features.shape[0] * args.queries
     print(f"  Recall@10 = {r:.3f}")
-    print(f"  distance evals: {int(res.n_dist_evals):,} "
+    print(f"  distance evals: {res.total_dist_evals:,} "
           f"(brute force would be {brute_evals:,} — "
-          f"{brute_evals / max(int(res.n_dist_evals), 1):.1f}× more)")
+          f"{brute_evals / max(res.total_dist_evals, 1):.1f}× more); "
+          f"per-query mean {res.mean_dist_evals:.0f}")
     ids = np.asarray(res.ids)[0]
     attrs_ok = (np.asarray(ds.attrs)[ids[ids >= 0]] == ds.query_attrs[0]).all(1)
     print(f"  query 0: top-10 ids {ids.tolist()} "

@@ -1,33 +1,63 @@
-"""Masking mechanism demo (paper §III-E): one index serves full-equality,
-subset (wildcard) and missing-value queries via Eq. 8.
+"""Masking mechanism demo (paper §III-E): one engine serves full-equality,
+subset (wildcard), missing-value AND value-set hybrid queries — declared
+with per-attribute predicates instead of hand-built numpy masks.
 
-    PYTHONPATH=src python examples/subset_query.py
+    PYTHONPATH=src python examples/subset_query.py [--n 8000] [--queries 64]
 """
+import argparse
+
 import numpy as np
 
+from repro.api import ANY, MATCH, ONE_OF, Engine, Query, QueryBatch, SearchParams
 from repro.core.baselines import brute_force_hybrid, recall_at_k
 from repro.core.help_graph import HelpConfig
-from repro.core.index import StableIndex
 from repro.data.synthetic import make_hybrid_dataset
 
 
 def main():
-    ds = make_hybrid_dataset(n=8000, n_queries=64, profile="sift", attr_dim=5,
-                             labels_per_dim=3, n_clusters=16,
-                             attr_cluster_corr=0.6, seed=2)
-    idx = StableIndex.build(ds.features, ds.attrs,
-                            HelpConfig(gamma=24, gamma_new=6, max_rounds=8))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=8000)
+    ap.add_argument("--queries", type=int, default=64)
+    args = ap.parse_args()
 
+    ds = make_hybrid_dataset(n=args.n, n_queries=args.queries, profile="sift",
+                             attr_dim=5, labels_per_dim=3, n_clusters=16,
+                             attr_cluster_corr=0.6, seed=2)
+    eng = Engine.build(ds.features, ds.attrs,
+                      HelpConfig(gamma=24, gamma_new=6, max_rounds=8))
+    params = SearchParams(k=10)
+
+    # subset queries: the first F attributes constrained, the rest wildcard —
+    # QueryBatch.match(active=...) compiles the Eq. 8 mask for us.
     for f_active in (5, 3, 1, 0):
+        batch = QueryBatch.match(ds.query_features, ds.query_attrs,
+                                 active=range(f_active))
+        res = eng.search(batch, params)
         mask = np.zeros_like(ds.query_attrs)
         mask[:, :f_active] = 1
-        res = idx.search(ds.query_features, ds.query_attrs, 10, mask=mask)
         truth = brute_force_hybrid(ds.features, ds.attrs, ds.query_features,
                                    ds.query_attrs, 10, mask=mask)
         sel = (1 / 3) ** f_active
         print(f"F={f_active} active filters (selectivity ≈ {sel:7.2%}): "
               f"Recall@10 = {recall_at_k(res.ids, truth.ids, 10):.3f}")
     print("F=0 is pure (unfiltered) ANN — one index, every query class.")
+
+    # value-set query: attribute 0 must match, attribute 1 ∈ {0, 2}, rest
+    # unconstrained. The planner routes ONE_OF batches to the exact
+    # membership oracle automatically.
+    qs = [
+        Query(ds.query_features[i],
+              [MATCH(int(ds.query_attrs[i, 0])), ONE_OF(0, 2), ANY, ANY, ANY])
+        for i in range(min(16, args.queries))
+    ]
+    batch = QueryBatch.from_queries(qs)
+    plan = eng.plan(batch, params)
+    res = eng.search(batch, params)
+    ids = np.asarray(res.ids)
+    a1 = np.asarray(ds.attrs)[np.maximum(ids, 0), 1]
+    ok = ((a1 == 0) | (a1 == 2) | (ids < 0)).all()
+    print(f"ONE_OF batch → backend={plan.backend} ({plan.reason}); "
+          f"attr-1 ∈ {{0,2}} respected: {bool(ok)}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,59 @@
+"""Unified query/engine API — the stable public surface of the repo.
+
+The paper's masking mechanism (§III-E, Eq. 8) promises one index for every
+query class: full-equality, subset/wildcard and missing-value hybrid
+queries. This package is that promise as an API:
+
+* ``Query`` / ``QueryBatch`` — declarative hybrid queries. A feature vector
+  plus per-attribute ``MATCH`` / ``ANY`` / ``ONE_OF`` predicates that
+  compile to the (qa, mask) pair of Eq. 8 and an AUTO penalty target.
+* ``SearchParams`` — one consolidated knob surface (k, pool, rerank, quant,
+  seed, enforce-equality, backend override).
+* ``Engine`` — the single search facade. A ``Searcher`` protocol with three
+  backends (single-host graph, mesh-sharded, brute-force oracle) and a
+  planner that picks the backend and codec automatically: brute force below
+  a size threshold or when a graph was never built, quantized two-stage when
+  the index carries codes — derived from the index, never copied by callers.
+
+Typical use::
+
+    from repro.api import Engine, QueryBatch, SearchParams, MATCH, ANY
+
+    eng = Engine.build(features, attrs)              # or Engine.load(path)
+    res = eng.search(QueryBatch.match(qv, qa), SearchParams(k=10))
+
+    # subset query: constrain only the first two attributes
+    res = eng.search(QueryBatch.match(qv, qa, active=[0, 1]))
+
+    # fully declarative single requests
+    from repro.api import Query, ONE_OF
+    batch = QueryBatch.from_queries(
+        [Query(v, [MATCH(2), ANY, ONE_OF(0, 1)]) for v in vectors]
+    )
+    res = eng.search(batch, SearchParams(k=10, enforce_equality=True))
+
+``Engine.plan(batch, params)`` exposes the planner decision (backend,
+resolved quant mode, routing config, reason) without executing it.
+"""
+from repro.api.engine import (
+    Engine,
+    Plan,
+    Searcher,
+    SearchParams,
+)
+from repro.api.query import ANY, MATCH, ONE_OF, Predicate, Query, QueryBatch
+from repro.core.routing import SearchResult
+
+__all__ = [
+    "ANY",
+    "Engine",
+    "MATCH",
+    "ONE_OF",
+    "Plan",
+    "Predicate",
+    "Query",
+    "QueryBatch",
+    "SearchParams",
+    "SearchResult",
+    "Searcher",
+]

@@ -1,0 +1,489 @@
+"""Engine facade: one search entry point over every backend.
+
+``Engine.search(QueryBatch, SearchParams) -> SearchResult`` is the public
+contract; serve/build launchers, the examples and the benchmark harness all
+go through it. Underneath, a small execution planner (``Engine.plan``)
+selects a ``Searcher`` backend and resolves the quantization mode *from the
+index* so callers never copy codec state into configs:
+
+  graph    — single-host HELP traversal (``StableIndex`` + dynamic routing)
+  sharded  — mesh traversal + exact merge (``ShardedStableIndex``)
+  brute    — exact predicate oracle: hard filter + L2 top-k; on a
+             PQ-quantized index the scan runs over codes via the fused
+             ``adc_scan`` Pallas kernel with a full-precision rerank
+             (small/residual shards never touch most f32 vectors)
+
+Planning rules (first match wins):
+  1. ``params.backend`` override (validated against the index kind)
+  2. sharded index → "sharded"
+  3. no HELP graph (``build_graph=False``), N ≤ ``params.brute_threshold``,
+     or a ONE_OF predicate (exact membership semantics) → "brute"
+  4. otherwise → "graph"
+
+ONE_OF membership is exact on *every* backend: when a ONE_OF batch runs on
+a traversal backend anyway (sharded index, or explicit backend override),
+the engine hard-filters the returned top-k by set membership host-side.
+
+Semantics note — the brute backend is the exact predicate *oracle*: MATCH
+is a hard filter there, so sparse queries can return fewer than k ids
+(INVALID padding), while traversal backends treat MATCH as the soft AUTO
+penalty unless ``enforce_equality=True``. Auto-planning therefore trades
+semantics as well as algorithm at ``brute_threshold``. Callers that need
+size-invariant behavior pin it: ``enforce_equality=True`` for hard
+semantics everywhere, or an explicit ``backend=`` override.
+
+Every future backend (4-bit PQ, OPQ, multi-host) implements ``Searcher``
+and registers here; ``Engine.save/load`` round-trips the whole surface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol, Union, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import auto as auto_mod
+from repro.core import baselines as baselines_mod
+from repro.core import routing as routing_mod
+from repro.core.auto import DatasetStats, MetricConfig
+from repro.core.graph_ops import INF, INVALID
+from repro.core.help_graph import HelpConfig
+from repro.core.index import StableIndex
+from repro.core.routing import RoutingConfig, SearchResult
+from repro.quant import QuantConfig, QuantizedVectors, adc_lut, adc_scan
+from repro.api.query import QueryBatch
+
+Array = jax.Array
+
+BACKENDS = ("auto", "graph", "sharded", "brute")
+QUANT_PARAMS = ("auto", "none", "sq8", "pq")
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchParams:
+    """Consolidated per-request knobs (the four legacy config surfaces).
+
+    Derived defaults reproduce the legacy ``StableIndex.search`` behavior
+    exactly: ``pool_size=0`` → max(4k, 32), ``pioneer_size=0`` → 8 (capped
+    at the pool), ``rerank_size=0`` → whole pool. ``quant="auto"`` resolves
+    from the index's code store; ``quant="none"`` forces a full-precision
+    search even on a quantized index (impossible through the legacy path).
+    """
+
+    k: int = 10
+    pool_size: int = 0
+    pioneer_size: int = 0
+    rerank_size: int = 0
+    quant: str = "auto"
+    seed: int = 0
+    enforce_equality: bool = False
+    backend: str = "auto"
+    brute_threshold: int = 2048
+    coarse_max_iters: int = 64
+    refine_max_iters: int = 256
+    use_visited: bool = True
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r} ({BACKENDS})")
+        if self.quant not in QUANT_PARAMS:
+            raise ValueError(f"unknown quant {self.quant!r} ({QUANT_PARAMS})")
+        if self.k <= 0:
+            raise ValueError("k must be positive")
+
+    @property
+    def effective_pool(self) -> int:
+        return self.pool_size or max(4 * self.k, 32)
+
+    def routing_config(self, quant_mode: str, enforce: bool) -> RoutingConfig:
+        pool = self.effective_pool
+        return RoutingConfig(
+            k=self.k,
+            pool_size=pool,
+            pioneer_size=self.pioneer_size or min(8, pool),
+            coarse_max_iters=self.coarse_max_iters,
+            refine_max_iters=self.refine_max_iters,
+            use_visited=self.use_visited,
+            enforce_equality=enforce,
+            quant_mode=quant_mode,
+            rerank_size=self.rerank_size,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Resolved execution plan — inspectable via ``Engine.plan``."""
+
+    backend: str  # graph | sharded | brute
+    quant_mode: str  # none | sq8 | pq (resolved from params × index)
+    routing_cfg: Optional[RoutingConfig]  # None for the brute backend
+    reason: str  # human-readable planner justification
+
+
+@runtime_checkable
+class Searcher(Protocol):
+    """Backend contract: execute a compiled plan over an index."""
+
+    name: str
+
+    def search(
+        self, engine: "Engine", queries: QueryBatch, params: SearchParams,
+        plan: Plan,
+    ) -> SearchResult:
+        ...
+
+
+def _mask_jnp(queries: QueryBatch) -> Optional[Array]:
+    return None if queries.mask is None else jnp.asarray(queries.mask)
+
+
+class GraphSearcher:
+    """Single-host HELP-graph traversal (``StableIndex`` routing)."""
+
+    name = "graph"
+
+    def search(self, engine, queries, params, plan):
+        idx = engine.index
+        quant = idx.quant if plan.quant_mode != "none" else None
+        return routing_mod.search(
+            idx.features, idx.attrs, idx.graph,
+            jnp.asarray(queries.vectors, jnp.float32),
+            jnp.asarray(queries.attrs, jnp.int32),
+            idx.metric_cfg, plan.routing_cfg,
+            mask=_mask_jnp(queries), seed=params.seed, quant=quant,
+        )
+
+
+class ShardedSearcher:
+    """Mesh traversal + exact top-k merge (``ShardedStableIndex``)."""
+
+    name = "sharded"
+
+    def search(self, engine, queries, params, plan):
+        return engine.index.search(
+            jnp.asarray(queries.vectors, jnp.float32),
+            jnp.asarray(queries.attrs, jnp.int32),
+            k=params.k, routing_cfg=plan.routing_cfg,
+            mask=_mask_jnp(queries), seed=params.seed,
+        )
+
+
+class BruteForceSearcher:
+    """Exact predicate oracle: hard filter + L2 ranking over the full shard.
+
+    Three paths, cheapest applicable wins:
+      * match/any predicates, full precision — delegates to the legacy
+        ``brute_force_hybrid`` (bit-identical results by construction);
+      * ONE_OF predicates — same scan with exact set-membership filtering;
+      * PQ codes + ``quant != "none"`` — two-stage: the fused ``adc_scan``
+        kernel scores every code (LUT lookups, no f32 traffic), the top
+        ``pool`` survivors are reranked with exact L2. ``n_dist_evals``
+        then counts only the rerank; the N code evals are reported in
+        ``n_code_evals``.
+    """
+
+    name = "brute"
+
+    def search(self, engine, queries, params, plan):
+        idx = engine.index
+        qv = jnp.asarray(queries.vectors, jnp.float32)
+        qa = jnp.asarray(queries.attrs, jnp.int32)
+        if plan.quant_mode == "pq" and idx.quant is not None:
+            return self._adc_two_stage(engine, queries, qv, qa, params)
+        if not queries.has_one_of:
+            return baselines_mod.brute_force_hybrid(
+                idx.features, idx.attrs, qv, qa, params.k,
+                mask=_mask_jnp(queries),
+            )
+        ok = _ok_matrix(engine, queries)
+        sv2 = auto_mod.brute_fused_sqdist(
+            qv, qa, idx.features, idx.attrs, MetricConfig(mode="l2")
+        )
+        return _filtered_topk(sv2, ok, params.k, full_evals=idx.features.shape[0])
+
+    def _adc_two_stage(self, engine, queries, qv, qa, params):
+        """ADC code scan → hard filter → exact rerank of the pool head.
+        ``rerank_size`` bounds the full-precision stage exactly as in the
+        traversal path (0 → whole pool)."""
+        idx = engine.index
+        lut = adc_lut(qv, idx.quant.codebook)
+        scores = adc_scan(
+            lut, idx.quant.codes, qa, jnp.asarray(idx.attrs), mode="l2"
+        )  # (B, N) approximate squared L2 from codes only
+        ok = _ok_matrix(engine, queries)
+        pool = min(params.effective_pool, scores.shape[1])
+        pool = min(max(params.rerank_size or pool, params.k), pool)
+        neg, cand = jax.lax.top_k(-jnp.where(ok, scores, INF), pool)
+        cv = jnp.take(idx.features, jnp.maximum(cand, 0), axis=0)
+        rd = auto_mod.feature_sqdist(qv[:, None, :], cv)
+        rd = jnp.where(-neg < INF / 2, rd, INF)
+        res = _filtered_topk(
+            rd, jnp.ones_like(rd, bool), params.k, full_evals=pool, ids=cand
+        )
+        n = idx.quant.codes.shape[0]
+        return res._replace(
+            n_code_evals=jnp.full((qv.shape[0],), n, jnp.int32)
+        )
+
+
+def _ok_matrix(engine: "Engine", queries: QueryBatch) -> Array:
+    """(B, N) admissibility for the brute backend. The common predicate
+    classes stay on-device (no host transfer in the serving hot path);
+    ONE_OF set membership falls back to the cached host attrs."""
+    if not queries.has_one_of:
+        return baselines_mod._equality_ok(
+            jnp.asarray(queries.attrs, jnp.int32), engine.index.attrs,
+            _mask_jnp(queries),
+        )
+    return jnp.asarray(queries.admissible(engine.host_attrs))
+
+
+def _filtered_topk(
+    sq_scores: Array,
+    ok: Array,
+    k: int,
+    full_evals: int,
+    ids: Optional[Array] = None,
+) -> SearchResult:
+    """Top-k of masked scores → INVALID-padded SearchResult."""
+    b = sq_scores.shape[0]
+    scores = jnp.where(ok, sq_scores, INF)
+    neg, take = jax.lax.top_k(-scores, k)
+    sq = -neg
+    out = take if ids is None else jnp.take_along_axis(ids, take, axis=1)
+    out = jnp.where(jnp.isfinite(sq) & (sq < INF / 2), out, INVALID)
+    sq = jnp.where(out >= 0, sq, INF)
+    return SearchResult(
+        ids=out,
+        dists=jnp.sqrt(jnp.maximum(sq, 0.0)),
+        sqdists=sq,
+        n_dist_evals=jnp.full((b,), full_evals, jnp.int32),
+        n_hops=jnp.zeros((), jnp.int32),
+        n_code_evals=jnp.zeros((b,), jnp.int32),
+    )
+
+
+_SEARCHERS: dict[str, Searcher] = {
+    s.name: s for s in (GraphSearcher(), ShardedSearcher(), BruteForceSearcher())
+}
+
+
+@dataclasses.dataclass
+class Engine:
+    """The one search facade. Wraps a single-host ``StableIndex`` or a mesh
+    ``ShardedStableIndex`` and dispatches compiled query batches through the
+    planner onto a ``Searcher`` backend."""
+
+    index: Union[StableIndex, "ShardedStableIndex"]  # noqa: F821
+    _attrs_np: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+
+    @property
+    def host_attrs(self) -> np.ndarray:
+        """Host copy of the attribute matrix (cached: the device→host
+        transfer for predicate filtering happens once per engine)."""
+        if self._attrs_np is None:
+            self._attrs_np = np.asarray(self.index.attrs)
+        return self._attrs_np
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        features,
+        attrs,
+        help_cfg: HelpConfig = HelpConfig(),
+        quant_cfg: QuantConfig = QuantConfig(),
+        build_graph: bool = True,
+        **kw,
+    ) -> "Engine":
+        """Build a single-host engine. ``build_graph=False`` skips the HELP
+        construction for scan-only corpora (the planner then always picks
+        the brute-force backend)."""
+        return cls(StableIndex.build(
+            features, attrs, help_cfg=help_cfg, quant_cfg=quant_cfg,
+            build_graph=build_graph, **kw,
+        ))
+
+    @classmethod
+    def from_parts(
+        cls,
+        features,
+        attrs,
+        graph,
+        metric_cfg: MetricConfig,
+        stats: Optional[DatasetStats] = None,
+        quant: Optional[QuantizedVectors] = None,
+        help_cfg: HelpConfig = HelpConfig(),
+    ) -> "Engine":
+        """Wrap prebuilt arrays (benchmark harness / external builders)."""
+        features = jnp.asarray(features, jnp.float32)
+        attrs = jnp.asarray(attrs, jnp.int32)
+        if stats is None:
+            stats = auto_mod.sample_stats(
+                np.asarray(features), np.asarray(attrs)
+            )
+        return cls(StableIndex(
+            features=features, attrs=attrs, graph=jnp.asarray(graph),
+            metric_cfg=metric_cfg, help_cfg=help_cfg, stats=stats,
+            quant=quant,
+        ))
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def is_sharded(self) -> bool:
+        return not isinstance(self.index, StableIndex)
+
+    @property
+    def n_items(self) -> int:
+        return int(self.index.features.shape[0])
+
+    @property
+    def attr_dim(self) -> int:
+        return int(self.index.attrs.shape[1])
+
+    @property
+    def quant_mode(self) -> str:
+        """Codec attached to the index ("none" when unquantized)."""
+        if self.is_sharded:
+            return self.index.quant_mode
+        return self.index.quant.cfg.mode if self.index.quant is not None else "none"
+
+    @property
+    def has_graph(self) -> bool:
+        return int(self.index.graphs.shape[1] if self.is_sharded
+                   else self.index.graph.shape[1]) > 0
+
+    # -- planning ------------------------------------------------------------
+
+    def _resolve_quant(self, params: SearchParams, backend: str) -> str:
+        stored = self.quant_mode
+        if params.quant == "auto":
+            if backend == "brute" and stored == "sq8":
+                return "none"  # no SQ8 scan kernel; exact scan is the oracle
+            return stored
+        if params.quant == "sq8" and backend == "brute":
+            raise ValueError(
+                "the brute-force backend has no sq8 scan path; "
+                "use quant='auto' or 'none'"
+            )
+        if params.quant == "none":
+            if self.is_sharded and stored != "none":
+                raise ValueError(
+                    "quant='none' on a quantized sharded index is not "
+                    "supported (codes are sharded in place of f32 reads)"
+                )
+            return "none"
+        if params.quant != stored:
+            raise ValueError(
+                f"params.quant={params.quant!r} but the index holds "
+                f"{stored!r} codes"
+            )
+        return params.quant
+
+    def plan(self, queries: QueryBatch, params: SearchParams) -> Plan:
+        """Resolve (backend, quant_mode, routing_cfg) for one batch."""
+        if queries.attr_dim != self.attr_dim:
+            raise ValueError(
+                f"query attr_dim {queries.attr_dim} != index {self.attr_dim}"
+            )
+        if params.backend != "auto":
+            backend = params.backend
+            if backend == "sharded" and not self.is_sharded:
+                raise ValueError("backend='sharded' needs a sharded index")
+            if backend != "sharded" and self.is_sharded:
+                raise ValueError(
+                    f"backend={backend!r} unavailable on a sharded index"
+                )
+            if backend == "graph" and not self.has_graph:
+                raise ValueError("backend='graph' but the index has no graph")
+            reason = "explicit backend override"
+        elif self.is_sharded:
+            backend, reason = "sharded", "index is sharded over the mesh"
+        elif not self.has_graph:
+            backend, reason = "brute", "index built without a HELP graph"
+        elif self.n_items <= params.brute_threshold:
+            backend, reason = "brute", (
+                f"N={self.n_items} ≤ brute_threshold={params.brute_threshold}"
+            )
+        elif queries.has_one_of:
+            backend, reason = "brute", (
+                "ONE_OF predicates need exact set membership"
+            )
+        else:
+            backend, reason = "graph", "large single-host index"
+
+        quant_mode = self._resolve_quant(params, backend)
+        routing_cfg = None
+        if backend != "brute":
+            # ONE_OF under traversal: equality enforcement against the
+            # single traversal target would reject admissible values, so
+            # the engine applies the exact membership filter afterwards.
+            enforce = params.enforce_equality and not queries.has_one_of
+            routing_cfg = params.routing_config(quant_mode, enforce)
+        return Plan(
+            backend=backend, quant_mode=quant_mode,
+            routing_cfg=routing_cfg, reason=reason,
+        )
+
+    # -- execution -----------------------------------------------------------
+
+    def search(
+        self,
+        queries: Union[QueryBatch, tuple],
+        params: SearchParams = SearchParams(),
+    ) -> SearchResult:
+        """Execute a compiled query batch. Also accepts a plain
+        ``(query_vectors, query_attrs)`` tuple as an all-MATCH batch."""
+        if isinstance(queries, tuple):
+            queries = QueryBatch.match(*queries)
+        plan = self.plan(queries, params)
+        res = _SEARCHERS[plan.backend].search(self, queries, params, plan)
+        if queries.has_one_of and plan.backend != "brute":
+            # ONE_OF membership is exact on every backend; full predicate
+            # enforcement (MATCH included) only under enforce_equality.
+            res = self._predicate_filter(res, queries, params.enforce_equality)
+        return res
+
+    def _predicate_filter(
+        self, res: SearchResult, queries: QueryBatch, full: bool
+    ) -> SearchResult:
+        """Hard-filter traversal output host-side: ONE_OF membership always,
+        every predicate when ``full``."""
+        attrs = self.host_attrs
+        ids = np.asarray(res.ids)
+        taken = attrs[np.maximum(ids, 0)]  # (B, K, L)
+        ok = jnp.asarray(queries.admissible_rows(taken, one_of_only=not full))
+        ok = ok & (jnp.asarray(ids) >= 0)
+        # re-sort so survivors stay ascending with INVALID padding at the
+        # tail (the SearchResult ordering invariant)
+        sq = jnp.where(ok, res.sqdists, INF)
+        neg, take = jax.lax.top_k(-sq, sq.shape[1])
+        sq = -neg
+        out = jnp.take_along_axis(
+            jnp.where(ok, jnp.asarray(ids), INVALID), take, axis=1
+        )
+        return res._replace(
+            ids=out,
+            dists=jnp.sqrt(jnp.maximum(sq, 0.0)),
+            sqdists=sq,
+        )
+
+    # -- persistence ---------------------------------------------------------
+
+    def save(self, path: str) -> None:
+        if self.is_sharded:
+            raise NotImplementedError(
+                "sharded engines rebuild from the builder; save the "
+                "single-host index instead"
+            )
+        self.index.save(path)
+
+    @classmethod
+    def load(cls, path: str) -> "Engine":
+        return cls(StableIndex.load(path))

@@ -1,0 +1,302 @@
+"""Declarative hybrid queries (paper §III-E: "one index, every query class").
+
+A hybrid query is a feature vector plus one predicate per attribute
+dimension:
+
+  ``MATCH(v)``       — the attribute must equal the mapped value ``v``
+                       (full-equality query; compiles to mask = 1).
+  ``ANY``            — wildcard / missing value (subset query; compiles to
+                       mask = 0 so the dimension drops out of Eq. 8).
+  ``ONE_OF(v1, …)``  — the attribute must take one of several values.
+                       Graph traversal is guided by the member closest to
+                       the hull midpoint (the AUTO penalty |a - target| is
+                       then a lower-bound proxy for min_j |a - v_j|), and
+                       exact set membership is enforced on every backend's
+                       output — unlike MATCH, whose hard filtering is
+                       opt-in via ``enforce_equality``.
+
+``Query`` is a single request; ``QueryBatch`` is the compiled, array-form
+batch the ``Engine`` executes. Compilation produces exactly the (qa, mask)
+pair the legacy ``search(..., mask=...)`` keyword path consumed, so the
+declarative surface is bit-compatible with hand-built masks: an all-MATCH
+batch compiles to ``mask=None`` (the pure full-equality fast path) and an
+all-ANY batch is pure unfiltered ANN.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+__all__ = [
+    "ANY",
+    "MATCH",
+    "ONE_OF",
+    "Predicate",
+    "Query",
+    "QueryBatch",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Predicate:
+    """One per-attribute constraint. ``kind`` ∈ {match, any, one_of}."""
+
+    kind: str
+    values: tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.kind not in ("match", "any", "one_of"):
+            raise ValueError(f"unknown predicate kind {self.kind!r}")
+        if self.kind == "match" and len(self.values) != 1:
+            raise ValueError("MATCH takes exactly one value")
+        if self.kind == "one_of" and not self.values:
+            raise ValueError("ONE_OF needs at least one value")
+        if self.kind == "any" and self.values:
+            raise ValueError("ANY takes no values")
+
+    # -- compilation ---------------------------------------------------------
+
+    @property
+    def target(self) -> int:
+        """Traversal target: the value steering the AUTO penalty (Eq. 4).
+
+        MATCH: the value itself. ONE_OF: the member nearest the hull
+        midpoint (ties toward the smaller value) — minimizes the worst-case
+        gap between |a - target| and the exact min_j |a - v_j|. ANY: 0
+        (ignored, the mask zeroes the dimension).
+        """
+        if self.kind == "any":
+            return 0
+        if self.kind == "match":
+            return int(self.values[0])
+        mid = (min(self.values) + max(self.values)) / 2.0
+        return int(min(sorted(self.values), key=lambda v: abs(v - mid)))
+
+    @property
+    def active(self) -> bool:
+        return self.kind != "any"
+
+    def admits(self, value: int) -> bool:
+        return self.kind == "any" or int(value) in self.values
+
+
+def MATCH(value: int) -> Predicate:
+    return Predicate("match", (int(value),))
+
+
+def ONE_OF(*values: int) -> Predicate:
+    flat: list[int] = []
+    for v in values:  # accept ONE_OF(1, 2) and ONE_OF([1, 2])
+        if isinstance(v, (list, tuple, np.ndarray)):
+            flat.extend(int(x) for x in v)
+        else:
+            flat.append(int(v))
+    return Predicate("one_of", tuple(sorted(set(flat))))
+
+
+ANY = Predicate("any")
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    """One declarative hybrid request: vector + per-attribute predicates."""
+
+    vector: np.ndarray
+    predicates: tuple[Predicate, ...]
+
+    def __init__(self, vector, predicates: Sequence[Predicate]):
+        object.__setattr__(
+            self, "vector", np.asarray(vector, np.float32).reshape(-1)
+        )
+        preds = tuple(predicates)
+        if not all(isinstance(p, Predicate) for p in preds):
+            raise TypeError("predicates must be MATCH/ANY/ONE_OF instances")
+        object.__setattr__(self, "predicates", preds)
+
+    @property
+    def attr_dim(self) -> int:
+        return len(self.predicates)
+
+
+class QueryBatch:
+    """Compiled batch form of B queries over L attribute dimensions.
+
+    Arrays (host numpy; the Engine converts on dispatch):
+      vectors  (B, M) f32   query features
+      attrs    (B, L) i32   traversal targets (Predicate.target)
+      mask     (B, L) i32 or None — Eq. 8 active-dimension mask; None iff
+               every predicate is MATCH (bit-compatible with the legacy
+               no-mask full-equality path)
+      allowed  (B, L, V) i32, -1 padded — exact admissible value sets for
+               hard filtering; None when no ONE_OF predicate exists (MATCH
+               membership ≡ equality, ANY ≡ mask)
+      hard     (B, L) bool — True exactly on ONE_OF dimensions (whose
+               membership is enforced on every backend); None with allowed
+    """
+
+    __slots__ = ("vectors", "attrs", "mask", "allowed", "hard")
+
+    def __init__(
+        self,
+        vectors: np.ndarray,
+        attrs: np.ndarray,
+        mask: Optional[np.ndarray] = None,
+        allowed: Optional[np.ndarray] = None,
+        hard: Optional[np.ndarray] = None,
+    ):
+        self.vectors = np.asarray(vectors, np.float32)
+        self.attrs = np.asarray(attrs, np.int32)
+        if self.vectors.ndim != 2 or self.attrs.ndim != 2:
+            raise ValueError("vectors must be (B, M) and attrs (B, L)")
+        if self.vectors.shape[0] != self.attrs.shape[0]:
+            raise ValueError("vectors/attrs batch sizes differ")
+        self.mask = None if mask is None else np.asarray(mask, np.int32)
+        if self.mask is not None and self.mask.shape != self.attrs.shape:
+            raise ValueError("mask must have the same (B, L) shape as attrs")
+        self.allowed = None if allowed is None else np.asarray(allowed, np.int32)
+        if self.allowed is not None and self.allowed.shape[:2] != self.attrs.shape:
+            raise ValueError("allowed must be (B, L, V)")
+        if (allowed is None) != (hard is None):
+            raise ValueError("allowed and hard come together")
+        self.hard = None if hard is None else np.asarray(hard, bool)
+        if self.hard is not None and self.hard.shape != self.attrs.shape:
+            raise ValueError("hard must have the same (B, L) shape as attrs")
+
+    # -- constructors --------------------------------------------------------
+
+    @classmethod
+    def match(
+        cls,
+        vectors,
+        attrs,
+        active: Optional[Sequence[int]] = None,
+    ) -> "QueryBatch":
+        """Full-equality batch from plain arrays; ``active`` (attribute
+        column indices) turns every other dimension into ANY (subset
+        query). ``active=None`` → all dimensions constrained (mask-free)."""
+        vectors = np.asarray(vectors, np.float32)
+        attrs = np.asarray(attrs, np.int32)
+        if active is None:
+            return cls(vectors, attrs)
+        mask = np.zeros_like(attrs, np.int32)
+        mask[:, list(active)] = 1
+        return cls(vectors, attrs, mask=mask)
+
+    @classmethod
+    def pure_ann(cls, vectors, attr_dim: int) -> "QueryBatch":
+        """Unfiltered ANN batch: every attribute dimension is ANY."""
+        vectors = np.asarray(vectors, np.float32)
+        b = vectors.shape[0]
+        attrs = np.zeros((b, attr_dim), np.int32)
+        return cls(vectors, attrs, mask=np.zeros((b, attr_dim), np.int32))
+
+    @classmethod
+    def from_queries(cls, queries: Sequence[Query]) -> "QueryBatch":
+        """Stack declarative ``Query`` objects into the compiled batch."""
+        if not queries:
+            raise ValueError("empty query batch")
+        l = queries[0].attr_dim
+        if any(q.attr_dim != l for q in queries):
+            raise ValueError("all queries must share the attribute dim")
+        vectors = np.stack([q.vector for q in queries])
+        attrs = np.array(
+            [[p.target for p in q.predicates] for q in queries], np.int32
+        )
+        mask = np.array(
+            [[int(p.active) for p in q.predicates] for q in queries], np.int32
+        )
+        has_one_of = any(
+            p.kind == "one_of" for q in queries for p in q.predicates
+        )
+        allowed = hard = None
+        if has_one_of:
+            v = max(
+                len(p.values) if p.active else 1
+                for q in queries for p in q.predicates
+            )
+            allowed = np.full((len(queries), l, v), -1, np.int32)
+            hard = np.zeros((len(queries), l), bool)
+            for i, q in enumerate(queries):
+                for j, p in enumerate(q.predicates):
+                    if p.active:
+                        allowed[i, j, : len(p.values)] = p.values
+                    hard[i, j] = p.kind == "one_of"
+        if mask.all():
+            mask = None  # all-MATCH/ONE_OF ≡ the legacy mask-free path
+        return cls(vectors, attrs, mask=mask, allowed=allowed, hard=hard)
+
+    # -- views ---------------------------------------------------------------
+
+    @property
+    def batch_size(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def attr_dim(self) -> int:
+        return self.attrs.shape[1]
+
+    @property
+    def has_wildcard(self) -> bool:
+        return self.mask is not None and bool((self.mask == 0).any())
+
+    @property
+    def has_one_of(self) -> bool:
+        return self.allowed is not None
+
+    @property
+    def is_pure_ann(self) -> bool:
+        """All-wildcard batch ≡ unfiltered ANN (mask zeroes out Eq. 8)."""
+        return self.mask is not None and bool((self.mask == 0).all())
+
+    def admissible(self, db_attrs: np.ndarray) -> np.ndarray:
+        """(B, N) bool: rows of ``db_attrs`` satisfying every predicate.
+
+        This is the exact hard-filter semantics: MATCH is equality, ANY is
+        always-true, ONE_OF is set membership. Used by the brute-force
+        oracle backend and the engine-level ``enforce_equality`` filter.
+        """
+        xa = np.asarray(db_attrs)
+        if self.allowed is None:
+            ok = xa[None, :, :] == self.attrs[:, None, :]  # (B, N, L)
+        else:
+            # membership in the padded allowed sets: (B, N, L, V) → any(V)
+            ok = (
+                xa[None, :, :, None] == self.allowed[:, None, :, :]
+            ).any(-1)
+        if self.mask is not None:
+            ok = ok | (self.mask[:, None, :] == 0)
+        return ok.all(-1)
+
+    def admissible_rows(
+        self, cand_attrs: np.ndarray, one_of_only: bool = False
+    ) -> np.ndarray:
+        """(B, K) bool for *per-query* candidate attribute rows (B, K, L) —
+        the O(B·K·L·V) form the engine uses to hard-filter traversal
+        output (``admissible`` broadcasts one shared database instead).
+
+        ``one_of_only=True`` constrains just the multi-valued (true ONE_OF)
+        dimensions: ONE_OF membership is exact on every backend, while
+        MATCH stays a soft AUTO penalty unless ``enforce_equality``.
+        """
+        xa = np.asarray(cand_attrs)
+        if self.allowed is None:
+            if one_of_only:
+                return np.ones(xa.shape[:2], bool)
+            okl = xa == self.attrs[:, None, :]
+        else:
+            okl = (xa[..., None] == self.allowed[:, None, :, :]).any(-1)
+        if one_of_only:
+            okl = okl | ~self.hard[:, None, :]
+        elif self.mask is not None:
+            okl = okl | (self.mask[:, None, :] == 0)
+        return okl.all(-1)
+
+    def __repr__(self) -> str:
+        kinds = "match-only" if self.allowed is None else "with-one-of"
+        m = "none" if self.mask is None else "per-dim"
+        return (
+            f"QueryBatch(B={self.batch_size}, L={self.attr_dim}, "
+            f"{kinds}, mask={m})"
+        )

@@ -53,10 +53,11 @@ def brute_force_hybrid(
     neg, ids = jax.lax.top_k(-scores, k)
     sq = -neg
     ids = jnp.where(jnp.isfinite(sq) & (sq < INF / 2), ids, INVALID)
-    evals = jnp.asarray(qv.shape[0] * db_v.shape[0], jnp.int32)
+    evals = jnp.full((qv.shape[0],), db_v.shape[0], jnp.int32)
     return SearchResult(
         ids=ids, dists=jnp.sqrt(jnp.maximum(sq, 0.0)), sqdists=sq,
         n_dist_evals=evals, n_hops=jnp.zeros((), jnp.int32),
+        n_code_evals=jnp.zeros((qv.shape[0],), jnp.int32),
     )
 
 
@@ -77,7 +78,7 @@ def pre_filter_search(
     """
     res = brute_force_hybrid(db_v, db_a, qv, qa, k, mask)
     ok = _equality_ok(jnp.asarray(qa, jnp.int32), db_a, mask)
-    evals = ok.sum().astype(jnp.int32)  # feature distances actually computed
+    evals = ok.sum(axis=1).astype(jnp.int32)  # feature distances computed
     return res._replace(n_dist_evals=evals)
 
 
@@ -119,6 +120,7 @@ def post_filter_search(
     return SearchResult(
         ids=ids, dists=jnp.sqrt(jnp.maximum(sq, 0.0)), sqdists=sq,
         n_dist_evals=res.n_dist_evals, n_hops=res.n_hops,
+        n_code_evals=res.n_code_evals,
     )
 
 

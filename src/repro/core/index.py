@@ -50,7 +50,11 @@ class StableIndex:
         nhq_weight: float = 1.0,
         stats_seed: int = 0,
         quant_cfg: QuantConfig = QuantConfig(),
+        build_graph: bool = True,
     ) -> "StableIndex":
+        """``build_graph=False`` skips the HELP construction and stores an
+        empty (N, 0) adjacency — for corpora that will only ever be scanned
+        (``api.Engine`` plans those onto the brute-force backend)."""
         features = jnp.asarray(features, jnp.float32)
         attrs = jnp.asarray(attrs, jnp.int32)
         stats = auto_mod.sample_stats(
@@ -61,9 +65,12 @@ class StableIndex:
             alpha=float(alpha) if alpha is not None else stats.alpha,
             nhq_weight=nhq_weight,
         )
-        graph, dists, report = help_mod.build_help_graph(
-            features, attrs, metric_cfg, help_cfg
-        )
+        if build_graph:
+            graph, dists, report = help_mod.build_help_graph(
+                features, attrs, metric_cfg, help_cfg
+            )
+        else:
+            graph, report = jnp.zeros((features.shape[0], 0), jnp.int32), None
         return cls(
             features=features, attrs=attrs, graph=graph,
             metric_cfg=metric_cfg, help_cfg=help_cfg, stats=stats, report=report,
@@ -81,12 +88,20 @@ class StableIndex:
         mask=None,
         seed: int = 0,
     ) -> SearchResult:
-        """Quantized indexes always route over codes and rerank at full
-        precision (two-stage), matching ShardedStableIndex — to force exact
-        search on a quantized index, search a copy with ``quant=None``."""
+        """Legacy keyword entry point — prefer ``repro.api.Engine``, which
+        adds declarative predicates, backend planning and a consolidated
+        parameter surface on top of this method.
+
+        ``quant_mode`` defaults from ``self.quant``: a quantized index routes
+        over codes and reranks at full precision (two-stage), matching
+        ShardedStableIndex — to force exact search on a quantized index, use
+        ``Engine.search(..., SearchParams(quant="none"))`` or search a copy
+        with ``quant=None``."""
         cfg = routing_cfg or RoutingConfig(k=k, pool_size=max(4 * k, 32))
         if cfg.k != k:
             cfg = dataclasses.replace(cfg, k=k)
+        if self.quant is not None and cfg.quant_mode == "none":
+            cfg = dataclasses.replace(cfg, quant_mode=self.quant.cfg.mode)
         return routing_mod.search(
             self.features, self.attrs, self.graph,
             jnp.asarray(qv, jnp.float32), jnp.asarray(qa, jnp.int32),

@@ -73,9 +73,28 @@ class SearchResult(NamedTuple):
     ids: Array  # (B, K) node ids (INVALID-padded)
     dists: Array  # (B, K) fused distances U (paper Eq. 4 scale, sqrt applied)
     sqdists: Array  # (B, K) squared fused metric (ranking scale)
-    n_dist_evals: Array  # () full-precision distance evaluations
+    n_dist_evals: Array  # (B,) full-precision distance evaluations per query
     n_hops: Array  # () total expansion iterations executed
-    n_code_evals: Array | int = 0  # () compressed-code evaluations (quant mode)
+    n_code_evals: Array | int = 0  # (B,) compressed-code evaluations (quant)
+
+    # Eval counters are per-query so serving can report per-request cost;
+    # the aggregate properties below are the host-side reporting conveniences.
+
+    @property
+    def total_dist_evals(self) -> int:
+        return int(jnp.sum(self.n_dist_evals))
+
+    @property
+    def total_code_evals(self) -> int:
+        return int(jnp.sum(self.n_code_evals))
+
+    @property
+    def mean_dist_evals(self) -> float:
+        return self.total_dist_evals / max(int(jnp.asarray(self.ids).shape[0]), 1)
+
+    @property
+    def mean_code_evals(self) -> float:
+        return self.total_code_evals / max(int(jnp.asarray(self.ids).shape[0]), 1)
 
 
 def _score_candidates(
@@ -123,7 +142,7 @@ class _State(NamedTuple):
     checked: Array  # (B, R) int8
     visited: Array  # (B, N) int8 or (B, 1) dummy
     active: Array  # (B,) rows still making progress
-    evals: Array  # () scalar counter
+    evals: Array  # (B,) per-query counter
     hops: Array  # ()
     it: Array  # ()
 
@@ -169,7 +188,7 @@ def _expand(
         db_v, db_a, cand, qv, qa, metric_cfg, mask, quant, quant_mode
     )
     cd = jnp.where(cand < 0, INF, cd)
-    n_new_evals = (cand >= 0).sum()
+    n_new_evals = (cand >= 0).sum(axis=1).astype(jnp.int32)
 
     # --- bookkeeping: expanded entries become checked; candidates visited ----
     checked = state.checked.at[:, :scope].max(elig.astype(jnp.int8))
@@ -249,7 +268,7 @@ def _search_jit(
     state = _State(
         r_ids=r_ids, r_d=r_d, checked=checked, visited=visited,
         active=jnp.ones((b,), bool),
-        evals=(entry_ids >= 0).sum().astype(jnp.int32),
+        evals=(entry_ids >= 0).sum(axis=1).astype(jnp.int32),
         hops=jnp.zeros((), jnp.int32),
         it=jnp.zeros((), jnp.int32),
     )
@@ -290,7 +309,7 @@ def _search_jit(
         out_ids = state.r_ids[:, : cfg.k]
         out_sq = state.r_d[:, : cfg.k]
         n_dist_evals = state.evals
-        n_code_evals = jnp.zeros((), jnp.int32)
+        n_code_evals = jnp.zeros((b,), jnp.int32)
     else:
         rr = cfg.effective_rerank
         r_ids = state.r_ids[:, :rr]
@@ -305,7 +324,7 @@ def _search_jit(
         out_sq = -neg
         out_ids = jnp.take_along_axis(r_ids, take, axis=1)
         out_ids = jnp.where(out_sq < INF / 2, out_ids, INVALID)
-        n_dist_evals = (r_ids >= 0).sum().astype(jnp.int32)
+        n_dist_evals = (r_ids >= 0).sum(axis=1).astype(jnp.int32)
         n_code_evals = state.evals
     if cfg.enforce_equality:
         oa = gops.gather_rows(db_a, out_ids)

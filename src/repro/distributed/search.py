@@ -109,8 +109,15 @@ class ShardedStableIndex:
         qa: Array,
         k: int = 10,
         routing_cfg: Optional[RoutingConfig] = None,
+        mask: Optional[Array] = None,
         seed: int = 0,
-    ):
+    ) -> routing_mod.SearchResult:
+        """Sharded hybrid search; returns the same ``SearchResult`` shape as
+        the single-host path (``n_dist_evals``/``n_code_evals`` are per-query
+        totals summed over model shards; ``n_hops`` sums shard iterations).
+
+        Prefer ``repro.api.Engine`` — this remains as the backend
+        implementation behind the ``Searcher`` protocol."""
         cfg = routing_cfg or RoutingConfig(k=k, pool_size=max(4 * k, 32))
         if cfg.k != k:
             cfg = dataclasses.replace(cfg, k=k)
@@ -126,13 +133,15 @@ class ShardedStableIndex:
         metric_cfg = self.metric_cfg
         qmode = cfg.quant_mode
         pq_dim = self.pq_dim
+        has_mask = mask is not None
         b = qv.shape[0]
         entry = routing_mod.make_entry_ids(rows, b, cfg.pool_size, seed)
 
-        def local_search(feats, attrs, graph, qv, qa, entry, *qops):
+        def local_search(feats, attrs, graph, qv, qa, entry, *rest):
             # one model shard: this data-shard's query block vs the local
             # sub-index (NOTE: shapes here are per-device, not global)
             b_loc = qv.shape[0]
+            m, qops = (rest[0], rest[1:]) if has_mask else (None, rest)
             if qmode == "sq8":
                 codes, scale, zero = qops
                 operand = (codes, scale, zero)
@@ -144,7 +153,7 @@ class ShardedStableIndex:
                 operand = ()
             res = routing_mod._search_jit(
                 feats, attrs, graph, qv, qa, entry, metric_cfg, cfg, rows,
-                None, operand,
+                m, operand,
             )
             shard_id = jax.lax.axis_index("model")
             gids = jnp.where(
@@ -157,21 +166,29 @@ class ShardedStableIndex:
             all_ids = jnp.moveaxis(all_ids, 0, 1).reshape(b_loc, -1)
             all_d = jnp.moveaxis(all_d, 0, 1).reshape(b_loc, -1)
             neg, take = jax.lax.top_k(-all_d, k)
-            evals = jax.lax.psum(res.n_dist_evals, ("data", "model"))
+            # per-query counters: sum shard contributions over `model` only
+            evals = jax.lax.psum(res.n_dist_evals, "model")
+            code_evals = jax.lax.psum(res.n_code_evals, "model")
+            hops = jax.lax.psum(res.n_hops, ("data", "model"))
             return (
                 jnp.take_along_axis(all_ids, take, axis=1),
                 -neg,
-                evals[None],
+                evals,
+                code_evals,
+                hops[None],
             )
 
         extra_args: tuple = ()
         extra_specs: tuple = ()
+        if has_mask:
+            extra_args = (jnp.asarray(mask, jnp.int32),)
+            extra_specs = (P("data", None),)
         if qmode == "sq8":
-            extra_args = (self.codes, self.sq_scale, self.sq_zero)
-            extra_specs = (P("model", None), P(None), P(None))
+            extra_args += (self.codes, self.sq_scale, self.sq_zero)
+            extra_specs += (P("model", None), P(None), P(None))
         elif qmode == "pq":
-            extra_args = (self.codes, self.pq_centroids)
-            extra_specs = (P("model", None), P(None, None, None))
+            extra_args += (self.codes, self.pq_centroids)
+            extra_specs += (P("model", None), P(None, None, None))
 
         fn = sharding_mod.shard_map(
             local_search,
@@ -180,12 +197,21 @@ class ShardedStableIndex:
                 P("model", None), P("model", None), P("model", None),
                 P("data", None), P("data", None), P("data", None),
             ) + extra_specs,
-            out_specs=(P("data", None), P("data", None), P(None)),
+            out_specs=(
+                P("data", None), P("data", None), P("data"), P("data"), P(None)
+            ),
             check_vma=False,
         )
         qv = jnp.asarray(qv, jnp.float32)
         qa = jnp.asarray(qa, jnp.int32)
-        ids, sqd, evals = fn(
+        ids, sqd, evals, code_evals, hops = fn(
             self.features, self.attrs, self.graphs, qv, qa, entry, *extra_args
         )
-        return ids, jnp.sqrt(jnp.maximum(sqd, 0.0)), evals.sum()
+        return routing_mod.SearchResult(
+            ids=ids,
+            dists=jnp.sqrt(jnp.maximum(sqd, 0.0)),
+            sqdists=sqd,
+            n_dist_evals=evals,
+            n_hops=hops[0],
+            n_code_evals=code_evals,
+        )

@@ -336,12 +336,12 @@ def main() -> None:
     import argparse
     import time
 
+    from repro.api import Engine
     from repro.core.help_graph import HelpConfig
-    from repro.core.index import StableIndex
     from repro.data.synthetic import make_hybrid_dataset
     from repro.quant import QUANT_MODES, QuantConfig
 
-    ap = argparse.ArgumentParser(description="build + save a STABLE index")
+    ap = argparse.ArgumentParser(description="build + save a STABLE engine")
     ap.add_argument("--out", required=True, help="output index directory")
     ap.add_argument("--n", type=int, default=20_000)
     ap.add_argument("--profile", default="sift")
@@ -351,6 +351,9 @@ def main() -> None:
     ap.add_argument("--quant", default="none", choices=QUANT_MODES,
                     help="attach a quantized code store to the index")
     ap.add_argument("--pq-subspaces", type=int, default=32)
+    ap.add_argument("--no-graph", action="store_true",
+                    help="scan-only corpus: skip the HELP graph build "
+                         "(the engine planner will use brute force)")
     args = ap.parse_args()
 
     ds = make_hybrid_dataset(
@@ -358,12 +361,14 @@ def main() -> None:
         labels_per_dim=3, n_clusters=16, attr_cluster_corr=0.6, seed=0,
     )
     t0 = time.time()
-    idx = StableIndex.build(
+    eng = Engine.build(
         ds.features, ds.attrs,
         HelpConfig(gamma=args.gamma, gamma_new=6, max_rounds=args.max_rounds),
         quant_cfg=QuantConfig(mode=args.quant, pq_subspaces=args.pq_subspaces),
+        build_graph=not args.no_graph,
     )
-    idx.save(args.out)
+    eng.save(args.out)
+    idx = eng.index
     quant_note = (
         f", {idx.quant.code_bytes / 2**20:.1f} MiB codes ({args.quant})"
         if idx.quant is not None else ""

@@ -1,14 +1,12 @@
-"""Serving launcher: build/load a STABLE index and serve batched hybrid
+"""Serving launcher: build/load a STABLE engine and serve batched hybrid
 queries — ``python -m repro.launch.serve [--index-dir DIR]``.
 
-Single-process serving here; on a mesh the same search path runs through
-``distributed.search.ShardedStableIndex`` (database sharded over `model`,
-queries over `data`, exact top-k merge).
-
-``--quant {none,sq8,pq}`` serves through the quantized two-stage path:
-traversal over compressed codes, exact rerank of the pool head — the
-reported evals/query then counts only full-precision evaluations (code
-evaluations are reported separately).
+All requests go through ``repro.api.Engine`` — the planner resolves the
+backend (graph traversal, or brute-force below ``--brute-threshold``) and
+derives the quantization mode from the index's code store, so a quantized
+index automatically serves through the two-stage path (traversal over
+compressed codes, exact rerank of the pool head). Eval counters are
+per-query, so the report includes honest per-request cost percentiles.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --n 20000 --batches 8
@@ -24,10 +22,9 @@ import numpy as np
 
 
 def main() -> None:
+    from repro.api import Engine, QueryBatch, SearchParams
     from repro.core.baselines import brute_force_hybrid, recall_at_k
     from repro.core.help_graph import HelpConfig
-    from repro.core.index import StableIndex
-    from repro.core.routing import RoutingConfig
     from repro.data.synthetic import make_hybrid_dataset
     from repro.quant import QUANT_MODES, QuantConfig
 
@@ -47,6 +44,8 @@ def main() -> None:
     ap.add_argument("--rerank", type=int, default=0,
                     help="pool entries reranked exactly (0 = whole pool)")
     ap.add_argument("--pq-subspaces", type=int, default=32)
+    ap.add_argument("--brute-threshold", type=int, default=2048,
+                    help="planner scans instead of traversing at/below this N")
     args = ap.parse_args()
 
     ds = make_hybrid_dataset(
@@ -55,18 +54,19 @@ def main() -> None:
         attr_cluster_corr=0.6, seed=0,
     )
     if args.index_dir:
-        print(f"loading index from {args.index_dir}")
-        idx = StableIndex.load(args.index_dir)
+        print(f"loading engine from {args.index_dir}")
+        eng = Engine.load(args.index_dir)
     else:
         print(f"building index over {args.n} nodes ({args.profile} profile, "
               f"quant={args.quant})")
         t0 = time.perf_counter()
-        idx = StableIndex.build(
+        eng = Engine.build(
             ds.features, ds.attrs,
             HelpConfig(gamma=24, gamma_new=6, max_rounds=8),
             quant_cfg=QuantConfig(mode=args.quant,
                                   pq_subspaces=args.pq_subspaces),
         )
+        idx = eng.index
         print(f"  built in {time.perf_counter()-t0:.1f}s "
               f"(α={idx.metric_cfg.alpha:.3f}, "
               f"ψ={idx.report.psi_history[-1]:.3f})")
@@ -76,37 +76,47 @@ def main() -> None:
             print(f"  codes: {code_mb:.1f} MiB vs {f32_mb:.1f} MiB f32 "
                   f"({f32_mb/code_mb:.0f}× compression)")
         if args.save_index:
-            idx.save(args.save_index)
+            eng.save(args.save_index)
             print(f"  saved to {args.save_index}")
 
-    quant_mode = idx.quant.cfg.mode if idx.quant is not None else "none"
-    cfg = RoutingConfig(k=args.k, pool_size=args.pool,
-                        pioneer_size=max(4, args.pool // 8),
-                        quant_mode=quant_mode, rerank_size=args.rerank)
-    idx.search(ds.query_features[: args.batch],
-               ds.query_attrs[: args.batch], args.k, cfg)  # warm compile
+    # the engine derives quant_mode from the index — no codec copying here
+    params = SearchParams(
+        k=args.k, pool_size=args.pool,
+        pioneer_size=max(4, args.pool // 8),
+        rerank_size=args.rerank, brute_threshold=args.brute_threshold,
+    )
+    warm = QueryBatch.match(ds.query_features[: args.batch],
+                            ds.query_attrs[: args.batch])
+    plan = eng.plan(warm, params)
+    print(f"plan: backend={plan.backend} quant={plan.quant_mode} "
+          f"({plan.reason})")
+    eng.search(warm, params)  # warm compile
 
-    lat, recalls, evals, code_evals = [], [], 0, 0
+    lat, recalls = [], []
+    per_q_evals, per_q_code = [], []
     for b in range(args.batches):
         sl = slice(b * args.batch, (b + 1) * args.batch)
         qv, qa = ds.query_features[sl], ds.query_attrs[sl]
         t0 = time.perf_counter()
-        res = idx.search(qv, qa, args.k, cfg)
+        res = eng.search(QueryBatch.match(qv, qa), params)
         jax.block_until_ready(res.ids)
         lat.append(time.perf_counter() - t0)
-        evals += int(res.n_dist_evals)
-        code_evals += int(res.n_code_evals)
+        per_q_evals.append(np.asarray(res.n_dist_evals))
+        per_q_code.append(np.asarray(res.n_code_evals))
         truth = brute_force_hybrid(ds.features, ds.attrs, qv, qa, args.k)
         recalls.append(recall_at_k(res.ids, truth.ids, args.k))
 
     lat_ms = np.array(lat) * 1e3
+    ev = np.concatenate(per_q_evals)
+    cev = np.concatenate(per_q_code)
     total_q = args.batch * args.batches
     print(f"[served] {total_q} queries: QPS={total_q/sum(lat):.0f}  "
           f"p50={np.percentile(lat_ms, 50):.1f}ms "
           f"p99={np.percentile(lat_ms, 99):.1f}ms  "
-          f"Recall@{args.k}={np.mean(recalls):.3f}  "
-          f"evals/query={evals/total_q:.0f}  "
-          f"code_evals/query={code_evals/total_q:.0f}")
+          f"Recall@{args.k}={np.mean(recalls):.3f}")
+    print(f"  per-request cost: evals p50={np.percentile(ev, 50):.0f} "
+          f"p99={np.percentile(ev, 99):.0f} mean={ev.mean():.0f}  "
+          f"code_evals mean={cev.mean():.0f}")
 
 
 if __name__ == "__main__":

@@ -29,16 +29,20 @@ Layers
 * ``core/routing``         — ``RoutingConfig(quant_mode=..., rerank_size=...)``
   drives graph traversal over codes and reranks the pool top slice with
   exact fused distances; ``SearchResult.n_dist_evals`` then counts *only*
-  full-precision evaluations (``n_code_evals`` counts the compressed ones).
+  full-precision evaluations per query (``n_code_evals`` the compressed
+  ones; ``total_dist_evals``/``total_code_evals`` aggregate).
+* ``api/engine``           — the Engine planner derives ``quant_mode`` from
+  the index's code store; its brute-force backend scans PQ codes through
+  the fused ``adc_scan`` kernel for small/residual shards.
 
 Typical use::
 
-    from repro.core.index import StableIndex
+    from repro.api import Engine, QueryBatch, SearchParams
     from repro.quant import QuantConfig
 
-    idx = StableIndex.build(features, attrs, quant_cfg=QuantConfig(mode="pq"))
-    res = idx.search(qv, qa, k=10)           # code scan + exact rerank
-    res.n_dist_evals                         # == rerank evals only
+    eng = Engine.build(features, attrs, quant_cfg=QuantConfig(mode="pq"))
+    res = eng.search(QueryBatch.match(qv, qa), SearchParams(k=10))
+    res.n_dist_evals                         # (B,) rerank evals only
 
 Follow-ons tracked in ROADMAP.md: OPQ rotation, 4-bit PQ, quantized
 sharded rerank.

@@ -1,0 +1,453 @@
+"""Unified query/engine API: predicate→mask compilation semantics, planner
+rules, and engine-vs-legacy bit-exact parity on all three backends
+(including after ``Engine.save/load``)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    ANY, MATCH, ONE_OF, Engine, Predicate, Query, QueryBatch, SearchParams,
+)
+from repro.core import auto as auto_mod
+from repro.core.auto import MetricConfig
+from repro.core.baselines import brute_force_hybrid, recall_at_k
+from repro.core.help_graph import HelpConfig
+from repro.core.index import StableIndex
+from repro.core.routing import RoutingConfig
+from repro.data.synthetic import make_hybrid_dataset
+from repro.quant import QuantConfig, QuantizedVectors
+
+HELP_CFG = HelpConfig(gamma=12, gamma_new=4, max_rounds=3,
+                      quality_sample=64, node_block=512)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_hybrid_dataset(
+        n=3000, n_queries=24, profile="sift", attr_dim=5, labels_per_dim=3,
+        n_clusters=8, attr_cluster_corr=0.6, seed=0,
+    )
+
+
+@pytest.fixture(scope="module")
+def engines(ds):
+    """One engine per quant mode over the same dataset."""
+    out = {}
+    for mode in ("none", "sq8", "pq"):
+        out[mode] = Engine.build(
+            ds.features, ds.attrs, HELP_CFG,
+            quant_cfg=QuantConfig(mode=mode, pq_subspaces=8, pq_train_iters=4),
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Predicate → mask compilation semantics
+# ---------------------------------------------------------------------------
+
+
+class TestPredicateCompile:
+    def test_match_compiles_to_active_dim(self):
+        q = Query(np.zeros(4), [MATCH(2), MATCH(0), MATCH(1)])
+        b = QueryBatch.from_queries([q])
+        assert b.attrs.tolist() == [[2, 0, 1]]
+        assert b.mask is None  # all-MATCH ≡ legacy mask-free path
+        assert b.allowed is None and not b.has_one_of
+
+    def test_any_compiles_to_zero_mask(self):
+        q = Query(np.zeros(4), [MATCH(2), ANY, MATCH(1)])
+        b = QueryBatch.from_queries([q])
+        assert b.mask.tolist() == [[1, 0, 1]]
+        assert b.has_wildcard and not b.is_pure_ann
+
+    def test_all_wildcard_is_pure_ann(self):
+        b = QueryBatch.from_queries([Query(np.zeros(4), [ANY, ANY])])
+        assert b.is_pure_ann
+        assert QueryBatch.pure_ann(np.zeros((2, 4)), 3).is_pure_ann
+
+    def test_one_of_target_and_membership(self):
+        p = ONE_OF(0, 4)
+        assert p.target in (0, 4)  # hull midpoint 2 → nearest member
+        assert ONE_OF(1, 2, 9).target == 2  # mid 5 → 2 closer than 9? |2-5|=3 <
+        assert ONE_OF(3).target == 3
+        assert p.admits(0) and p.admits(4) and not p.admits(2)
+        q = Query(np.zeros(4), [ONE_OF(0, 2), MATCH(1)])
+        b = QueryBatch.from_queries([q])
+        assert b.has_one_of
+        assert b.mask is None  # both dims active
+        assert sorted(v for v in b.allowed[0, 0] if v >= 0) == [0, 2]
+        ok = b.admissible(np.array([[0, 1], [2, 1], [1, 1], [0, 0]]))
+        assert ok.tolist() == [[True, True, False, False]]
+
+    def test_match_batch_with_active_equals_manual_mask(self, ds):
+        b = QueryBatch.match(ds.query_features, ds.query_attrs, active=[0, 2])
+        mask = np.zeros_like(ds.query_attrs)
+        mask[:, [0, 2]] = 1
+        np.testing.assert_array_equal(b.mask, mask)
+        np.testing.assert_array_equal(b.attrs, ds.query_attrs)
+
+    def test_bad_predicates_rejected(self):
+        with pytest.raises(ValueError):
+            Predicate("match", ())
+        with pytest.raises(ValueError):
+            ONE_OF()
+        with pytest.raises(ValueError):
+            Predicate("between", (1, 2))
+
+
+# ---------------------------------------------------------------------------
+# Planner
+# ---------------------------------------------------------------------------
+
+
+class TestPlanner:
+    def test_small_index_plans_brute(self, ds, engines):
+        plan = engines["none"].plan(
+            QueryBatch.match(ds.query_features, ds.query_attrs),
+            SearchParams(k=10, brute_threshold=5000),
+        )
+        assert plan.backend == "brute" and plan.routing_cfg is None
+
+    def test_large_index_plans_graph(self, ds, engines):
+        plan = engines["none"].plan(
+            QueryBatch.match(ds.query_features, ds.query_attrs),
+            SearchParams(k=10, brute_threshold=100),
+        )
+        assert plan.backend == "graph"
+        assert plan.routing_cfg == RoutingConfig(k=10, pool_size=40)
+
+    def test_quant_mode_derived_from_index(self, ds, engines):
+        qb = QueryBatch.match(ds.query_features, ds.query_attrs)
+        for mode in ("none", "sq8", "pq"):
+            plan = engines[mode].plan(qb, SearchParams(k=10, brute_threshold=100))
+            assert plan.quant_mode == mode
+            assert plan.routing_cfg.quant_mode == mode
+
+    def test_one_of_plans_brute(self, ds, engines):
+        qs = [Query(ds.query_features[0],
+                    [ONE_OF(0, 2), ANY, ANY, ANY, ANY])]
+        plan = engines["none"].plan(
+            QueryBatch.from_queries(qs), SearchParams(k=5, brute_threshold=100)
+        )
+        assert plan.backend == "brute"
+
+    def test_graphless_engine_plans_brute(self, ds):
+        eng = Engine.build(ds.features[:500], ds.attrs[:500], build_graph=False)
+        assert not eng.has_graph
+        plan = eng.plan(QueryBatch.match(ds.query_features, ds.query_attrs),
+                        SearchParams(k=5, brute_threshold=1))
+        assert plan.backend == "brute"
+        with pytest.raises(ValueError):
+            eng.plan(QueryBatch.match(ds.query_features, ds.query_attrs),
+                     SearchParams(k=5, backend="graph"))
+
+    def test_quant_mismatch_rejected(self, ds, engines):
+        qb = QueryBatch.match(ds.query_features, ds.query_attrs)
+        with pytest.raises(ValueError):
+            engines["sq8"].plan(qb, SearchParams(k=10, quant="pq"))
+
+    def test_bad_params_rejected(self):
+        with pytest.raises(ValueError):
+            SearchParams(backend="gpu")
+        with pytest.raises(ValueError):
+            SearchParams(quant="fp4")
+
+
+# ---------------------------------------------------------------------------
+# Engine vs legacy parity (bit-exact)
+# ---------------------------------------------------------------------------
+
+
+class TestEngineLegacyParity:
+    @pytest.mark.parametrize("mode", ["none", "sq8", "pq"])
+    def test_graph_backend_matches_stable_index(self, ds, engines, mode):
+        eng = engines[mode]
+        params = SearchParams(k=10, backend="graph")
+        res = eng.search(QueryBatch.match(ds.query_features, ds.query_attrs),
+                         params)
+        legacy = eng.index.search(ds.query_features, ds.query_attrs, 10)
+        np.testing.assert_array_equal(np.asarray(res.ids),
+                                      np.asarray(legacy.ids))
+        np.testing.assert_array_equal(np.asarray(res.sqdists),
+                                      np.asarray(legacy.sqdists))
+
+    @pytest.mark.parametrize("mode", ["none", "sq8", "pq"])
+    def test_parity_survives_save_load(self, ds, engines, tmp_path, mode):
+        eng = engines[mode]
+        path = os.path.join(tmp_path, f"eng_{mode}")
+        eng.save(path)
+        eng2 = Engine.load(path)
+        params = SearchParams(k=10, backend="graph")
+        qb = QueryBatch.match(ds.query_features, ds.query_attrs)
+        np.testing.assert_array_equal(
+            np.asarray(eng.search(qb, params).ids),
+            np.asarray(eng2.search(qb, params).ids),
+        )
+
+    def test_graph_backend_masked_matches_legacy(self, ds, engines):
+        qb = QueryBatch.match(ds.query_features, ds.query_attrs, active=[0, 1])
+        res = engines["none"].search(qb, SearchParams(k=10, backend="graph"))
+        legacy = engines["none"].index.search(
+            ds.query_features, ds.query_attrs, 10, mask=qb.mask
+        )
+        np.testing.assert_array_equal(np.asarray(res.ids),
+                                      np.asarray(legacy.ids))
+
+    def test_brute_backend_matches_oracle(self, ds, engines):
+        res = engines["none"].search(
+            QueryBatch.match(ds.query_features, ds.query_attrs),
+            SearchParams(k=10, backend="brute"),
+        )
+        truth = brute_force_hybrid(
+            ds.features, ds.attrs, ds.query_features, ds.query_attrs, 10
+        )
+        np.testing.assert_array_equal(np.asarray(res.ids),
+                                      np.asarray(truth.ids))
+        np.testing.assert_array_equal(np.asarray(res.sqdists),
+                                      np.asarray(truth.sqdists))
+
+    def test_tuple_queries_accepted(self, ds, engines):
+        res = engines["none"].search(
+            (ds.query_features, ds.query_attrs), SearchParams(k=5)
+        )
+        assert np.asarray(res.ids).shape == (ds.query_features.shape[0], 5)
+
+
+# ---------------------------------------------------------------------------
+# Engine semantics beyond the legacy surface
+# ---------------------------------------------------------------------------
+
+
+class TestEngineSemantics:
+    def test_per_query_counters(self, ds, engines):
+        b = ds.query_features.shape[0]
+        res = engines["pq"].search(
+            QueryBatch.match(ds.query_features, ds.query_attrs),
+            SearchParams(k=10, backend="graph"),
+        )
+        assert np.asarray(res.n_dist_evals).shape == (b,)
+        assert np.asarray(res.n_code_evals).shape == (b,)
+        assert res.total_dist_evals == int(np.sum(np.asarray(res.n_dist_evals)))
+        assert res.total_code_evals > 0
+        assert res.mean_dist_evals == pytest.approx(res.total_dist_evals / b)
+
+    def test_quant_none_forces_full_precision(self, ds, engines):
+        res = engines["sq8"].search(
+            QueryBatch.match(ds.query_features, ds.query_attrs),
+            SearchParams(k=10, backend="graph", quant="none"),
+        )
+        assert res.total_code_evals == 0
+        exact = engines["none"].search(
+            QueryBatch.match(ds.query_features, ds.query_attrs),
+            SearchParams(k=10, backend="graph"),
+        )
+        np.testing.assert_array_equal(np.asarray(res.ids),
+                                      np.asarray(exact.ids))
+
+    def test_pure_ann_equals_unfiltered_topk(self, ds, engines):
+        qb = QueryBatch.pure_ann(ds.query_features, ds.attrs.shape[1])
+        res = engines["none"].search(qb, SearchParams(k=5, backend="brute"))
+        sv2 = auto_mod.brute_fused_sqdist(
+            jnp.asarray(ds.query_features), jnp.asarray(ds.query_attrs),
+            jnp.asarray(ds.features), jnp.asarray(ds.attrs),
+            MetricConfig(mode="l2"),
+        )
+        _, tids = jax.lax.top_k(-sv2, 5)
+        np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(tids))
+
+    def test_one_of_brute_exact_membership(self, ds, engines):
+        qs = [
+            Query(ds.query_features[i],
+                  [MATCH(int(ds.query_attrs[i, 0])), ONE_OF(0, 2),
+                   ANY, ANY, ANY])
+            for i in range(8)
+        ]
+        qb = QueryBatch.from_queries(qs)
+        res = engines["none"].search(qb, SearchParams(k=10))
+        ids = np.asarray(res.ids)
+        attrs = np.asarray(ds.attrs)
+        # numpy oracle: L2 rank over rows satisfying the predicates
+        feats = np.asarray(ds.features, np.float64)
+        for i in range(8):
+            sat = (attrs[:, 0] == int(ds.query_attrs[i, 0])) & (
+                (attrs[:, 1] == 0) | (attrs[:, 1] == 2)
+            )
+            d = ((feats - ds.query_features[i].astype(np.float64)) ** 2).sum(1)
+            want = np.argsort(np.where(sat, d, np.inf), kind="stable")[:10]
+            got = ids[i][ids[i] >= 0]
+            assert set(got) <= set(np.where(sat)[0])
+            # ≥9/10 id overlap tolerates f32-vs-f64 near-tie reordering
+            assert len(set(got) & set(want)) >= min(len(got), 9)
+
+    def test_one_of_graph_backend_with_enforcement(self, ds, engines):
+        qs = [
+            Query(ds.query_features[i],
+                  [ANY, ONE_OF(0, 2), ANY, ANY, ANY])
+            for i in range(8)
+        ]
+        qb = QueryBatch.from_queries(qs)
+        res = engines["none"].search(
+            qb, SearchParams(k=10, backend="graph", enforce_equality=True)
+        )
+        ids = np.asarray(res.ids)
+        a1 = np.asarray(ds.attrs)[np.maximum(ids, 0), 1]
+        assert (((a1 == 0) | (a1 == 2)) | (ids < 0)).all()
+
+    def test_one_of_membership_exact_on_traversal_without_enforcement(
+            self, ds, engines):
+        """ONE_OF is a hard predicate on every backend — a traversal
+        backend must never return an out-of-set value even when MATCH
+        enforcement is off."""
+        qs = [
+            Query(ds.query_features[i],
+                  [MATCH(int(ds.query_attrs[i, 0])), ONE_OF(0, 2),
+                   ANY, ANY, ANY])
+            for i in range(8)
+        ]
+        qb = QueryBatch.from_queries(qs)
+        res = engines["none"].search(qb, SearchParams(k=10, backend="graph"))
+        ids = np.asarray(res.ids)
+        a1 = np.asarray(ds.attrs)[np.maximum(ids, 0), 1]
+        assert (((a1 == 0) | (a1 == 2)) | (ids < 0)).all()
+        # MATCH dims stay soft without enforce_equality: some returned ids
+        # may miss the equality — they must not have been filtered out.
+        assert (ids >= 0).sum() > 0
+
+    def test_single_member_one_of_still_hard_filtered(self, ds, engines):
+        """ONE_OF(v) must hard-filter like any ONE_OF — not degrade to a
+        soft MATCH — and survivors stay sorted with INVALID at the tail."""
+        qs = [
+            Query(ds.query_features[i],
+                  [ANY, ONE_OF(int(ds.query_attrs[i, 1])), ANY, ANY, ANY])
+            for i in range(8)
+        ]
+        qb = QueryBatch.from_queries(qs)
+        res = engines["none"].search(qb, SearchParams(k=10, backend="graph"))
+        ids = np.asarray(res.ids)
+        a1 = np.asarray(ds.attrs)[np.maximum(ids, 0), 1]
+        want = np.asarray([int(ds.query_attrs[i, 1]) for i in range(8)])
+        assert ((a1 == want[:, None]) | (ids < 0)).all()
+        d = np.asarray(res.dists)
+        assert (np.diff(d, axis=1) >= -1e-4).all()  # sorted, INF at tail
+        valid = ids >= 0  # INVALID entries only as a suffix
+        assert (valid[:, :-1] >= valid[:, 1:]).all()
+
+    def test_brute_pq_rerank_size_bounds_fp_evals(self, ds, engines):
+        params = SearchParams(k=10, backend="brute", rerank_size=16)
+        res = engines["pq"].search(
+            QueryBatch.match(ds.query_features, ds.query_attrs), params
+        )
+        assert (np.asarray(res.n_dist_evals) <= 16).all()
+
+    def test_sq8_brute_explicitly_rejected(self, ds, engines):
+        qb = QueryBatch.match(ds.query_features, ds.query_attrs)
+        with pytest.raises(ValueError, match="sq8"):
+            engines["sq8"].plan(
+                qb, SearchParams(k=10, backend="brute", quant="sq8")
+            )
+        # auto resolution normalizes sq8 → full-precision oracle instead
+        plan = engines["sq8"].plan(qb, SearchParams(k=10, backend="brute"))
+        assert plan.quant_mode == "none"
+
+    def test_brute_pq_uses_adc_two_stage(self, ds, engines):
+        params = SearchParams(k=10, backend="brute")
+        res = engines["pq"].search(
+            QueryBatch.match(ds.query_features, ds.query_attrs), params
+        )
+        b, n = ds.query_features.shape[0], ds.features.shape[0]
+        # every code is scanned, only the pool head is read at f32
+        np.testing.assert_array_equal(
+            np.asarray(res.n_code_evals), np.full((b,), n)
+        )
+        assert (np.asarray(res.n_dist_evals) <= params.effective_pool).all()
+        truth = brute_force_hybrid(
+            ds.features, ds.attrs, ds.query_features, ds.query_attrs, 10
+        )
+        assert recall_at_k(res.ids, truth.ids, 10) >= 0.85
+
+    def test_engine_from_parts_matches_build(self, ds, engines):
+        idx = engines["none"].index
+        eng = Engine.from_parts(
+            idx.features, idx.attrs, idx.graph, idx.metric_cfg, stats=idx.stats
+        )
+        qb = QueryBatch.match(ds.query_features, ds.query_attrs)
+        p = SearchParams(k=10, backend="graph")
+        np.testing.assert_array_equal(
+            np.asarray(eng.search(qb, p).ids),
+            np.asarray(engines["none"].search(qb, p).ids),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Sharded backend parity (8 fake devices, subprocess-isolated)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_sharded_backend_parity():
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH="src")
+    code = textwrap.dedent("""
+        import json
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.api import Engine, QueryBatch, SearchParams
+        from repro.launch.mesh import make_local_mesh
+        from repro.distributed.search import ShardedStableIndex
+        from repro.core.auto import MetricConfig
+        from repro.core.help_graph import HelpConfig
+        from repro.data.synthetic import make_hybrid_dataset
+
+        ds = make_hybrid_dataset(n=2048, n_queries=32, profile="sift",
+                                 attr_dim=5, labels_per_dim=3, n_clusters=8,
+                                 attr_cluster_corr=0.8, seed=5)
+        mesh = make_local_mesh(data=2, model=4)
+        idx = ShardedStableIndex.build(
+            mesh, ds.features, ds.attrs, MetricConfig(mode="auto", alpha=1.0),
+            HelpConfig(gamma=16, gamma_new=4, max_rounds=4,
+                       quality_sample=64, node_block=512),
+        )
+        eng = Engine(idx)
+        qb = QueryBatch.match(ds.query_features, ds.query_attrs)
+        params = SearchParams(k=10)
+        plan = eng.plan(qb, params)
+        wild = QueryBatch.match(ds.query_features, ds.query_attrs,
+                                active=[0, 1])
+        with mesh:
+            res = eng.search(qb, params)
+            legacy = idx.search(ds.query_features, ds.query_attrs, k=10)
+            res_m = eng.search(wild, params)
+            legacy_m = idx.search(ds.query_features, ds.query_attrs, k=10,
+                                  mask=jnp.asarray(wild.mask))
+        d = np.asarray(res_m.dists)
+        print(json.dumps({
+            "backend": plan.backend,
+            "ids_equal": bool(np.array_equal(np.asarray(res.ids),
+                                             np.asarray(legacy.ids))),
+            "per_query_shape": list(np.asarray(res.n_dist_evals).shape),
+            "evals_positive": bool(res.total_dist_evals > 0),
+            "masked_ids_equal": bool(np.array_equal(np.asarray(res_m.ids),
+                                                    np.asarray(legacy_m.ids))),
+            "masked_differs": bool(not np.array_equal(np.asarray(res_m.ids),
+                                                      np.asarray(res.ids))),
+            "masked_sorted": bool((np.diff(d, axis=1) >= -1e-4).all()),
+        }))
+    """)
+    proc = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert proc.returncode == 0, f"stderr:\n{proc.stderr[-3000:]}"
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["backend"] == "sharded"
+    assert out["ids_equal"], out
+    assert out["per_query_shape"] == [32] and out["evals_positive"]
+    assert out["masked_ids_equal"], out
+    assert out["masked_differs"] and out["masked_sorted"], out

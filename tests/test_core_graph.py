@@ -185,7 +185,7 @@ class TestRouting:
             mc, RoutingConfig(k=10, pool_size=64, pioneer_size=8),
         )
         brute_evals = ds.query_features.shape[0] * ds.features.shape[0]
-        assert int(res.n_dist_evals) < 0.5 * brute_evals
+        assert res.total_dist_evals < 0.5 * brute_evals
 
     def test_termination_within_budget(self, ds, built):
         mc, _, graph, _, _ = built
@@ -242,7 +242,7 @@ class TestBaselines:
             ds.features, ds.attrs, ds.query_features, ds.query_attrs, 10
         )
         np.testing.assert_array_equal(np.asarray(truth.ids), np.asarray(pre.ids))
-        assert int(pre.n_dist_evals) < int(truth.n_dist_evals)
+        assert pre.total_dist_evals < truth.total_dist_evals
 
     def test_postfilter_recall_improves_with_kprime(self, ds):
         mc_l2 = MetricConfig(mode="l2")

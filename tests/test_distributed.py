@@ -51,21 +51,23 @@ def test_sharded_search_matches_merged_subindexes():
                        quality_sample=64, node_block=512),
         )
         with mesh:
-            ids, dists, evals = idx.search(ds.query_features, ds.query_attrs, k=10)
+            res = idx.search(ds.query_features, ds.query_attrs, k=10)
         truth = brute_force_hybrid(ds.features, ds.attrs,
                                    ds.query_features, ds.query_attrs, 10)
-        r = recall_at_k(np.asarray(ids), np.asarray(truth.ids), 10)
-        d = np.asarray(dists)
+        r = recall_at_k(np.asarray(res.ids), np.asarray(truth.ids), 10)
+        d = np.asarray(res.dists)
         print(json.dumps({
             "recall": float(r),
             "sorted": bool((np.diff(d, axis=1) >= -1e-4).all()),
-            "ids_in_range": bool((np.asarray(ids) < 2048).all()),
-            "evals": int(evals),
+            "ids_in_range": bool((np.asarray(res.ids) < 2048).all()),
+            "evals": res.total_dist_evals,
+            "per_query_shape": list(np.asarray(res.n_dist_evals).shape),
         }))
     """)
     assert out["recall"] >= 0.6, out  # 4 tiny sub-indices: recall bounded by
     # per-shard match density; exactness of the merge is checked separately
     assert out["sorted"] and out["ids_in_range"]
+    assert out["per_query_shape"] == [32] and out["evals"] > 0
 
 
 def test_sharded_merge_is_exact_for_bruteforce_metric():
@@ -94,8 +96,9 @@ def test_sharded_merge_is_exact_for_bruteforce_metric():
         cfg = RoutingConfig(k=10, pool_size=128, pioneer_size=16,
                             refine_max_iters=512)
         with mesh:
-            ids, dists, _ = idx.search(ds.query_features, ds.query_attrs,
-                                       k=10, routing_cfg=cfg)
+            res = idx.search(ds.query_features, ds.query_attrs,
+                             k=10, routing_cfg=cfg)
+        ids = res.ids
         tsq, tids = brute_topk(jnp.asarray(ds.query_features),
                                jnp.asarray(ds.query_attrs),
                                jnp.asarray(ds.features),
