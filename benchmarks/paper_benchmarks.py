@@ -391,6 +391,104 @@ def quant_sweep(fast: bool = True) -> None:
         json.dump({"n": n, "pool": pool, "modes": summary}, f, indent=2)
 
 
+# ---------------------------------------------------------------------------
+# Filter sweep — ONE_OF set size / BETWEEN selectivity: traversal vs brute
+# ---------------------------------------------------------------------------
+
+
+def filter_sweep(fast: bool = True, n: int = 0) -> None:
+    """Recall@10 and evals/query vs. ONE_OF set size and BETWEEN
+    selectivity, graph traversal vs the brute oracle, exact vs sq8/pq.
+    Also emits ``BENCH_filters.json``. Pass ``--n`` (benchmarks.run) for a
+    tiny CI-sized run.
+
+    The headline claim this chart backs: since the planner change, ONE_OF
+    and BETWEEN batches ride the HELP graph with the interval penalty and
+    exact membership, at sub-linear evals/query — the brute baseline always
+    pays N evals.
+    """
+    import json
+    import os
+
+    from benchmarks.common import BENCH_DIR
+    from repro.api import ANY, BETWEEN, MATCH, ONE_OF, Query
+    from repro.quant import QuantConfig, QuantizedVectors
+
+    bench = "filter_sweep"
+    n = n or (8000 if fast else 30000)
+    labels = 8  # wide label range so set size / interval width can vary
+    pool = 128
+    ds = dataset("sift", 5, labels, n, 64)
+    nq = ds.query_features.shape[0]
+
+    stores = {
+        "none": None,
+        "sq8": QuantizedVectors.build(ds.features, QuantConfig(mode="sq8")),
+        "pq": QuantizedVectors.build(
+            ds.features,
+            QuantConfig(mode="pq", pq_subspaces=16,
+                        pq_train_iters=6 if fast else 15),
+        ),
+    }
+    engines = {m: built_engine(ds, "auto", quant=s) for m, s in stores.items()}
+    oracle = engines["none"]
+
+    def batch_for(pred0) -> QueryBatch:
+        return QueryBatch.from_queries([
+            Query(ds.query_features[i],
+                  [pred0, MATCH(int(ds.query_attrs[i, 1])), ANY, ANY, ANY])
+            for i in range(nq)
+        ])
+
+    def run_case(name: str, qb: QueryBatch, selectivity: float) -> dict:
+        truth = oracle.search(qb, SearchParams(k=10, backend="brute"))
+        case = {"selectivity": round(selectivity, 4), "modes": {}}
+        for mode, eng in engines.items():
+            for backend in ("graph", "brute"):
+                if backend == "brute" and mode == "sq8":
+                    continue  # no sq8 scan kernel; auto would run exact
+                params = SearchParams(k=10, pool_size=pool,
+                                      pioneer_size=max(4, pool // 8),
+                                      backend=backend)
+                t0 = time.time()
+                res = eng.search(qb, params)
+                jax.block_until_ready(res.ids)
+                dt = time.time() - t0
+                r = recall_at_k(res.ids, truth.ids, 10)
+                fp = res.total_dist_evals // nq
+                code = res.total_code_evals // nq
+                tag = f"{name}/{mode}/{backend}"
+                emit(bench, tag, "recall", round(r, 4))
+                emit(bench, tag, "fp_evals_per_q", fp)
+                emit(bench, tag, "code_evals_per_q", code)
+                emit(bench, tag, "qps", round(nq / dt, 1))
+                case["modes"][f"{mode}/{backend}"] = {
+                    "recall_at_10": round(float(r), 4),
+                    "fp_evals_per_query": int(fp),
+                    "code_evals_per_query": int(code),
+                    "evals_frac_of_n": round(float(fp + code) / n, 4),
+                }
+        return case
+
+    summary: dict = {"n": n, "labels_per_dim": labels, "pool": pool,
+                     "one_of": {}, "between": {}}
+    for set_size in (1, 2, 4) if fast else (1, 2, 4, 6):
+        vals = list(range(set_size))
+        qb = batch_for(ONE_OF(*vals))
+        summary["one_of"][f"set{set_size}"] = run_case(
+            f"one_of{set_size}", qb, set_size / labels / labels
+        )
+    for width in (1, 3, 6):
+        qb = batch_for(BETWEEN(0, width))
+        summary["between"][f"width{width + 1}"] = run_case(
+            f"between{width + 1}", qb, (width + 1) / labels / labels
+        )
+    flush_csv(bench)
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    with open(os.path.join(BENCH_DIR, "BENCH_filters.json"), "w") as f:
+        json.dump(summary, f, indent=2)
+
+
 ALL = [
     tab1_magnitude_stats,
     fig3_qps_recall,
@@ -403,4 +501,5 @@ ALL = [
     fig10_gamma_sweep,
     tab5_kernel_fusion,
     quant_sweep,
+    filter_sweep,
 ]

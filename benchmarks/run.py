@@ -1,13 +1,16 @@
 """Benchmark entry point: one function per paper table/figure, plus the
-quantized-serving sweep (``--only quant`` → quant_sweep, which also writes
-the ``BENCH_quant.json`` artifact).
+quantized-serving sweep (``--only quant`` → quant_sweep, writing
+``BENCH_quant.json``) and the filter sweep (``--only filter`` →
+filter_sweep, writing ``BENCH_filters.json``).
 
-``PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]``
+``PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] [--n N]``
 Prints ``benchmark,name,metric,value`` CSV rows; artifacts land in
-artifacts/bench/. The roofline report (§Roofline) is separate:
-``python -m benchmarks.roofline``.
+artifacts/bench/. ``--n`` overrides the dataset size on benchmarks that
+take one (CI smoke runs use a tiny value). The roofline report
+(§Roofline) is separate: ``python -m benchmarks.roofline``.
 """
 import argparse
+import inspect
 import time
 
 
@@ -16,6 +19,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale-ish sizes (slower)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--n", type=int, default=0,
+                    help="dataset-size override for benchmarks accepting n")
     args = ap.parse_args()
 
     from benchmarks import paper_benchmarks as pb
@@ -27,9 +32,12 @@ def main() -> None:
             raise SystemExit(f"no benchmark matches {args.only!r}")
     t_start = time.time()
     for fn in fns:
+        kw = {}
+        if args.n and "n" in inspect.signature(fn).parameters:
+            kw["n"] = args.n
         print(f"=== {fn.__name__} ===", flush=True)
         t0 = time.time()
-        fn(fast=not args.full)
+        fn(fast=not args.full, **kw)
         print(f"=== {fn.__name__} done in {time.time()-t0:.1f}s ===", flush=True)
     print(f"ALL BENCHMARKS DONE in {time.time()-t_start:.1f}s")
 

@@ -1,6 +1,6 @@
 """Masking mechanism demo (paper §III-E): one engine serves full-equality,
-subset (wildcard), missing-value AND value-set hybrid queries — declared
-with per-attribute predicates instead of hand-built numpy masks.
+subset (wildcard), missing-value, value-set AND range hybrid queries —
+declared with per-attribute predicates instead of hand-built numpy masks.
 
     PYTHONPATH=src python examples/subset_query.py [--n 8000] [--queries 64]
 """
@@ -8,7 +8,9 @@ import argparse
 
 import numpy as np
 
-from repro.api import ANY, MATCH, ONE_OF, Engine, Query, QueryBatch, SearchParams
+from repro.api import (
+    ANY, BETWEEN, MATCH, ONE_OF, Engine, Query, QueryBatch, SearchParams,
+)
 from repro.core.baselines import brute_force_hybrid, recall_at_k
 from repro.core.help_graph import HelpConfig
 from repro.data.synthetic import make_hybrid_dataset
@@ -43,8 +45,9 @@ def main():
     print("F=0 is pure (unfiltered) ANN — one index, every query class.")
 
     # value-set query: attribute 0 must match, attribute 1 ∈ {0, 2}, rest
-    # unconstrained. The planner routes ONE_OF batches to the exact
-    # membership oracle automatically.
+    # unconstrained. ONE_OF compiles to its covering [lo, hi] interval, so
+    # the batch rides the HELP graph like any other query; exact set
+    # membership is still enforced on the output.
     qs = [
         Query(ds.query_features[i],
               [MATCH(int(ds.query_attrs[i, 0])), ONE_OF(0, 2), ANY, ANY, ANY])
@@ -57,7 +60,22 @@ def main():
     a1 = np.asarray(ds.attrs)[np.maximum(ids, 0), 1]
     ok = ((a1 == 0) | (a1 == 2) | (ids < 0)).all()
     print(f"ONE_OF batch → backend={plan.backend} ({plan.reason}); "
-          f"attr-1 ∈ {{0,2}} respected: {bool(ok)}")
+          f"attr-1 ∈ {{0,2}} respected: {bool(ok)}; "
+          f"evals/query = {res.total_dist_evals // max(len(qs), 1)} of {args.n}")
+
+    # range query: attribute 0 ∈ [0, 1] — the same interval machinery, as a
+    # soft AUTO penalty by default and a hard filter under enforce_equality.
+    qs = [
+        Query(ds.query_features[i], [BETWEEN(0, 1), ANY, ANY, ANY, ANY])
+        for i in range(min(16, args.queries))
+    ]
+    batch = QueryBatch.from_queries(qs)
+    res = eng.search(batch, SearchParams(k=10, enforce_equality=True))
+    ids = np.asarray(res.ids)
+    a0 = np.asarray(ds.attrs)[np.maximum(ids, 0), 0]
+    ok = (((a0 >= 0) & (a0 <= 1)) | (ids < 0)).all()
+    print(f"BETWEEN(0, 1) batch (enforced): attr-0 ∈ [0,1] respected: "
+          f"{bool(ok)}")
 
 
 if __name__ == "__main__":

@@ -5,8 +5,10 @@ query class: full-equality, subset/wildcard and missing-value hybrid
 queries. This package is that promise as an API:
 
 * ``Query`` / ``QueryBatch`` — declarative hybrid queries. A feature vector
-  plus per-attribute ``MATCH`` / ``ANY`` / ``ONE_OF`` predicates that
-  compile to the (qa, mask) pair of Eq. 8 and an AUTO penalty target.
+  plus per-attribute ``MATCH`` / ``ANY`` / ``ONE_OF`` / ``BETWEEN``
+  predicates that compile to the (qa, mask) pair of Eq. 8 plus, for wide
+  predicates, per-dimension [lo, hi] interval targets every scorer
+  consumes natively — value-set and range queries ride the HELP graph.
 * ``SearchParams`` — one consolidated knob surface (k, pool, rerank, quant,
   seed, enforce-equality, backend override).
 * ``Engine`` — the single search facade. A ``Searcher`` protocol with three
@@ -41,11 +43,14 @@ from repro.api.engine import (
     Searcher,
     SearchParams,
 )
-from repro.api.query import ANY, MATCH, ONE_OF, Predicate, Query, QueryBatch
+from repro.api.query import (
+    ANY, BETWEEN, MATCH, ONE_OF, Predicate, Query, QueryBatch,
+)
 from repro.core.routing import SearchResult
 
 __all__ = [
     "ANY",
+    "BETWEEN",
     "Engine",
     "MATCH",
     "ONE_OF",

@@ -16,21 +16,25 @@ index* so callers never copy codec state into configs:
 Planning rules (first match wins):
   1. ``params.backend`` override (validated against the index kind)
   2. sharded index → "sharded"
-  3. no HELP graph (``build_graph=False``), N ≤ ``params.brute_threshold``,
-     or a ONE_OF predicate (exact membership semantics) → "brute"
+  3. no HELP graph (``build_graph=False``) or N ≤ ``params.brute_threshold``
+     → "brute" (a purely size/graph-less decision)
   4. otherwise → "graph"
 
-ONE_OF membership is exact on *every* backend: when a ONE_OF batch runs on
-a traversal backend anyway (sharded index, or explicit backend override),
-the engine hard-filters the returned top-k by set membership host-side.
+Predicate *class* never forces the brute oracle: value-set (ONE_OF) and
+range (BETWEEN) batches compile to per-dimension [lo, hi] interval targets
+that every scorer — exact, SQ8, PQ/ADC, single-host and sharded — consumes
+natively, so they traverse the HELP graph like any equality batch. ONE_OF
+membership stays exact on *every* backend: after a traversal backend
+returns, the engine hard-filters the top-k by set membership host-side
+(the covering-interval penalty may admit in-hull non-members).
 
 Semantics note — the brute backend is the exact predicate *oracle*: MATCH
-is a hard filter there, so sparse queries can return fewer than k ids
-(INVALID padding), while traversal backends treat MATCH as the soft AUTO
-penalty unless ``enforce_equality=True``. Auto-planning therefore trades
-semantics as well as algorithm at ``brute_threshold``. Callers that need
-size-invariant behavior pin it: ``enforce_equality=True`` for hard
-semantics everywhere, or an explicit ``backend=`` override.
+and BETWEEN are hard filters there, so sparse queries can return fewer
+than k ids (INVALID padding), while traversal backends treat MATCH/BETWEEN
+as the soft AUTO penalty unless ``enforce_equality=True``. Auto-planning
+therefore trades semantics as well as algorithm at ``brute_threshold``.
+Callers that need size-invariant behavior pin it: ``enforce_equality=True``
+for hard semantics everywhere, or an explicit ``backend=`` override.
 
 Every future backend (4-bit PQ, OPQ, multi-host) implements ``Searcher``
 and registers here; ``Engine.save/load`` round-trips the whole surface.
@@ -139,6 +143,11 @@ def _mask_jnp(queries: QueryBatch) -> Optional[Array]:
     return None if queries.mask is None else jnp.asarray(queries.mask)
 
 
+def _targets_jnp(queries: QueryBatch) -> Array:
+    """(B, L) point or (B, L, 2) interval scorer targets."""
+    return jnp.asarray(queries.targets, jnp.int32)
+
+
 class GraphSearcher:
     """Single-host HELP-graph traversal (``StableIndex`` routing)."""
 
@@ -150,7 +159,7 @@ class GraphSearcher:
         return routing_mod.search(
             idx.features, idx.attrs, idx.graph,
             jnp.asarray(queries.vectors, jnp.float32),
-            jnp.asarray(queries.attrs, jnp.int32),
+            _targets_jnp(queries),
             idx.metric_cfg, plan.routing_cfg,
             mask=_mask_jnp(queries), seed=params.seed, quant=quant,
         )
@@ -164,7 +173,7 @@ class ShardedSearcher:
     def search(self, engine, queries, params, plan):
         return engine.index.search(
             jnp.asarray(queries.vectors, jnp.float32),
-            jnp.asarray(queries.attrs, jnp.int32),
+            _targets_jnp(queries),
             k=params.k, routing_cfg=plan.routing_cfg,
             mask=_mask_jnp(queries), seed=params.seed,
         )
@@ -174,9 +183,11 @@ class BruteForceSearcher:
     """Exact predicate oracle: hard filter + L2 ranking over the full shard.
 
     Three paths, cheapest applicable wins:
-      * match/any predicates, full precision — delegates to the legacy
-        ``brute_force_hybrid`` (bit-identical results by construction);
-      * ONE_OF predicates — same scan with exact set-membership filtering;
+      * point (match/any) predicates, full precision — delegates to the
+        legacy ``brute_force_hybrid`` (bit-identical results by
+        construction);
+      * ONE_OF / BETWEEN predicates — same scan with exact set-membership /
+        interval-containment filtering;
       * PQ codes + ``quant != "none"`` — two-stage: the fused ``adc_scan``
         kernel scores every code (LUT lookups, no f32 traffic), the top
         ``pool`` survivors are reranked with exact L2. ``n_dist_evals``
@@ -189,28 +200,30 @@ class BruteForceSearcher:
     def search(self, engine, queries, params, plan):
         idx = engine.index
         qv = jnp.asarray(queries.vectors, jnp.float32)
-        qa = jnp.asarray(queries.attrs, jnp.int32)
         if plan.quant_mode == "pq" and idx.quant is not None:
-            return self._adc_two_stage(engine, queries, qv, qa, params)
-        if not queries.has_one_of:
+            return self._adc_two_stage(engine, queries, qv, params)
+        if not (queries.has_one_of or queries.has_intervals):
             return baselines_mod.brute_force_hybrid(
-                idx.features, idx.attrs, qv, qa, params.k,
+                idx.features, idx.attrs, qv,
+                jnp.asarray(queries.attrs, jnp.int32), params.k,
                 mask=_mask_jnp(queries),
             )
         ok = _ok_matrix(engine, queries)
         sv2 = auto_mod.brute_fused_sqdist(
-            qv, qa, idx.features, idx.attrs, MetricConfig(mode="l2")
+            qv, jnp.asarray(queries.attrs, jnp.int32),
+            idx.features, idx.attrs, MetricConfig(mode="l2")
         )
         return _filtered_topk(sv2, ok, params.k, full_evals=idx.features.shape[0])
 
-    def _adc_two_stage(self, engine, queries, qv, qa, params):
+    def _adc_two_stage(self, engine, queries, qv, params):
         """ADC code scan → hard filter → exact rerank of the pool head.
         ``rerank_size`` bounds the full-precision stage exactly as in the
         traversal path (0 → whole pool)."""
         idx = engine.index
         lut = adc_lut(qv, idx.quant.codebook)
         scores = adc_scan(
-            lut, idx.quant.codes, qa, jnp.asarray(idx.attrs), mode="l2"
+            lut, idx.quant.codes, jnp.asarray(queries.attrs, jnp.int32),
+            jnp.asarray(idx.attrs), mode="l2"
         )  # (B, N) approximate squared L2 from codes only
         ok = _ok_matrix(engine, queries)
         pool = min(params.effective_pool, scores.shape[1])
@@ -230,14 +243,23 @@ class BruteForceSearcher:
 
 def _ok_matrix(engine: "Engine", queries: QueryBatch) -> Array:
     """(B, N) admissibility for the brute backend. The common predicate
-    classes stay on-device (no host transfer in the serving hot path);
-    ONE_OF set membership falls back to the cached host attrs."""
-    if not queries.has_one_of:
+    classes stay on-device (no host transfer in the serving hot path):
+    point batches via equality, interval (BETWEEN / covering-hull) batches
+    via containment; ONE_OF set membership falls back to the cached host
+    attrs."""
+    if queries.has_one_of:
+        return jnp.asarray(queries.admissible(engine.host_attrs))
+    if queries.intervals is None:
         return baselines_mod._equality_ok(
             jnp.asarray(queries.attrs, jnp.int32), engine.index.attrs,
             _mask_jnp(queries),
         )
-    return jnp.asarray(queries.admissible(engine.host_attrs))
+    iv = jnp.asarray(queries.intervals, jnp.int32)
+    xa = engine.index.attrs[None, :, :]
+    okl = (xa >= iv[:, None, :, 0]) & (xa <= iv[:, None, :, 1])
+    if queries.mask is not None:
+        okl = okl | (jnp.asarray(queries.mask)[:, None, :] == 0)
+    return okl.all(-1)
 
 
 def _filtered_topk(
@@ -411,21 +433,19 @@ class Engine:
             backend, reason = "brute", (
                 f"N={self.n_items} ≤ brute_threshold={params.brute_threshold}"
             )
-        elif queries.has_one_of:
-            backend, reason = "brute", (
-                "ONE_OF predicates need exact set membership"
-            )
         else:
             backend, reason = "graph", "large single-host index"
 
         quant_mode = self._resolve_quant(params, backend)
         routing_cfg = None
         if backend != "brute":
-            # ONE_OF under traversal: equality enforcement against the
-            # single traversal target would reject admissible values, so
-            # the engine applies the exact membership filter afterwards.
-            enforce = params.enforce_equality and not queries.has_one_of
-            routing_cfg = params.routing_config(quant_mode, enforce)
+            # Traversal-level enforcement checks interval containment for
+            # wide predicates, which never rejects an admissible value
+            # (ONE_OF members all lie within the covering hull); the exact
+            # set-membership filter still runs engine-side afterwards.
+            routing_cfg = params.routing_config(
+                quant_mode, params.enforce_equality
+            )
         return Plan(
             backend=backend, quant_mode=quant_mode,
             routing_cfg=routing_cfg, reason=reason,
@@ -443,18 +463,52 @@ class Engine:
         if isinstance(queries, tuple):
             queries = QueryBatch.match(*queries)
         plan = self.plan(queries, params)
-        res = _SEARCHERS[plan.backend].search(self, queries, params, plan)
-        if queries.has_one_of and plan.backend != "brute":
+        needs_filter = queries.has_one_of or (
+            params.enforce_equality and queries.has_intervals
+        )
+        exec_params, exec_plan = params, plan
+        if needs_filter and plan.backend != "brute":
+            # Widen the traversal cut from k to the whole exactly-scored
+            # head: the covering-interval penalty admits in-hull
+            # non-members with zero gap, so the membership filter below
+            # needs surplus candidates to backfill the slots they displace.
+            # On the exact path the entire pool is exactly scored
+            # (rerank_size only bounds the quantized rerank stage).
+            cfg = plan.routing_cfg
+            repl = {}
+            if plan.quant_mode == "none":
+                wide_k = cfg.pool_size
+                repl["rerank_size"] = 0  # unused on the exact path
+            else:
+                wide_k = cfg.effective_rerank
+            if wide_k > params.k:
+                exec_params = dataclasses.replace(params, k=wide_k)
+                exec_plan = dataclasses.replace(
+                    plan,
+                    routing_cfg=dataclasses.replace(cfg, k=wide_k, **repl),
+                )
+        res = _SEARCHERS[plan.backend].search(
+            self, queries, exec_params, exec_plan
+        )
+        if needs_filter and plan.backend != "brute":
             # ONE_OF membership is exact on every backend; full predicate
-            # enforcement (MATCH included) only under enforce_equality.
+            # enforcement (MATCH/BETWEEN included) only under
+            # enforce_equality — the host-side pass also re-sorts so
+            # survivors keep the ascending-with-INVALID-tail invariant.
             res = self._predicate_filter(res, queries, params.enforce_equality)
+            if res.ids.shape[1] > params.k:
+                res = res._replace(
+                    ids=res.ids[:, : params.k],
+                    dists=res.dists[:, : params.k],
+                    sqdists=res.sqdists[:, : params.k],
+                )
         return res
 
     def _predicate_filter(
         self, res: SearchResult, queries: QueryBatch, full: bool
     ) -> SearchResult:
         """Hard-filter traversal output host-side: ONE_OF membership always,
-        every predicate when ``full``."""
+        every predicate (equality / interval containment) when ``full``."""
         attrs = self.host_attrs
         ids = np.asarray(res.ids)
         taken = attrs[np.maximum(ids, 0)]  # (B, K, L)
@@ -477,10 +531,16 @@ class Engine:
     # -- persistence ---------------------------------------------------------
 
     def save(self, path: str) -> None:
+        """Persist a single-host engine (features, attrs, graph, metric
+        calibration, codes and codebooks) under ``path``."""
         if self.is_sharded:
             raise NotImplementedError(
-                "sharded engines rebuild from the builder; save the "
-                "single-host index instead"
+                "Engine.save supports single-host indexes only: a "
+                "ShardedStableIndex holds per-shard device arrays and "
+                "per-shard local HELP graphs with no serialized form yet "
+                "(tracked in ROADMAP.md under 'Sharded engine "
+                "persistence'). Rebuild sharded engines from the builder, "
+                "or save the single-host StableIndex and reshard on load."
             )
         self.index.save(path)
 

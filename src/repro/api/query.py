@@ -3,24 +3,33 @@
 A hybrid query is a feature vector plus one predicate per attribute
 dimension:
 
-  ``MATCH(v)``       — the attribute must equal the mapped value ``v``
-                       (full-equality query; compiles to mask = 1).
-  ``ANY``            — wildcard / missing value (subset query; compiles to
-                       mask = 0 so the dimension drops out of Eq. 8).
-  ``ONE_OF(v1, …)``  — the attribute must take one of several values.
-                       Graph traversal is guided by the member closest to
-                       the hull midpoint (the AUTO penalty |a - target| is
-                       then a lower-bound proxy for min_j |a - v_j|), and
-                       exact set membership is enforced on every backend's
-                       output — unlike MATCH, whose hard filtering is
-                       opt-in via ``enforce_equality``.
+  ``MATCH(v)``        — the attribute must equal the mapped value ``v``
+                        (full-equality query; compiles to mask = 1).
+  ``ANY``             — wildcard / missing value (subset query; compiles to
+                        mask = 0 so the dimension drops out of Eq. 8).
+  ``ONE_OF(v1, …)``   — the attribute must take one of several values.
+                        Compiles to the covering interval [min vⱼ, max vⱼ]
+                        for traversal (the interval-gap AUTO penalty is a
+                        lower bound of min_j |a − v_j|, zero across the
+                        hull), and exact set membership is enforced on every
+                        backend's output — unlike MATCH, whose hard
+                        filtering is opt-in via ``enforce_equality``.
+  ``BETWEEN(lo, hi)`` — range predicate: the attribute should fall inside
+                        [lo, hi]. The AUTO penalty is the interval gap
+                        max(lo − a, a − hi, 0); like MATCH it stays a soft
+                        penalty under traversal unless ``enforce_equality``
+                        (the brute oracle always hard-filters).
 
 ``Query`` is a single request; ``QueryBatch`` is the compiled, array-form
 batch the ``Engine`` executes. Compilation produces exactly the (qa, mask)
-pair the legacy ``search(..., mask=...)`` keyword path consumed, so the
+pair the legacy ``search(..., mask=...)`` keyword path consumed whenever
+every predicate is point-like (MATCH/ANY/single-value sets), so the
 declarative surface is bit-compatible with hand-built masks: an all-MATCH
 batch compiles to ``mask=None`` (the pure full-equality fast path) and an
-all-ANY batch is pure unfiltered ANN.
+all-ANY batch is pure unfiltered ANN. Wide predicates (multi-value ONE_OF,
+BETWEEN with lo < hi) additionally compile an ``intervals`` (B, L, 2)
+array — the per-dimension [lo, hi] targets every scorer consumes natively
+(see ``core.auto``).
 """
 from __future__ import annotations
 
@@ -31,6 +40,7 @@ import numpy as np
 
 __all__ = [
     "ANY",
+    "BETWEEN",
     "MATCH",
     "ONE_OF",
     "Predicate",
@@ -41,13 +51,14 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class Predicate:
-    """One per-attribute constraint. ``kind`` ∈ {match, any, one_of}."""
+    """One per-attribute constraint.
+    ``kind`` ∈ {match, any, one_of, between}."""
 
     kind: str
     values: tuple[int, ...] = ()
 
     def __post_init__(self):
-        if self.kind not in ("match", "any", "one_of"):
+        if self.kind not in ("match", "any", "one_of", "between"):
             raise ValueError(f"unknown predicate kind {self.kind!r}")
         if self.kind == "match" and len(self.values) != 1:
             raise ValueError("MATCH takes exactly one value")
@@ -55,31 +66,63 @@ class Predicate:
             raise ValueError("ONE_OF needs at least one value")
         if self.kind == "any" and self.values:
             raise ValueError("ANY takes no values")
+        if self.kind == "between":
+            if len(self.values) != 2:
+                raise ValueError("BETWEEN takes exactly (lo, hi)")
+            if self.values[0] > self.values[1]:
+                raise ValueError(
+                    f"BETWEEN needs lo ≤ hi, got {self.values}"
+                )
 
     # -- compilation ---------------------------------------------------------
 
     @property
-    def target(self) -> int:
-        """Traversal target: the value steering the AUTO penalty (Eq. 4).
+    def interval(self) -> tuple[int, int]:
+        """[lo, hi] traversal target steering the interval AUTO penalty.
 
-        MATCH: the value itself. ONE_OF: the member nearest the hull
-        midpoint (ties toward the smaller value) — minimizes the worst-case
-        gap between |a - target| and the exact min_j |a - v_j|. ANY: 0
-        (ignored, the mask zeroes the dimension).
+        MATCH: [v, v]. ONE_OF: the covering hull [min vⱼ, max vⱼ].
+        BETWEEN: [lo, hi] verbatim. ANY: [0, 0] (ignored, the mask zeroes
+        the dimension).
         """
+        if self.kind == "any":
+            return (0, 0)
+        if self.kind == "between":
+            return (int(self.values[0]), int(self.values[1]))
+        return (int(min(self.values)), int(max(self.values)))
+
+    @property
+    def target(self) -> int:
+        """Legacy point target (interval midpoint, ties toward the smaller
+        admissible value). Only consumed when the whole batch is point-like;
+        wide predicates are scored from ``interval`` instead."""
         if self.kind == "any":
             return 0
         if self.kind == "match":
             return int(self.values[0])
-        mid = (min(self.values) + max(self.values)) / 2.0
-        return int(min(sorted(self.values), key=lambda v: abs(v - mid)))
+        lo, hi = self.interval
+        mid = (lo + hi) / 2.0
+        if self.kind == "one_of":
+            return int(min(sorted(self.values), key=lambda v: abs(v - mid)))
+        return int(mid)
 
     @property
     def active(self) -> bool:
         return self.kind != "any"
 
+    @property
+    def is_point(self) -> bool:
+        """True iff the interval is degenerate (lo == hi) — the predicate
+        compiles onto the legacy point-target path bit-exactly."""
+        lo, hi = self.interval
+        return lo == hi
+
     def admits(self, value: int) -> bool:
-        return self.kind == "any" or int(value) in self.values
+        if self.kind == "any":
+            return True
+        if self.kind == "one_of":
+            return int(value) in self.values
+        lo, hi = self.interval
+        return lo <= int(value) <= hi
 
 
 def MATCH(value: int) -> Predicate:
@@ -94,6 +137,10 @@ def ONE_OF(*values: int) -> Predicate:
         else:
             flat.append(int(v))
     return Predicate("one_of", tuple(sorted(set(flat))))
+
+
+def BETWEEN(lo: int, hi: int) -> Predicate:
+    return Predicate("between", (int(lo), int(hi)))
 
 
 ANY = Predicate("any")
@@ -112,7 +159,9 @@ class Query:
         )
         preds = tuple(predicates)
         if not all(isinstance(p, Predicate) for p in preds):
-            raise TypeError("predicates must be MATCH/ANY/ONE_OF instances")
+            raise TypeError(
+                "predicates must be MATCH/ANY/ONE_OF/BETWEEN instances"
+            )
         object.__setattr__(self, "predicates", preds)
 
     @property
@@ -124,19 +173,23 @@ class QueryBatch:
     """Compiled batch form of B queries over L attribute dimensions.
 
     Arrays (host numpy; the Engine converts on dispatch):
-      vectors  (B, M) f32   query features
-      attrs    (B, L) i32   traversal targets (Predicate.target)
-      mask     (B, L) i32 or None — Eq. 8 active-dimension mask; None iff
-               every predicate is MATCH (bit-compatible with the legacy
-               no-mask full-equality path)
-      allowed  (B, L, V) i32, -1 padded — exact admissible value sets for
-               hard filtering; None when no ONE_OF predicate exists (MATCH
-               membership ≡ equality, ANY ≡ mask)
-      hard     (B, L) bool — True exactly on ONE_OF dimensions (whose
-               membership is enforced on every backend); None with allowed
+      vectors   (B, M) f32   query features
+      attrs     (B, L) i32   legacy point targets (Predicate.target)
+      mask      (B, L) i32 or None — Eq. 8 active-dimension mask; None iff
+                every predicate is active (bit-compatible with the legacy
+                no-mask full-equality path)
+      intervals (B, L, 2) i32 or None — per-dimension [lo, hi] scorer
+                targets; None iff every predicate is point-like (lo = hi),
+                which keeps the legacy point path bit-exact. When present,
+                ``targets`` returns it and every backend scores intervals.
+      allowed   (B, L, V) i32, -1 padded — exact admissible value sets of
+                the ONE_OF dimensions (membership is enforced on every
+                backend); None when no multi-valued ONE_OF predicate exists
+      hard      (B, L) bool — True exactly on ONE_OF dimensions; None with
+                allowed
     """
 
-    __slots__ = ("vectors", "attrs", "mask", "allowed", "hard")
+    __slots__ = ("vectors", "attrs", "mask", "allowed", "hard", "intervals")
 
     def __init__(
         self,
@@ -145,6 +198,7 @@ class QueryBatch:
         mask: Optional[np.ndarray] = None,
         allowed: Optional[np.ndarray] = None,
         hard: Optional[np.ndarray] = None,
+        intervals: Optional[np.ndarray] = None,
     ):
         self.vectors = np.asarray(vectors, np.float32)
         self.attrs = np.asarray(attrs, np.int32)
@@ -155,6 +209,14 @@ class QueryBatch:
         self.mask = None if mask is None else np.asarray(mask, np.int32)
         if self.mask is not None and self.mask.shape != self.attrs.shape:
             raise ValueError("mask must have the same (B, L) shape as attrs")
+        self.intervals = (
+            None if intervals is None else np.asarray(intervals, np.int32)
+        )
+        if self.intervals is not None:
+            if self.intervals.shape != self.attrs.shape + (2,):
+                raise ValueError("intervals must be (B, L, 2)")
+            if (self.intervals[..., 0] > self.intervals[..., 1]).any():
+                raise ValueError("intervals need lo ≤ hi per dimension")
         self.allowed = None if allowed is None else np.asarray(allowed, np.int32)
         if self.allowed is not None and self.allowed.shape[:2] != self.attrs.shape:
             raise ValueError("allowed must be (B, L, V)")
@@ -207,25 +269,33 @@ class QueryBatch:
         mask = np.array(
             [[int(p.active) for p in q.predicates] for q in queries], np.int32
         )
+        ivs = np.array(
+            [[p.interval for p in q.predicates] for q in queries], np.int32
+        )  # (B, L, 2)
+        if (ivs[..., 0] == ivs[..., 1]).all():
+            ivs = None  # all point-like ≡ the legacy (attrs, mask) path
         has_one_of = any(
             p.kind == "one_of" for q in queries for p in q.predicates
         )
         allowed = hard = None
         if has_one_of:
             v = max(
-                len(p.values) if p.active else 1
-                for q in queries for p in q.predicates
+                len(p.values) for q in queries for p in q.predicates
+                if p.kind == "one_of"
             )
             allowed = np.full((len(queries), l, v), -1, np.int32)
             hard = np.zeros((len(queries), l), bool)
             for i, q in enumerate(queries):
                 for j, p in enumerate(q.predicates):
-                    if p.active:
+                    if p.kind == "one_of":
                         allowed[i, j, : len(p.values)] = p.values
-                    hard[i, j] = p.kind == "one_of"
+                        hard[i, j] = True
         if mask.all():
-            mask = None  # all-MATCH/ONE_OF ≡ the legacy mask-free path
-        return cls(vectors, attrs, mask=mask, allowed=allowed, hard=hard)
+            mask = None  # all-active ≡ the legacy mask-free path
+        return cls(
+            vectors, attrs, mask=mask, allowed=allowed, hard=hard,
+            intervals=ivs,
+        )
 
     # -- views ---------------------------------------------------------------
 
@@ -238,6 +308,12 @@ class QueryBatch:
         return self.attrs.shape[1]
 
     @property
+    def targets(self) -> np.ndarray:
+        """The scorer's attribute-target operand: (B, L, 2) intervals when
+        any predicate is wide, the legacy (B, L) points otherwise."""
+        return self.attrs if self.intervals is None else self.intervals
+
+    @property
     def has_wildcard(self) -> bool:
         return self.mask is not None and bool((self.mask == 0).any())
 
@@ -246,28 +322,43 @@ class QueryBatch:
         return self.allowed is not None
 
     @property
+    def has_intervals(self) -> bool:
+        return self.intervals is not None
+
+    @property
     def is_pure_ann(self) -> bool:
         """All-wildcard batch ≡ unfiltered ANN (mask zeroes out Eq. 8)."""
         return self.mask is not None and bool((self.mask == 0).all())
+
+    def _bounds(self) -> tuple[np.ndarray, np.ndarray]:
+        """(lo, hi) per dimension — degenerate [attrs, attrs] for point
+        batches so containment checks cover every predicate uniformly."""
+        if self.intervals is not None:
+            return self.intervals[..., 0], self.intervals[..., 1]
+        return self.attrs, self.attrs
 
     def admissible(self, db_attrs: np.ndarray) -> np.ndarray:
         """(B, N) bool: rows of ``db_attrs`` satisfying every predicate.
 
         This is the exact hard-filter semantics: MATCH is equality, ANY is
-        always-true, ONE_OF is set membership. Used by the brute-force
-        oracle backend and the engine-level ``enforce_equality`` filter.
+        always-true, BETWEEN is interval containment, ONE_OF is set
+        membership. Used by the brute-force oracle backend and the
+        engine-level ``enforce_equality`` filter.
         """
         xa = np.asarray(db_attrs)
-        if self.allowed is None:
-            ok = xa[None, :, :] == self.attrs[:, None, :]  # (B, N, L)
-        else:
-            # membership in the padded allowed sets: (B, N, L, V) → any(V)
-            ok = (
+        lo, hi = self._bounds()
+        okl = (xa[None, :, :] >= lo[:, None, :]) & (
+            xa[None, :, :] <= hi[:, None, :]
+        )  # (B, N, L)
+        if self.allowed is not None:
+            # exact membership in the padded ONE_OF sets: (B, N, L, V)
+            member = (
                 xa[None, :, :, None] == self.allowed[:, None, :, :]
             ).any(-1)
+            okl = okl & (member | ~self.hard[:, None, :])
         if self.mask is not None:
-            ok = ok | (self.mask[:, None, :] == 0)
-        return ok.all(-1)
+            okl = okl | (self.mask[:, None, :] == 0)
+        return okl.all(-1)
 
     def admissible_rows(
         self, cand_attrs: np.ndarray, one_of_only: bool = False
@@ -278,23 +369,27 @@ class QueryBatch:
 
         ``one_of_only=True`` constrains just the multi-valued (true ONE_OF)
         dimensions: ONE_OF membership is exact on every backend, while
-        MATCH stays a soft AUTO penalty unless ``enforce_equality``.
+        MATCH/BETWEEN stay a soft AUTO penalty unless ``enforce_equality``.
         """
         xa = np.asarray(cand_attrs)
-        if self.allowed is None:
-            if one_of_only:
-                return np.ones(xa.shape[:2], bool)
-            okl = xa == self.attrs[:, None, :]
-        else:
-            okl = (xa[..., None] == self.allowed[:, None, :, :]).any(-1)
         if one_of_only:
-            okl = okl | ~self.hard[:, None, :]
-        elif self.mask is not None:
+            if self.allowed is None:
+                return np.ones(xa.shape[:2], bool)
+            member = (xa[..., None] == self.allowed[:, None, :, :]).any(-1)
+            return (member | ~self.hard[:, None, :]).all(-1)
+        lo, hi = self._bounds()
+        okl = (xa >= lo[:, None, :]) & (xa <= hi[:, None, :])
+        if self.allowed is not None:
+            member = (xa[..., None] == self.allowed[:, None, :, :]).any(-1)
+            okl = okl & (member | ~self.hard[:, None, :])
+        if self.mask is not None:
             okl = okl | (self.mask[:, None, :] == 0)
         return okl.all(-1)
 
     def __repr__(self) -> str:
-        kinds = "match-only" if self.allowed is None else "with-one-of"
+        kinds = "point" if self.intervals is None else "interval"
+        if self.allowed is not None:
+            kinds += "+one-of"
         m = "none" if self.mask is None else "per-dim"
         return (
             f"QueryBatch(B={self.batch_size}, L={self.attr_dim}, "

@@ -11,6 +11,20 @@ TPU adaptation (documented in DESIGN.md §2): hot paths rank by the *squared*
 fused metric  U² = S_V² · (1 + S_A/α)²  which induces the identical ordering
 (U ≥ 0, squaring is monotone) while avoiding sqrt on the VPU and letting the
 S_V² term come out of an MXU matmul via ‖q-x‖² = ‖q‖² + ‖x‖² - 2 q·x.
+
+Interval targets (§III-E generalization): every scorer accepts the query
+attribute targets either as points ``(…, L)`` — the legacy Eq. 2 form — or
+as per-dimension ``[lo, hi]`` intervals ``(…, L, 2)``, detected by the extra
+trailing axis. The per-dimension penalty generalizes to the interval gap
+
+    gap_l(a) = max(lo_l - a_l, a_l - hi_l, 0)
+
+which is zero anywhere inside the interval and reduces *bit-exactly* to
+|a_l - q_l| when lo = hi = q (max(q-a, a-q, 0) and |a-q| are the same f32
+value), so the point path and the degenerate-interval path rank
+identically. This is what lets value-set (ONE_OF → covering interval) and
+range (BETWEEN) predicates ride the HELP graph instead of the O(N) brute
+oracle.
 """
 from __future__ import annotations
 
@@ -62,17 +76,64 @@ def map_query_attrs(raw_query: np.ndarray, tables: list[np.ndarray]) -> np.ndarr
 # ---------------------------------------------------------------------------
 
 
+def is_interval_targets(targets: Array, attrs: Array) -> bool:
+    """True iff ``targets`` carries the extra trailing [lo, hi] axis
+    relative to the database attribute array it scores against.
+
+    Point targets must match the database rank exactly (insert explicit
+    axes on both operands to broadcast); an extra-rank operand whose
+    trailing axis is not the two interval bounds is rejected up front
+    rather than mis-sliced into nonsense lo/hi views.
+    """
+    if targets.ndim != attrs.ndim + 1:
+        return False
+    if targets.shape[-1] != 2:
+        raise ValueError(
+            "attribute targets one rank above the attrs must be [lo, hi] "
+            f"intervals with a trailing axis of 2, got shape "
+            f"{targets.shape} against attrs {attrs.shape}; point targets "
+            "must match the attrs rank"
+        )
+    return True
+
+
+def interval_bounds(targets: Array) -> tuple[Array, Array]:
+    """Split ``(…, L, 2)`` interval targets into f32 (lo, hi) views."""
+    return (
+        targets[..., 0].astype(jnp.float32),
+        targets[..., 1].astype(jnp.float32),
+    )
+
+
 def attribute_distance(a: Array, b: Array, mask: Optional[Array] = None) -> Array:
     """Manhattan attribute consistency S_A (Eq. 2); masked variant (Eq. 8).
 
-    ``a``/``b`` are integer-mapped attribute vectors, broadcastable against
-    each other; the trailing axis is L. ``mask`` (same trailing L) selects the
-    active dimensions: 0 ⇒ wildcard / missing value.
+    ``a`` holds the query targets: either point values broadcastable against
+    ``b`` (trailing axis L) or ``[lo, hi]`` intervals with one extra trailing
+    axis of size 2, in which case the per-dimension term is the interval gap
+    ``max(lo - b, b - hi, 0)`` (≡ |b - q| when lo = hi = q). ``b`` are the
+    integer-mapped database attribute vectors. ``mask`` (same trailing L)
+    selects the active dimensions: 0 ⇒ wildcard / missing value.
     """
-    diff = jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))
+    bf = b.astype(jnp.float32)
+    if is_interval_targets(a, b):
+        lo, hi = interval_bounds(a)
+        diff = jnp.maximum(jnp.maximum(lo - bf, bf - hi), 0.0)
+    else:
+        diff = jnp.abs(a.astype(jnp.float32) - bf)
     if mask is not None:
         diff = diff * mask.astype(jnp.float32)
     return diff.sum(axis=-1)
+
+
+def attribute_violation(a: Array, b: Array) -> Array:
+    """Bool per-dimension mismatch (the Hamming term's generalization):
+    point targets ⇒ inequality; interval targets ⇒ outside [lo, hi]."""
+    if is_interval_targets(a, b):
+        lo, hi = interval_bounds(a)
+        bf = b.astype(jnp.float32)
+        return (bf < lo) | (bf > hi)
+    return a != b
 
 
 def feature_distance(x: Array, y: Array) -> Array:
@@ -204,7 +265,8 @@ def auto_distance(
     alpha: float,
     mask: Optional[Array] = None,
 ) -> Array:
-    """Paper-exact U(D, Q) (Eq. 4), broadcasting over leading dims."""
+    """Paper-exact U(D, Q) (Eq. 4), broadcasting over leading dims.
+    ``qa`` may be point targets or ``[lo, hi]`` interval targets."""
     sv = feature_distance(qv, xv)
     sa = attribute_distance(qa, xa, mask)
     return sv * (1.0 + sa / alpha)
@@ -219,7 +281,8 @@ def fused_sqdist_from_sv2(
 ) -> Array:
     """Apply the mode's attribute fusion to a precomputed squared feature
     term. Shared by the exact path (sv2 from f32 vectors) and the quantized
-    path (sv2 from ADC/SQ8 codes — attributes stay full-precision)."""
+    path (sv2 from ADC/SQ8 codes — attributes stay full-precision).
+    ``qa`` may be point targets or ``[lo, hi]`` interval targets."""
     if cfg.mode == "l2":
         return sv2
     sa = attribute_distance(qa, xa, mask)
@@ -231,12 +294,11 @@ def fused_sqdist_from_sv2(
     if cfg.mode == "additive":
         u = jnp.sqrt(sv2) + sa
         return u * u
-    # nhq: static-weight fusion over Hamming distance
-    ham = (
-        (qa != xa)
-        if mask is None
-        else jnp.logical_and(qa != xa, mask.astype(bool))
-    )
+    # nhq: static-weight fusion over Hamming distance (interval form:
+    # a dimension counts iff the value falls outside [lo, hi])
+    ham = attribute_violation(qa, xa)
+    if mask is not None:
+        ham = jnp.logical_and(ham, mask.astype(bool))
     ham = ham.astype(jnp.float32).sum(axis=-1)
     u = jnp.sqrt(sv2) + cfg.nhq_weight * ham
     return u * u
@@ -253,6 +315,8 @@ def fused_sqdist(
     """Squared fused metric for ranking (ordering ≡ the mode's distance).
 
     Pointwise/broadcast form used by routing over gathered candidates.
+    ``qa`` may be point targets (broadcastable against ``xa``) or interval
+    targets with an extra trailing [lo, hi] axis.
     ``l2``/``additive``/``nhq`` square their respective distances so every
     mode ranks identically to its un-squared definition.
     """
@@ -260,6 +324,8 @@ def fused_sqdist(
 
 
 def _penalty(sa: Array, cfg: MetricConfig) -> Array:
+    """Multiplicative AUTO penalty (1 + S_A/α)² from a precomputed S_A —
+    the S_A may come from point |a-q| terms or interval gaps alike."""
     if cfg.mode == "auto":
         p = 1.0 + sa / cfg.alpha
         return p * p
@@ -278,8 +344,9 @@ def brute_fused_sqdist(
 ) -> Array:
     """(B, N) squared fused distances, MXU decomposition, chunked over N.
 
-    This is the pure-jnp oracle twin of ``kernels/fused_auto`` (same math,
-    same blocking philosophy) used for ground truth, reranking and the
+    ``qa`` is (B, L) point targets or (B, L, 2) interval targets. This is
+    the pure-jnp oracle twin of ``kernels/fused_auto`` (same math, same
+    blocking philosophy) used for ground truth, reranking and the
     ``retrieval_cand`` recsys path on CPU.
     """
     qv = qv.astype(jnp.float32)
@@ -287,31 +354,14 @@ def brute_fused_sqdist(
     qsq = (qv * qv).sum(-1)[:, None]  # (B, 1)
     n = db_v.shape[0]
     n_chunks = max(1, (n + chunk - 1) // chunk)
+    # (B, 1, L[, 2]) query targets against (1, N', L) database rows
+    qae = qa[:, None]
+    me = mask[:, None, :] if mask is not None else None
 
     def score_block(xv, xa):
         xsq = (xv * xv).sum(-1)[None, :]
         sv2 = jnp.maximum(qsq + xsq - 2.0 * (qv @ xv.T), 0.0)
-        if cfg.mode == "l2":
-            return sv2
-        diff = jnp.abs(
-            qa.astype(jnp.float32)[:, None, :] - xa.astype(jnp.float32)[None, :, :]
-        )
-        if mask is not None:
-            diff = diff * mask.astype(jnp.float32)[:, None, :]
-        sa = diff.sum(-1)
-        if cfg.mode == "attr":
-            return sa * sa + 1e-6 * sv2
-        if cfg.mode == "auto":
-            pen = 1.0 + sa / cfg.alpha
-            return sv2 * pen * pen
-        if cfg.mode == "additive":
-            u = jnp.sqrt(sv2) + sa
-            return u * u
-        ham = (qa[:, None, :] != xa[None, :, :])
-        if mask is not None:
-            ham = jnp.logical_and(ham, mask.astype(bool)[:, None, :])
-        u = jnp.sqrt(sv2) + cfg.nhq_weight * ham.astype(jnp.float32).sum(-1)
-        return u * u
+        return fused_sqdist_from_sv2(sv2, qae, xa[None, :, :], cfg, me)
 
     if n_chunks == 1:
         return score_block(db_v, db_a)

@@ -21,6 +21,12 @@ in-register, PQ codes go through the per-query ADC tables — filling the
 pool entries are then re-scored with exact fused distances before emitting
 top-k. ``n_dist_evals`` counts *only* full-precision evaluations (the rerank);
 compressed-code evaluations are reported separately as ``n_code_evals``.
+
+Interval targets: ``qa`` is accepted either as (B, L) point targets or as
+(B, L, 2) per-dimension [lo, hi] intervals (see ``core.auto``); the AUTO
+penalty, the quantized rerank and the ``enforce_equality`` output filter
+(which becomes interval *containment*) all honor both forms, so value-set
+and range predicates traverse the HELP graph exactly like equality queries.
 """
 from __future__ import annotations
 
@@ -110,30 +116,28 @@ def _score_candidates(
 ) -> Array:
     """(B, C) squared fused distances for gathered candidates.
 
+    ``qa`` is (B, L) point targets or (B, L, 2) interval targets.
     quant_mode='none' reads f32 vectors; 'sq8' dequantizes gathered int8
     codes in-register; 'pq' sums per-query ADC table entries. Attributes are
     never quantized — the AUTO penalty is exact in every mode.
     """
     ca = gops.gather_rows(db_a, cand)
     m = mask[:, None, :] if mask is not None else None
+    qae = qa[:, None]  # (B, 1, L[, 2]) against (B, C, L) candidates
     if quant_mode == "none":
         cv = gops.gather_rows(db_v, cand)
-        return auto_mod.fused_sqdist(
-            qv[:, None, :], qa[:, None, :], cv, ca, metric_cfg, m
-        )
+        return auto_mod.fused_sqdist(qv[:, None, :], qae, cv, ca, metric_cfg, m)
     if quant_mode == "sq8":
         codes, scale, zero = quant
         cv = sq_mod.sq8_decode(
             gops.gather_rows(codes, cand), sq_mod.SQParams(scale, zero)
         )
-        return auto_mod.fused_sqdist(
-            qv[:, None, :], qa[:, None, :], cv, ca, metric_cfg, m
-        )
+        return auto_mod.fused_sqdist(qv[:, None, :], qae, cv, ca, metric_cfg, m)
     # pq: ADC — Σ_s lut[b, s, code] replaces the f32 squared feature term
     codes, lut = quant
     cc = gops.gather_rows(codes, cand)  # (B, C, S)
     sv2 = jnp.maximum(pq_mod.adc_gathered_sqdist(lut, cc), 0.0)
-    return auto_mod.fused_sqdist_from_sv2(sv2, qa[:, None, :], ca, metric_cfg, m)
+    return auto_mod.fused_sqdist_from_sv2(sv2, qae, ca, metric_cfg, m)
 
 
 class _State(NamedTuple):
@@ -317,7 +321,7 @@ def _search_jit(
         ca = gops.gather_rows(db_a, r_ids)
         m = mask[:, None, :] if mask is not None else None
         rd = auto_mod.fused_sqdist(
-            qv[:, None, :], qa[:, None, :], cv, ca, metric_cfg, m
+            qv[:, None, :], qa[:, None], cv, ca, metric_cfg, m
         )
         rd = jnp.where(r_ids < 0, INF, rd)
         neg, take = jax.lax.top_k(-rd, cfg.k)
@@ -328,9 +332,13 @@ def _search_jit(
         n_code_evals = state.evals
     if cfg.enforce_equality:
         oa = gops.gather_rows(db_a, out_ids)
-        ok = (oa == qa[:, None, :]).all(-1) if mask is None else (
-            ((oa == qa[:, None, :]) | (mask[:, None, :] == 0)).all(-1)
-        )
+        if qa.ndim == 3:  # interval targets: containment in [lo, hi]
+            okl = (oa >= qa[:, None, :, 0]) & (oa <= qa[:, None, :, 1])
+        else:
+            okl = oa == qa[:, None, :]
+        if mask is not None:
+            okl = okl | (mask[:, None, :] == 0)
+        ok = okl.all(-1)
         out_ids = jnp.where(ok, out_ids, INVALID)
         out_sq = jnp.where(ok, out_sq, INF)
     return SearchResult(
@@ -368,6 +376,8 @@ def search(
 ) -> SearchResult:
     """Batched hybrid ANNS over a HELP index (public entry point).
 
+    ``qa`` carries the per-query attribute targets as (B, L) points or
+    (B, L, 2) [lo, hi] intervals (value-set / range predicates).
     Pass a ``QuantizedVectors`` store to run the traversal over compressed
     codes with a full-precision rerank (quant_mode is taken from the store
     when the config leaves it at 'none').

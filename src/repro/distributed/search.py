@@ -116,6 +116,11 @@ class ShardedStableIndex:
         the single-host path (``n_dist_evals``/``n_code_evals`` are per-query
         totals summed over model shards; ``n_hops`` sums shard iterations).
 
+        ``qa`` is (B, L) point targets or (B, L, 2) [lo, hi] interval
+        targets (value-set / range predicates) — intervals shard over
+        ``data`` exactly like points, with the trailing bound axis
+        replicated.
+
         Prefer ``repro.api.Engine`` — this remains as the backend
         implementation behind the ``Searcher`` protocol."""
         cfg = routing_cfg or RoutingConfig(k=k, pool_size=max(4 * k, 32))
@@ -190,20 +195,22 @@ class ShardedStableIndex:
             extra_args += (self.codes, self.pq_centroids)
             extra_specs += (P("model", None), P(None, None, None))
 
+        qv = jnp.asarray(qv, jnp.float32)
+        qa = jnp.asarray(qa, jnp.int32)
+        # interval targets carry a trailing replicated [lo, hi] axis
+        qa_spec = P("data", None, None) if qa.ndim == 3 else P("data", None)
         fn = sharding_mod.shard_map(
             local_search,
             mesh=mesh,
             in_specs=(
                 P("model", None), P("model", None), P("model", None),
-                P("data", None), P("data", None), P("data", None),
+                P("data", None), qa_spec, P("data", None),
             ) + extra_specs,
             out_specs=(
                 P("data", None), P("data", None), P("data"), P("data"), P(None)
             ),
             check_vma=False,
         )
-        qv = jnp.asarray(qv, jnp.float32)
-        qa = jnp.asarray(qa, jnp.int32)
         ids, sqd, evals, code_evals, hops = fn(
             self.features, self.attrs, self.graphs, qv, qa, entry, *extra_args
         )

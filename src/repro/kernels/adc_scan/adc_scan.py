@@ -13,6 +13,9 @@ ADC sums in one (bb × S·K) @ (S·K × bn) pass (gathers are VPU-hostile on
 TPU; one-hot contraction is the standard trick). The AUTO attribute
 consistency penalty (1 + S_A/α)² is applied in the same VMEM tile pass,
 exactly like ``fused_auto`` — so quantized routing keeps hybrid semantics.
+As there, the query target is an [lo, hi] interval per attribute dimension
+(two (bb, L) tiles; point targets are the lo = hi degenerate case) and the
+per-dimension penalty is the interval gap max(lo − a, a − hi, 0).
 
 Blocking: grid = (B/bb, N/bn). Defaults (bb, bn) = (8, 256) with S·K = 2048:
 LUT tile 64 KiB + one-hot tile 2 MiB + codes/attr tiles ≲ 20 KiB ≪ VMEM,
@@ -27,13 +30,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import split_targets
+
 Array = jax.Array
 
 DEFAULT_BLOCK_B = 8
 DEFAULT_BLOCK_N = 256
 
 
-def _kernel(lut_ref, codes_ref, qa_ref, xa_ref, mask_ref, o_ref, *,
+def _kernel(lut_ref, codes_ref, qlo_ref, qhi_ref, xa_ref, mask_ref, o_ref, *,
             n_subspaces: int, n_centroids: int, alpha: float, mode: str,
             attr_dim: int):
     lut = lut_ref[...].astype(jnp.float32)  # (bb, S·K)
@@ -51,12 +56,17 @@ def _kernel(lut_ref, codes_ref, qa_ref, xa_ref, mask_ref, o_ref, *,
     if mode == "l2":
         o_ref[...] = sv2
         return
-    qa = qa_ref[...].astype(jnp.float32)  # (bb, L)
+    qlo = qlo_ref[...].astype(jnp.float32)  # (bb, L)
+    qhi = qhi_ref[...].astype(jnp.float32)  # (bb, L)
     xa = xa_ref[...].astype(jnp.float32)  # (bn, L)
     m = mask_ref[...].astype(jnp.float32)  # (bb, L)
     sa = jnp.zeros(sv2.shape, jnp.float32)
     for l in range(attr_dim):  # L is small & static — unrolled on VPU
-        sa += jnp.abs(qa[:, l][:, None] - xa[:, l][None, :]) * m[:, l][:, None]
+        a = xa[:, l][None, :]
+        gap = jnp.maximum(
+            jnp.maximum(qlo[:, l][:, None] - a, a - qhi[:, l][:, None]), 0.0
+        )
+        sa += gap * m[:, l][:, None]
     pen = 1.0 + sa * (1.0 / alpha)
     o_ref[...] = sv2 * pen * pen
 
@@ -87,7 +97,8 @@ def adc_scan_scores(
     block_n: int = DEFAULT_BLOCK_N,
     interpret: bool = True,
 ) -> Array:
-    """(B, N) squared fused ADC distances. See module docstring for blocking."""
+    """(B, N) squared fused ADC distances. ``qa`` is (B, L) point targets or
+    (B, L, 2) [lo, hi] interval targets. See module docstring for blocking."""
     if mode not in ("auto", "l2"):
         raise ValueError(f"adc_scan supports modes ('auto', 'l2'), got {mode!r}")
     b, s_dim, k_dim = lut.shape
@@ -95,10 +106,12 @@ def adc_scan_scores(
     l_dim = qa.shape[1]
     if mask is None:
         mask = jnp.ones((b, l_dim), jnp.int32)
+    qlo, qhi = split_targets(qa)
 
     lut_p = _pad_to(lut.reshape(b, s_dim * k_dim), 0, block_b)
     codes_p = _pad_to(codes.astype(jnp.int32), 0, block_n)
-    qa_p = _pad_to(qa, 0, block_b)
+    qlo_p = _pad_to(qlo, 0, block_b)
+    qhi_p = _pad_to(qhi, 0, block_b)
     xa_p = _pad_to(xa, 0, block_n)
     mask_p = _pad_to(mask, 0, block_b)
 
@@ -113,6 +126,7 @@ def adc_scan_scores(
             pl.BlockSpec((block_b, s_dim * k_dim), lambda i, j: (i, 0)),
             pl.BlockSpec((block_n, s_dim), lambda i, j: (j, 0)),
             pl.BlockSpec((block_b, l_dim), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, l_dim), lambda i, j: (i, 0)),
             pl.BlockSpec((block_n, l_dim), lambda i, j: (j, 0)),
             pl.BlockSpec((block_b, l_dim), lambda i, j: (i, 0)),
         ],
@@ -121,5 +135,5 @@ def adc_scan_scores(
             (lut_p.shape[0], codes_p.shape[0]), jnp.float32
         ),
         interpret=interpret,
-    )(lut_p, codes_p, qa_p, xa_p, mask_p)
+    )(lut_p, codes_p, qlo_p, qhi_p, xa_p, mask_p)
     return out[:b, :n]

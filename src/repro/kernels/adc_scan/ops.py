@@ -32,7 +32,8 @@ def adc_scan(
     block_b: int = 8,
     block_n: int = 256,
 ) -> Array:
-    """(B, N) squared fused ADC distances (Pallas on TPU, interpret on CPU)."""
+    """(B, N) squared fused ADC distances (Pallas on TPU, interpret on CPU).
+    ``qa`` is (B, L) point targets or (B, L, 2) [lo, hi] interval targets."""
     return adc_scan_scores(
         lut, codes, qa, xa, alpha=alpha, mode=mode, mask=mask,
         block_b=block_b, block_n=block_n,

@@ -2,9 +2,11 @@
 
 Computes the (B, N) squared fused metric over PQ codes
     U² ≈ (Σ_s LUT[b, s, codes[n, s]]) · (1 + S_A/α)²
-with S_A the (optionally masked) Manhattan distance between integer-mapped
-attribute vectors. ``mode='l2'`` drops the attribute factor. Attributes stay
-full-precision — only the feature term is quantized.
+with S_A the (optionally masked) attribute penalty between integer-mapped
+attribute vectors: Manhattan |a − q| for (B, L) point targets, interval gap
+max(lo − a, a − hi, 0) for (B, L, 2) [lo, hi] targets. ``mode='l2'`` drops
+the attribute factor. Attributes stay full-precision — only the feature
+term is quantized.
 """
 from __future__ import annotations
 
@@ -19,7 +21,7 @@ Array = jax.Array
 def adc_scan_ref(
     lut: Array,  # (B, S, K) f32
     codes: Array,  # (N, S) int
-    qa: Array,  # (B, L) int
+    qa: Array,  # (B, L) int points or (B, L, 2) int intervals
     xa: Array,  # (N, L) int
     alpha: float,
     mode: str = "auto",
@@ -36,9 +38,13 @@ def adc_scan_ref(
     sv2 = jnp.maximum(sv2, 0.0)
     if mode == "l2":
         return sv2
-    diff = jnp.abs(
-        qa.astype(jnp.float32)[:, None, :] - xa.astype(jnp.float32)[None, :, :]
-    )
+    xaf = xa.astype(jnp.float32)[None, :, :]
+    if qa.ndim == 3:
+        lo = qa[..., 0].astype(jnp.float32)[:, None, :]
+        hi = qa[..., 1].astype(jnp.float32)[:, None, :]
+        diff = jnp.maximum(jnp.maximum(lo - xaf, xaf - hi), 0.0)
+    else:
+        diff = jnp.abs(qa.astype(jnp.float32)[:, None, :] - xaf)
     if mask is not None:
         diff = diff * mask.astype(jnp.float32)[:, None, :]
     sa = diff.sum(-1)

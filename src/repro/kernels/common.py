@@ -1,0 +1,28 @@
+"""Shared helpers for the kernel wrappers.
+
+One canonical parse of the attribute-target operand: every scorer family
+accepts (B, L) point targets or (B, L, 2) [lo, hi] interval targets and
+lowers them to the two (B, L) bound tiles its kernel consumes — a single
+definition so the families can never disagree on the contract.
+"""
+from __future__ import annotations
+
+import jax
+
+Array = jax.Array
+
+
+def split_targets(qa: Array) -> tuple[Array, Array]:
+    """Normalize (B, L) point / (B, L, 2) interval targets to (qlo, qhi).
+
+    Point targets duplicate into a degenerate lo = hi pair — the kernels'
+    interval-gap penalty max(lo − a, a − hi, 0) is then bit-identical to
+    the legacy |a − q| Manhattan term.
+    """
+    if qa.ndim == 3:
+        if qa.shape[-1] != 2:
+            raise ValueError(
+                f"interval targets must be (B, L, 2), got {qa.shape}"
+            )
+        return qa[..., 0], qa[..., 1]
+    return qa, qa

@@ -15,6 +15,13 @@ Blocking:
   Block sizes default to (bb, bn, bm) = (128, 256, 512): q-tile 256 KiB +
   x-tile 512 KiB + out-tile 128 KiB + attr tiles ≲ 16 KiB ≈ 0.9 MiB ≪ VMEM,
   and every matmul dim is a multiple of the 128-lane MXU tile.
+
+Interval targets: the query attribute target is an [lo, hi] interval per
+dimension, carried as two (B, L) tiles (qlo, qhi) so every attribute
+operand stays a 2D lane-aligned block; the per-dimension penalty is the
+interval gap max(lo − a, a − hi, 0), bit-identical to |a − q| when
+lo = hi = q. Callers pass either legacy (B, L) point targets or (B, L, 2)
+intervals — the wrapper splits/duplicates into the two tiles.
 """
 from __future__ import annotations
 
@@ -25,6 +32,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import split_targets
+
 Array = jax.Array
 
 DEFAULT_BLOCK_B = 128
@@ -32,7 +41,7 @@ DEFAULT_BLOCK_N = 256
 DEFAULT_BLOCK_M = 512
 
 
-def _kernel(qv_ref, xv_ref, qa_ref, xa_ref, mask_ref, o_ref, *,
+def _kernel(qv_ref, xv_ref, qlo_ref, qhi_ref, xa_ref, mask_ref, o_ref, *,
             n_m_blocks: int, alpha: float, mode: str, attr_dim: int):
     k = pl.program_id(2)
 
@@ -56,12 +65,18 @@ def _kernel(qv_ref, xv_ref, qa_ref, xa_ref, mask_ref, o_ref, *,
         if mode == "l2":
             o_ref[...] = sv2
         else:
-            qa = qa_ref[...].astype(jnp.float32)  # (bb, L)
+            qlo = qlo_ref[...].astype(jnp.float32)  # (bb, L)
+            qhi = qhi_ref[...].astype(jnp.float32)  # (bb, L)
             xa = xa_ref[...].astype(jnp.float32)  # (bn, L)
             m = mask_ref[...].astype(jnp.float32)  # (bb, L)
             sa = jnp.zeros(sv2.shape, jnp.float32)
             for l in range(attr_dim):  # L is small & static — unrolled on VPU
-                sa += jnp.abs(qa[:, l][:, None] - xa[:, l][None, :]) * m[:, l][:, None]
+                a = xa[:, l][None, :]
+                gap = jnp.maximum(
+                    jnp.maximum(qlo[:, l][:, None] - a, a - qhi[:, l][:, None]),
+                    0.0,
+                )
+                sa += gap * m[:, l][:, None]
             pen = 1.0 + sa * (1.0 / alpha)
             o_ref[...] = sv2 * pen * pen
 
@@ -93,16 +108,19 @@ def fused_auto_scores(
     block_m: int = DEFAULT_BLOCK_M,
     interpret: bool = True,
 ) -> Array:
-    """(B, N) squared fused distances. See module docstring for blocking."""
+    """(B, N) squared fused distances. ``qa`` is (B, L) point targets or
+    (B, L, 2) [lo, hi] interval targets. See module docstring for blocking."""
     b, m_dim = qv.shape
     n = xv.shape[0]
     l_dim = qa.shape[1]
     if mask is None:
         mask = jnp.ones((b, l_dim), jnp.int32)
+    qlo, qhi = split_targets(qa)
 
     qv_p = _pad_to(_pad_to(qv, 0, block_b), 1, block_m)
     xv_p = _pad_to(_pad_to(xv, 0, block_n), 1, block_m)
-    qa_p = _pad_to(qa, 0, block_b)
+    qlo_p = _pad_to(qlo, 0, block_b)
+    qhi_p = _pad_to(qhi, 0, block_b)
     xa_p = _pad_to(xa, 0, block_n)
     mask_p = _pad_to(mask, 0, block_b)
 
@@ -119,11 +137,12 @@ def fused_auto_scores(
             pl.BlockSpec((block_b, block_m), lambda i, j, k: (i, k)),
             pl.BlockSpec((block_n, block_m), lambda i, j, k: (j, k)),
             pl.BlockSpec((block_b, l_dim), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((block_b, l_dim), lambda i, j, k: (i, 0)),
             pl.BlockSpec((block_n, l_dim), lambda i, j, k: (j, 0)),
             pl.BlockSpec((block_b, l_dim), lambda i, j, k: (i, 0)),
         ],
         out_specs=pl.BlockSpec((block_b, block_n), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((qv_p.shape[0], xv_p.shape[0]), jnp.float32),
         interpret=interpret,
-    )(qv_p, xv_p, qa_p, xa_p, mask_p)
+    )(qv_p, xv_p, qlo_p, qhi_p, xa_p, mask_p)
     return out[:b, :n]

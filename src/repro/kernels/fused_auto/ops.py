@@ -33,7 +33,8 @@ def fused_auto(
     block_n: int = 256,
     block_m: int = 512,
 ) -> Array:
-    """(B, N) squared fused AUTO distances (Pallas on TPU, interpret on CPU)."""
+    """(B, N) squared fused AUTO distances (Pallas on TPU, interpret on CPU).
+    ``qa`` is (B, L) point targets or (B, L, 2) [lo, hi] interval targets."""
     return fused_auto_scores(
         qv, qa, xv, xa, alpha=alpha, mode=mode, mask=mask,
         block_b=block_b, block_n=block_n, block_m=block_m,

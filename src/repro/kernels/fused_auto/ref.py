@@ -2,9 +2,11 @@
 
 Computes the (B, N) squared fused metric
     U² = max(‖q‖² + ‖x‖² − 2 q·x, 0) · (1 + S_A/α)²
-with S_A the (optionally masked) Manhattan distance between integer-mapped
-attribute vectors. ``mode='l2'`` drops the attribute factor (the paper's
-"Pure L2" row in Table V).
+with S_A the (optionally masked) attribute penalty between integer-mapped
+attribute vectors: Manhattan |a − q| for (B, L) point targets, interval gap
+max(lo − a, a − hi, 0) for (B, L, 2) [lo, hi] targets (identical when
+lo = hi). ``mode='l2'`` drops the attribute factor (the paper's "Pure L2"
+row in Table V).
 """
 from __future__ import annotations
 
@@ -18,7 +20,7 @@ Array = jax.Array
 
 def fused_auto_ref(
     qv: Array,  # (B, M)
-    qa: Array,  # (B, L) int
+    qa: Array,  # (B, L) int points or (B, L, 2) int intervals
     xv: Array,  # (N, M)
     xa: Array,  # (N, L) int
     alpha: float,
@@ -32,7 +34,13 @@ def fused_auto_ref(
     sv2 = jnp.maximum(qsq + xsq - 2.0 * (qv @ xv.T), 0.0)
     if mode == "l2":
         return sv2
-    diff = jnp.abs(qa.astype(jnp.float32)[:, None, :] - xa.astype(jnp.float32)[None, :, :])
+    xaf = xa.astype(jnp.float32)[None, :, :]
+    if qa.ndim == 3:
+        lo = qa[..., 0].astype(jnp.float32)[:, None, :]
+        hi = qa[..., 1].astype(jnp.float32)[:, None, :]
+        diff = jnp.maximum(jnp.maximum(lo - xaf, xaf - hi), 0.0)
+    else:
+        diff = jnp.abs(qa.astype(jnp.float32)[:, None, :] - xaf)
     if mask is not None:
         diff = diff * mask.astype(jnp.float32)[:, None, :]
     sa = diff.sum(-1)

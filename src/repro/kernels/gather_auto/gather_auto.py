@@ -10,6 +10,11 @@ Blocking: grid over (B/bb, C/bc); a block holds (bb, bc, M) candidates plus
 the (bb, M) query slab. Defaults (bb, bc) = (8, 128) with M ≤ 1024:
 8·128·1024·4 B = 4 MiB candidate tile, well inside VMEM, with the reduce
 over M vectorized on the 8×128 VPU lanes.
+
+Interval targets: the query attribute target is an [lo, hi] interval per
+dimension, carried as two (bb, L) tiles; the penalty term per dimension is
+the interval gap max(lo − a, a − hi, 0) — bit-identical to |a − q| when
+lo = hi = q, so point targets are the degenerate case.
 """
 from __future__ import annotations
 
@@ -20,13 +25,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import split_targets
+
 Array = jax.Array
 
 DEFAULT_BLOCK_B = 8
 DEFAULT_BLOCK_C = 128
 
 
-def _kernel(qv_ref, qa_ref, cv_ref, ca_ref, mask_ref, o_ref, *,
+def _kernel(qv_ref, qlo_ref, qhi_ref, cv_ref, ca_ref, mask_ref, o_ref, *,
             alpha: float, mode: str, attr_dim: int):
     q = qv_ref[...].astype(jnp.float32)  # (bb, M)
     c = cv_ref[...].astype(jnp.float32)  # (bb, bc, M)
@@ -35,12 +42,17 @@ def _kernel(qv_ref, qa_ref, cv_ref, ca_ref, mask_ref, o_ref, *,
     if mode == "l2":
         o_ref[...] = sv2
         return
-    qa = qa_ref[...].astype(jnp.float32)  # (bb, L)
+    qlo = qlo_ref[...].astype(jnp.float32)  # (bb, L)
+    qhi = qhi_ref[...].astype(jnp.float32)  # (bb, L)
     ca = ca_ref[...].astype(jnp.float32)  # (bb, bc, L)
     m = mask_ref[...].astype(jnp.float32)  # (bb, L)
     sa = jnp.zeros(sv2.shape, jnp.float32)
     for l in range(attr_dim):
-        sa += jnp.abs(ca[:, :, l] - qa[:, l][:, None]) * m[:, l][:, None]
+        a = ca[:, :, l]
+        gap = jnp.maximum(
+            jnp.maximum(qlo[:, l][:, None] - a, a - qhi[:, l][:, None]), 0.0
+        )
+        sa += gap * m[:, l][:, None]
     pen = 1.0 + sa * (1.0 / alpha)
     o_ref[...] = sv2 * pen * pen
 
@@ -70,13 +82,17 @@ def gather_auto_scores(
     block_c: int = DEFAULT_BLOCK_C,
     interpret: bool = True,
 ) -> Array:
+    """(B, C) squared fused distances over pre-gathered candidates. ``qa``
+    is (B, L) point targets or (B, L, 2) [lo, hi] interval targets."""
     b, c_dim, m_dim = cv.shape
     l_dim = qa.shape[1]
     if mask is None:
         mask = jnp.ones((b, l_dim), jnp.int32)
+    qlo, qhi = split_targets(qa)
 
     qv_p = _pad_axis(qv, 0, block_b)
-    qa_p = _pad_axis(qa, 0, block_b)
+    qlo_p = _pad_axis(qlo, 0, block_b)
+    qhi_p = _pad_axis(qhi, 0, block_b)
     mask_p = _pad_axis(mask, 0, block_b)
     cv_p = _pad_axis(_pad_axis(cv, 0, block_b), 1, block_c)
     ca_p = _pad_axis(_pad_axis(ca, 0, block_b), 1, block_c)
@@ -88,6 +104,7 @@ def gather_auto_scores(
         in_specs=[
             pl.BlockSpec((block_b, m_dim), lambda i, j: (i, 0)),
             pl.BlockSpec((block_b, l_dim), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, l_dim), lambda i, j: (i, 0)),
             pl.BlockSpec((block_b, block_c, m_dim), lambda i, j: (i, j, 0)),
             pl.BlockSpec((block_b, block_c, l_dim), lambda i, j: (i, j, 0)),
             pl.BlockSpec((block_b, l_dim), lambda i, j: (i, 0)),
@@ -97,5 +114,5 @@ def gather_auto_scores(
             (cv_p.shape[0], cv_p.shape[1]), jnp.float32
         ),
         interpret=interpret,
-    )(qv_p, qa_p, cv_p, ca_p, mask_p)
+    )(qv_p, qlo_p, qhi_p, cv_p, ca_p, mask_p)
     return out[:b, :c_dim]

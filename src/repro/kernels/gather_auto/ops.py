@@ -20,7 +20,8 @@ def gather_auto(
     mode: str = "auto",
     mask: Optional[Array] = None,
 ) -> Array:
-    """(B, C) squared fused distances over pre-gathered candidates."""
+    """(B, C) squared fused distances over pre-gathered candidates. ``qa``
+    is (B, L) point targets or (B, L, 2) [lo, hi] interval targets."""
     return gather_auto_scores(
         qv, qa, cv, ca, alpha=alpha, mode=mode, mask=mask,
         interpret=jax.default_backend() != "tpu",

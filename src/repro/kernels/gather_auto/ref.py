@@ -11,7 +11,7 @@ Array = jax.Array
 
 def gather_auto_ref(
     qv: Array,  # (B, M)
-    qa: Array,  # (B, L)
+    qa: Array,  # (B, L) points or (B, L, 2) [lo, hi] intervals
     cv: Array,  # (B, C, M) pre-gathered candidate features
     ca: Array,  # (B, C, L)
     alpha: float,
@@ -22,7 +22,13 @@ def gather_auto_ref(
     sv2 = jnp.maximum((d * d).sum(-1), 0.0)  # (B, C)
     if mode == "l2":
         return sv2
-    diff = jnp.abs(ca.astype(jnp.float32) - qa.astype(jnp.float32)[:, None, :])
+    caf = ca.astype(jnp.float32)
+    if qa.ndim == 3:
+        lo = qa[..., 0].astype(jnp.float32)[:, None, :]
+        hi = qa[..., 1].astype(jnp.float32)[:, None, :]
+        diff = jnp.maximum(jnp.maximum(lo - caf, caf - hi), 0.0)
+    else:
+        diff = jnp.abs(caf - qa.astype(jnp.float32)[:, None, :])
     if mask is not None:
         diff = diff * mask.astype(jnp.float32)[:, None, :]
     sa = diff.sum(-1)

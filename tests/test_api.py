@@ -13,7 +13,8 @@ import numpy as np
 import pytest
 
 from repro.api import (
-    ANY, MATCH, ONE_OF, Engine, Predicate, Query, QueryBatch, SearchParams,
+    ANY, BETWEEN, MATCH, ONE_OF, Engine, Predicate, Query, QueryBatch,
+    SearchParams,
 )
 from repro.core import auto as auto_mod
 from repro.core.auto import MetricConfig
@@ -77,14 +78,39 @@ class TestPredicateCompile:
         assert p.target in (0, 4)  # hull midpoint 2 → nearest member
         assert ONE_OF(1, 2, 9).target == 2  # mid 5 → 2 closer than 9? |2-5|=3 <
         assert ONE_OF(3).target == 3
+        assert p.interval == (0, 4)  # traversal rides the covering hull
         assert p.admits(0) and p.admits(4) and not p.admits(2)
         q = Query(np.zeros(4), [ONE_OF(0, 2), MATCH(1)])
         b = QueryBatch.from_queries([q])
-        assert b.has_one_of
+        assert b.has_one_of and b.has_intervals
         assert b.mask is None  # both dims active
+        assert b.intervals[0].tolist() == [[0, 2], [1, 1]]
         assert sorted(v for v in b.allowed[0, 0] if v >= 0) == [0, 2]
         ok = b.admissible(np.array([[0, 1], [2, 1], [1, 1], [0, 0]]))
         assert ok.tolist() == [[True, True, False, False]]
+
+    def test_between_compiles_to_interval(self):
+        p = BETWEEN(1, 3)
+        assert p.interval == (1, 3) and p.active and not p.is_point
+        assert p.admits(1) and p.admits(2) and p.admits(3)
+        assert not p.admits(0) and not p.admits(4)
+        q = Query(np.zeros(4), [BETWEEN(1, 3), MATCH(0), ANY])
+        b = QueryBatch.from_queries([q])
+        assert b.has_intervals and not b.has_one_of
+        assert b.intervals[0].tolist() == [[1, 3], [0, 0], [0, 0]]
+        assert b.mask.tolist() == [[1, 1, 0]]
+        # exact hard-filter semantics: containment + equality + wildcard
+        ok = b.admissible(np.array([[2, 0, 5], [0, 0, 5], [3, 1, 5]]))
+        assert ok.tolist() == [[True, False, False]]
+
+    def test_point_batches_skip_intervals(self):
+        """MATCH/ANY/degenerate-interval predicates compile to the legacy
+        point path (intervals=None) — the bit-exactness precondition."""
+        qs = [Query(np.zeros(4), [MATCH(2), ANY, ONE_OF(1), BETWEEN(3, 3)])]
+        b = QueryBatch.from_queries(qs)
+        assert b.intervals is None and b.targets is b.attrs
+        assert b.attrs.tolist() == [[2, 0, 1, 3]]
+        assert b.has_one_of  # single-member ONE_OF still hard-filters
 
     def test_match_batch_with_active_equals_manual_mask(self, ds):
         b = QueryBatch.match(ds.query_features, ds.query_attrs, active=[0, 2])
@@ -99,7 +125,11 @@ class TestPredicateCompile:
         with pytest.raises(ValueError):
             ONE_OF()
         with pytest.raises(ValueError):
-            Predicate("between", (1, 2))
+            BETWEEN(3, 1)  # lo > hi
+        with pytest.raises(ValueError):
+            Predicate("between", (1,))  # needs both bounds
+        with pytest.raises(ValueError):
+            Predicate("less_than", (1,))
 
 
 # ---------------------------------------------------------------------------
@@ -130,11 +160,22 @@ class TestPlanner:
             assert plan.quant_mode == mode
             assert plan.routing_cfg.quant_mode == mode
 
-    def test_one_of_plans_brute(self, ds, engines):
-        qs = [Query(ds.query_features[0],
-                    [ONE_OF(0, 2), ANY, ANY, ANY, ANY])]
+    def test_one_of_plans_graph(self, ds, engines):
+        """Predicate class no longer forces the brute oracle: ONE_OF and
+        BETWEEN batches traverse the HELP graph (interval targets), brute
+        stays a purely size/graph-less decision."""
+        for preds in ([ONE_OF(0, 2), ANY, ANY, ANY, ANY],
+                      [BETWEEN(0, 1), ANY, ANY, ANY, ANY]):
+            qs = [Query(ds.query_features[0], preds)]
+            plan = engines["none"].plan(
+                QueryBatch.from_queries(qs),
+                SearchParams(k=5, brute_threshold=100),
+            )
+            assert plan.backend == "graph", preds
+        # …but the size rule still wins below the threshold
+        qs = [Query(ds.query_features[0], [ONE_OF(0, 2), ANY, ANY, ANY, ANY])]
         plan = engines["none"].plan(
-            QueryBatch.from_queries(qs), SearchParams(k=5, brute_threshold=100)
+            QueryBatch.from_queries(qs), SearchParams(k=5, brute_threshold=5000)
         )
         assert plan.backend == "brute"
 
@@ -270,7 +311,9 @@ class TestEngineSemantics:
             for i in range(8)
         ]
         qb = QueryBatch.from_queries(qs)
-        res = engines["none"].search(qb, SearchParams(k=10))
+        # pin the oracle backend: auto-planning now routes ONE_OF through
+        # graph traversal (covered by the traversal membership tests below)
+        res = engines["none"].search(qb, SearchParams(k=10, backend="brute"))
         ids = np.asarray(res.ids)
         attrs = np.asarray(ds.attrs)
         # numpy oracle: L2 rank over rows satisfying the predicates
@@ -300,11 +343,13 @@ class TestEngineSemantics:
         a1 = np.asarray(ds.attrs)[np.maximum(ids, 0), 1]
         assert (((a1 == 0) | (a1 == 2)) | (ids < 0)).all()
 
+    @pytest.mark.parametrize("mode", ["none", "sq8", "pq"])
     def test_one_of_membership_exact_on_traversal_without_enforcement(
-            self, ds, engines):
-        """ONE_OF is a hard predicate on every backend — a traversal
-        backend must never return an out-of-set value even when MATCH
-        enforcement is off."""
+            self, ds, engines, mode):
+        """ONE_OF is a hard predicate on every backend — after the planner
+        change, value-set batches auto-plan onto graph traversal (exact,
+        SQ8 and PQ alike) and must never return an out-of-set value even
+        when MATCH enforcement is off."""
         qs = [
             Query(ds.query_features[i],
                   [MATCH(int(ds.query_attrs[i, 0])), ONE_OF(0, 2),
@@ -312,13 +357,91 @@ class TestEngineSemantics:
             for i in range(8)
         ]
         qb = QueryBatch.from_queries(qs)
-        res = engines["none"].search(qb, SearchParams(k=10, backend="graph"))
+        params = SearchParams(k=10, brute_threshold=100)
+        eng = engines[mode]
+        assert eng.plan(qb, params).backend == "graph"
+        res = eng.search(qb, params)
         ids = np.asarray(res.ids)
         a1 = np.asarray(ds.attrs)[np.maximum(ids, 0), 1]
         assert (((a1 == 0) | (a1 == 2)) | (ids < 0)).all()
         # MATCH dims stay soft without enforce_equality: some returned ids
         # may miss the equality — they must not have been filtered out.
         assert (ids >= 0).sum() > 0
+        # traversal touches a small fraction of the corpus — the whole
+        # point of lifting the ONE_OF → brute special case
+        n = ds.features.shape[0]
+        assert res.total_dist_evals + res.total_code_evals < 8 * n
+
+    def test_one_of_traversal_recall_vs_oracle(self, ds, engines):
+        """Covering-interval guidance + exact membership post-filter must
+        recover (almost all of) the filtered oracle's top-k."""
+        from repro.core.baselines import recall_at_k
+
+        qs = [
+            Query(ds.query_features[i], [ANY, ONE_OF(0, 2), ANY, ANY, ANY])
+            for i in range(16)
+        ]
+        qb = QueryBatch.from_queries(qs)
+        truth = engines["none"].search(
+            qb, SearchParams(k=10, backend="brute")
+        )
+        res = engines["none"].search(
+            qb, SearchParams(k=10, pool_size=128, brute_threshold=100)
+        )
+        assert recall_at_k(res.ids, truth.ids, 10) >= 0.9
+        # and it does so while touching a fraction of the corpus
+        assert res.total_dist_evals < 16 * ds.features.shape[0]
+        # rerank_size must not cap the membership backfill on the exact
+        # path (routing scores the whole pool exactly regardless)
+        res_rr = engines["none"].search(
+            qb, SearchParams(k=10, pool_size=128, rerank_size=10,
+                             brute_threshold=100)
+        )
+        np.testing.assert_array_equal(np.asarray(res_rr.ids),
+                                      np.asarray(res.ids))
+
+    @pytest.mark.parametrize("mode", ["none", "sq8", "pq"])
+    def test_between_traversal_soft_and_enforced(self, ds, engines, mode):
+        """BETWEEN rides traversal on every codec: soft interval penalty by
+        default, hard containment under enforce_equality."""
+        qs = [
+            Query(ds.query_features[i], [BETWEEN(0, 1), ANY, ANY, ANY, ANY])
+            for i in range(8)
+        ]
+        qb = QueryBatch.from_queries(qs)
+        params = SearchParams(k=10, brute_threshold=100)
+        eng = engines[mode]
+        assert eng.plan(qb, params).backend == "graph"
+        soft = eng.search(qb, params)
+        assert (np.asarray(soft.ids) >= 0).all()  # soft: never filtered
+        hard = eng.search(
+            qb, SearchParams(k=10, brute_threshold=100, enforce_equality=True)
+        )
+        ids = np.asarray(hard.ids)
+        a0 = np.asarray(ds.attrs)[np.maximum(ids, 0), 0]
+        assert (((a0 >= 0) & (a0 <= 1)) | (ids < 0)).all()
+        d = np.asarray(hard.dists)
+        assert (np.diff(d, axis=1) >= -1e-4).all()  # sorted, INF at tail
+        valid = ids >= 0
+        assert (valid[:, :-1] >= valid[:, 1:]).all()
+
+    def test_between_brute_matches_numpy_oracle(self, ds, engines):
+        qs = [
+            Query(ds.query_features[i], [BETWEEN(1, 2), ANY, ANY, ANY, ANY])
+            for i in range(8)
+        ]
+        qb = QueryBatch.from_queries(qs)
+        res = engines["none"].search(qb, SearchParams(k=10, backend="brute"))
+        ids = np.asarray(res.ids)
+        attrs = np.asarray(ds.attrs)
+        feats = np.asarray(ds.features, np.float64)
+        for i in range(8):
+            sat = (attrs[:, 0] >= 1) & (attrs[:, 0] <= 2)
+            d = ((feats - ds.query_features[i].astype(np.float64)) ** 2).sum(1)
+            want = np.argsort(np.where(sat, d, np.inf), kind="stable")[:10]
+            got = ids[i][ids[i] >= 0]
+            assert set(got) <= set(np.where(sat)[0])
+            assert len(set(got) & set(want)) >= min(len(got), 9)
 
     def test_single_member_one_of_still_hard_filtered(self, ds, engines):
         """ONE_OF(v) must hard-filter like any ONE_OF — not degrade to a
@@ -372,6 +495,21 @@ class TestEngineSemantics:
         )
         assert recall_at_k(res.ids, truth.ids, 10) >= 0.85
 
+    def test_sharded_engine_save_raises_clear_error(self):
+        """Engine.save on a sharded backend must fail up front with a
+        NotImplementedError naming the limitation — not surface an
+        arbitrary error from deep inside checkpointing."""
+
+        class _FakeShardedIndex:  # anything that isn't a StableIndex
+            pass
+
+        eng = Engine(_FakeShardedIndex())
+        assert eng.is_sharded
+        with pytest.raises(NotImplementedError, match="single-host"):
+            eng.save("/tmp/should-never-be-written")
+        with pytest.raises(NotImplementedError, match="ShardedStableIndex"):
+            eng.save("/tmp/should-never-be-written")
+
     def test_engine_from_parts_matches_build(self, ds, engines):
         idx = engines["none"].index
         eng = Engine.from_parts(
@@ -397,7 +535,8 @@ def test_engine_sharded_backend_parity():
     code = textwrap.dedent("""
         import json
         import numpy as np, jax, jax.numpy as jnp
-        from repro.api import Engine, QueryBatch, SearchParams
+        from repro.api import (ANY, BETWEEN, MATCH, ONE_OF, Engine, Query,
+                               QueryBatch, SearchParams)
         from repro.launch.mesh import make_local_mesh
         from repro.distributed.search import ShardedStableIndex
         from repro.core.auto import MetricConfig
@@ -419,13 +558,29 @@ def test_engine_sharded_backend_parity():
         plan = eng.plan(qb, params)
         wild = QueryBatch.match(ds.query_features, ds.query_attrs,
                                 active=[0, 1])
+        ivq = QueryBatch.from_queries([
+            Query(ds.query_features[i],
+                  [ONE_OF(0, 2), BETWEEN(0, 1), ANY, ANY, ANY])
+            for i in range(16)
+        ])
         with mesh:
             res = eng.search(qb, params)
             legacy = idx.search(ds.query_features, ds.query_attrs, k=10)
             res_m = eng.search(wild, params)
             legacy_m = idx.search(ds.query_features, ds.query_attrs, k=10,
                                   mask=jnp.asarray(wild.mask))
+            res_iv = eng.search(ivq, params)
         d = np.asarray(res_m.dists)
+        iv_ids = np.asarray(res_iv.ids)
+        a = np.asarray(ds.attrs)[np.maximum(iv_ids, 0)]
+        # ONE_OF membership is hard on every backend; BETWEEN stays a soft
+        # penalty without enforce_equality, so only dim 0 is checked.
+        iv_ok = ((iv_ids < 0) | (a[:, :, 0] == 0) | (a[:, :, 0] == 2)).all()
+        try:
+            eng.save("/tmp/sharded-save-should-fail")
+            save_err = ""
+        except NotImplementedError as e:
+            save_err = str(e)
         print(json.dumps({
             "backend": plan.backend,
             "ids_equal": bool(np.array_equal(np.asarray(res.ids),
@@ -437,6 +592,10 @@ def test_engine_sharded_backend_parity():
             "masked_differs": bool(not np.array_equal(np.asarray(res_m.ids),
                                                       np.asarray(res.ids))),
             "masked_sorted": bool((np.diff(d, axis=1) >= -1e-4).all()),
+            "interval_plan": eng.plan(ivq, params).backend,
+            "interval_ok": bool(iv_ok),
+            "interval_nonempty": bool((iv_ids >= 0).any()),
+            "save_error": save_err,
         }))
     """)
     proc = subprocess.run(
@@ -451,3 +610,8 @@ def test_engine_sharded_backend_parity():
     assert out["per_query_shape"] == [32] and out["evals_positive"]
     assert out["masked_ids_equal"], out
     assert out["masked_differs"] and out["masked_sorted"], out
+    # interval (ONE_OF + BETWEEN) batches run on the sharded backend with
+    # exact ONE_OF membership, and Engine.save names its limitation
+    assert out["interval_plan"] == "sharded"
+    assert out["interval_ok"] and out["interval_nonempty"], out
+    assert "single-host" in out["save_error"], out

@@ -194,6 +194,85 @@ class TestMasking:
         np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4)
 
 
+class TestIntervalTargets:
+    """Per-dimension [lo, hi] interval targets (max(lo−a, a−hi, 0) penalty)
+    generalizing the point Manhattan term across every scorer."""
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=30, deadline=None)
+    def test_degenerate_interval_bit_exact_to_point(self, seed):
+        """lo = hi = q must reduce to |a − q| *bit-exactly* in every metric
+        mode — the all-MATCH legacy-path guarantee."""
+        qv, qa, xv, xa = rand_case(seed)
+        deg = jnp.stack([jnp.asarray(qa), jnp.asarray(qa)], axis=-1)
+        for mode in A.METRIC_MODES:
+            cfg = MetricConfig(mode=mode, alpha=0.7, nhq_weight=2.0)
+            point = A.brute_fused_sqdist(qv, qa, xv, xa, cfg)
+            interval = A.brute_fused_sqdist(qv, deg, xv, xa, cfg)
+            np.testing.assert_array_equal(
+                np.asarray(point), np.asarray(interval), err_msg=mode
+            )
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=30, deadline=None)
+    def test_zero_penalty_inside_interval(self, seed):
+        """Any value inside [lo, hi] contributes nothing: an all-covering
+        interval batch scores identically to pure L2."""
+        qv, qa, xv, xa = rand_case(seed, labels=4)
+        wide = jnp.stack(
+            [jnp.zeros_like(jnp.asarray(qa)),
+             jnp.full_like(jnp.asarray(qa), 3)], axis=-1
+        )  # covers the whole label range [0, 3]
+        cfg = MetricConfig(mode="auto", alpha=0.8)
+        got = A.brute_fused_sqdist(qv, wide, xv, xa, cfg)
+        l2 = A.brute_fused_sqdist(qv, qa, xv, xa, MetricConfig(mode="l2"))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(l2), rtol=1e-6)
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=30, deadline=None)
+    def test_gap_is_distance_to_nearest_bound(self, seed):
+        rng = np.random.default_rng(seed)
+        a = rng.integers(0, 10, size=(32, 4)).astype(np.int32)
+        lo = rng.integers(0, 10, size=(1, 4)).astype(np.int32)
+        hi = lo + rng.integers(0, 5, size=(1, 4)).astype(np.int32)
+        iv = jnp.asarray(np.stack([lo, hi], axis=-1))
+        got = np.asarray(A.attribute_distance(iv, jnp.asarray(a)))
+        want = (np.maximum(lo - a, 0) + np.maximum(a - hi, 0)).sum(-1)
+        np.testing.assert_allclose(got, want)
+
+    def test_interval_is_lower_bound_of_member_distance(self):
+        """The ONE_OF guidance guarantee: the covering-hull gap never
+        exceeds min_j |a − v_j| for any member set within the hull."""
+        rng = np.random.default_rng(0)
+        values = np.array([1, 4, 7])
+        iv = jnp.asarray([[[1, 7]]], jnp.int32)  # (1, 1, 2) hull
+        a = rng.integers(-3, 12, size=(64, 1)).astype(np.int32)
+        gap = np.asarray(A.attribute_distance(iv, jnp.asarray(a)))
+        exact = np.abs(a[:, 0:1] - values[None, :]).min(-1)
+        assert (gap <= exact + 1e-6).all()
+
+    def test_extra_rank_without_bound_axis_rejected(self):
+        """An extra-rank target whose trailing axis isn't the two [lo, hi]
+        bounds must fail loudly, not be mis-sliced into lo/hi views."""
+        bad = jnp.zeros((2, 1, 3), jnp.int32)  # rank 3 vs rank-2 attrs
+        xa = jnp.zeros((5, 3), jnp.int32)
+        with pytest.raises(ValueError, match="lo, hi"):
+            A.attribute_distance(bad, xa)
+        with pytest.raises(ValueError):
+            from repro.kernels.common import split_targets
+
+            split_targets(jnp.zeros((2, 3, 4), jnp.int32))
+
+    def test_interval_violation_hamming(self):
+        iv = jnp.asarray([[[1, 3], [2, 2]]], jnp.int32)  # (1, 2, 2)
+        xa = jnp.asarray([[0, 2], [2, 1], [3, 2], [4, 2]], jnp.int32)
+        got = np.asarray(A.attribute_violation(iv, xa))
+        want = np.array(
+            [[True, False], [False, True], [False, False], [True, False]]
+        )
+        np.testing.assert_array_equal(got, want)
+
+
 class TestBruteTopK:
     def test_topk_sorted_and_correct(self):
         qv, qa, xv, xa = rand_case(8, b=5, n=200)

@@ -85,6 +85,51 @@ class TestFusedAuto:
         want = A.brute_fused_sqdist(qv, qa, xv, xa, MetricConfig(mode="auto", alpha=0.9))
         np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-3)
 
+    def test_interval_targets_match_ref(self):
+        """(B, L, 2) [lo, hi] targets: kernel == ref == core brute scorer,
+        and degenerate intervals are bit-exact to the point path."""
+        from repro.core import auto as A
+        from repro.core.auto import MetricConfig
+
+        rng = np.random.default_rng(11)
+        b, n, m, l = 9, 130, 48, 5
+        qv = jnp.asarray(rng.normal(size=(b, m)), jnp.float32)
+        xv = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+        qa = jnp.asarray(rng.integers(0, 5, size=(b, l)), jnp.int32)
+        xa = jnp.asarray(rng.integers(0, 5, size=(n, l)), jnp.int32)
+        other = jnp.asarray(rng.integers(0, 5, size=(b, l)), jnp.int32)
+        iv = jnp.stack([jnp.minimum(qa, other), jnp.maximum(qa, other)], -1)
+        got = fused_auto_scores(qv, iv, xv, xa, alpha=0.8, interpret=True)
+        want = fused_auto_ref(qv, iv, xv, xa, alpha=0.8)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+        brute = A.brute_fused_sqdist(
+            qv, iv, xv, xa, MetricConfig(mode="auto", alpha=0.8)
+        )
+        np.testing.assert_allclose(np.asarray(got), np.asarray(brute),
+                                   rtol=1e-3, atol=1e-3)
+        deg = jnp.stack([qa, qa], -1)
+        np.testing.assert_array_equal(
+            np.asarray(fused_auto_scores(qv, deg, xv, xa, alpha=0.8,
+                                         interpret=True)),
+            np.asarray(fused_auto_scores(qv, qa, xv, xa, alpha=0.8,
+                                         interpret=True)),
+        )
+
+    def test_interval_mask(self):
+        rng = np.random.default_rng(12)
+        qv = jnp.asarray(rng.normal(size=(8, 32)), jnp.float32)
+        xv = jnp.asarray(rng.normal(size=(40, 32)), jnp.float32)
+        lo = jnp.asarray(rng.integers(0, 3, size=(8, 5)), jnp.int32)
+        iv = jnp.stack([lo, lo + 1], -1)
+        xa = jnp.asarray(rng.integers(0, 4, size=(40, 5)), jnp.int32)
+        mask = jnp.asarray(rng.integers(0, 2, size=(8, 5)), jnp.int32)
+        got = fused_auto_scores(qv, iv, xv, xa, alpha=1.3, mask=mask,
+                                interpret=True)
+        want = fused_auto_ref(qv, iv, xv, xa, alpha=1.3, mask=mask)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **tol(jnp.float32))
+
     @pytest.mark.parametrize("blocks", [(32, 64, 32), (64, 128, 128)])
     def test_block_shape_invariance(self, blocks):
         bb, bn, bm = blocks
@@ -134,6 +179,27 @@ class TestGatherAuto:
         g = gather_auto_scores(qv, qa, cv, ca, alpha=1.0, interpret=True)
         f = fused_auto_scores(qv, qa, xv, xa, alpha=1.0, interpret=True)
         np.testing.assert_allclose(np.asarray(g), np.asarray(f), rtol=1e-4, atol=1e-4)
+
+    def test_interval_targets_match_ref_and_fused(self):
+        """Interval parity for the gathered scorer — same [lo, hi] contract
+        as fused_auto, applied per gathered candidate block."""
+        rng = np.random.default_rng(13)
+        b, n, m, l = 5, 70, 24, 4
+        qv = jnp.asarray(rng.normal(size=(b, m)), jnp.float32)
+        xv = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+        lo = jnp.asarray(rng.integers(0, 3, size=(b, l)), jnp.int32)
+        hi = lo + jnp.asarray(rng.integers(0, 3, size=(b, l)), jnp.int32)
+        iv = jnp.stack([lo, hi], -1)
+        xa = jnp.asarray(rng.integers(0, 5, size=(n, l)), jnp.int32)
+        cv = jnp.broadcast_to(xv[None], (b, n, m))
+        ca = jnp.broadcast_to(xa[None], (b, n, l))
+        g = gather_auto_scores(qv, iv, cv, ca, alpha=0.9, interpret=True)
+        want = gather_auto_ref(qv, iv, cv, ca, alpha=0.9)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+        f = fused_auto_scores(qv, iv, xv, xa, alpha=0.9, interpret=True)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(f),
+                                   rtol=1e-4, atol=1e-4)
 
 
 class TestFMInteraction:

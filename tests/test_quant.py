@@ -132,6 +132,30 @@ class TestADCScanKernel:
                 np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-5
             )
 
+    def test_interval_targets_match_ref(self):
+        """[lo, hi] interval targets through the fused ADC penalty: kernel
+        == ref, degenerate intervals bit-exact to the point path."""
+        rng = np.random.default_rng(7)
+        b, n, s, l = 5, 300, 8, 4
+        lut = jnp.asarray(rng.uniform(0, 4, size=(b, s, 256)), jnp.float32)
+        codes = jnp.asarray(rng.integers(0, 256, size=(n, s)), jnp.int32)
+        lo = jnp.asarray(rng.integers(0, 3, size=(b, l)), jnp.int32)
+        iv = jnp.stack([lo, lo + 2], -1)
+        xa = jnp.asarray(rng.integers(0, 5, size=(n, l)), jnp.int32)
+        got = adc_scan_scores(lut, codes, iv, xa, alpha=0.8, interpret=True)
+        want = adc_scan_ref(lut, codes, iv, xa, alpha=0.8)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-5
+        )
+        qa = jnp.asarray(rng.integers(0, 5, size=(b, l)), jnp.int32)
+        deg = jnp.stack([qa, qa], -1)
+        np.testing.assert_array_equal(
+            np.asarray(adc_scan_scores(lut, codes, deg, xa, alpha=0.8,
+                                       interpret=True)),
+            np.asarray(adc_scan_scores(lut, codes, qa, xa, alpha=0.8,
+                                       interpret=True)),
+        )
+
     def test_consistent_with_exact_on_decoded_vectors(self):
         """ADC fused scores == exact fused scores of the reconstruction."""
         rng = np.random.default_rng(4)
