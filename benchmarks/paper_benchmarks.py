@@ -489,6 +489,134 @@ def filter_sweep(fast: bool = True, n: int = 0) -> None:
         json.dump(summary, f, indent=2)
 
 
+# ---------------------------------------------------------------------------
+# Planner sweep — measured brute vs graph crossover audits the cost model
+# ---------------------------------------------------------------------------
+
+
+def planner_sweep(fast: bool = True, n: int = 0) -> None:
+    """Audit the calibrated cost-model planner against ground truth:
+    measured latency + evals/query for the brute and graph backends across
+    N × batch size × codec, the measured latency crossover, and the
+    planner's auto choice (with its predicted costs) at every point.
+
+    Emits ``BENCH_planner.json``: the measurement grid, per-(codec, batch)
+    measured/predicted crossovers, and the fitted ``CostModel`` of the
+    largest exact engine — loadable via ``planner.cost_model_from_table``
+    as the bundled-calibration alternative to the build-time probe.
+    Pass ``--n`` (benchmarks.run) for a tiny CI-sized run.
+    """
+    import json
+    import os
+
+    from benchmarks.common import BENCH_DIR
+    from repro.quant import QuantConfig, QuantizedVectors
+
+    bench = "planner_sweep"
+    if n:
+        grid = sorted({max(512, n // 4), max(1000, n // 2), n})
+    elif fast:
+        grid = [1000, 2000, 5000, 10000]
+    else:
+        grid = [1000, 2000, 5000, 10000, 20000, 50000]
+    batches = [16, 128] if fast else [16, 64, 256]
+    codecs = ["none", "pq"]
+    k, pool = 10, 64
+    repeats = 3
+
+    points: list = []
+    table_model = None
+    for codec in codecs:
+        for ni in grid:
+            ds = dataset("sift", 5, 3, ni, max(batches))
+            store = None
+            if codec == "pq":
+                store = QuantizedVectors.build(
+                    ds.features,
+                    QuantConfig(mode="pq", pq_subspaces=16, pq_train_iters=6),
+                )
+            eng = built_engine(ds, "auto", quant=store)
+            cm = eng.cost_model  # probe calibration happens here
+            if codec == "none":
+                table_model = cm  # largest exact engine wins (grid ascends)
+            for b in batches:
+                qb = QueryBatch.match(ds.query_features[:b],
+                                      ds.query_attrs[:b])
+
+                def timed(backend: str):
+                    params = SearchParams(
+                        k=k, pool_size=pool, pioneer_size=max(4, pool // 8),
+                        backend=backend,
+                    )
+                    res = eng.search(qb, params)  # compile + cache executable
+                    jax.block_until_ready(res.ids)
+                    t0 = time.perf_counter()
+                    for _ in range(repeats):
+                        res = eng.search(qb, params)
+                        jax.block_until_ready(res.ids)
+                    return res, (time.perf_counter() - t0) / repeats
+
+                res_b, dt_b = timed("brute")
+                res_g, dt_g = timed("graph")
+                auto = eng.plan(
+                    qb, SearchParams(k=k, pool_size=pool,
+                                     pioneer_size=max(4, pool // 8))
+                )
+                tag = f"{codec}/n{ni}/b{b}"
+                emit(bench, tag, "brute_ms", round(dt_b * 1e3, 3))
+                emit(bench, tag, "graph_ms", round(dt_g * 1e3, 3))
+                emit(bench, tag, "planner_choice", auto.backend)
+                points.append({
+                    "codec": codec, "n": ni, "batch": b,
+                    "brute_ms": round(dt_b * 1e3, 3),
+                    "graph_ms": round(dt_g * 1e3, 3),
+                    "brute_fp_evals_per_q": res_b.total_dist_evals // b,
+                    "brute_code_evals_per_q": res_b.total_code_evals // b,
+                    "graph_fp_evals_per_q": res_g.total_dist_evals // b,
+                    "graph_code_evals_per_q": res_g.total_code_evals // b,
+                    "planner_choice": auto.backend,
+                    "cost_brute": round(auto.cost_brute, 1),
+                    "cost_graph": round(auto.cost_graph, 1),
+                    "measured_faster": (
+                        "brute" if dt_b <= dt_g else "graph"
+                    ),
+                })
+
+    # crossover fits: per (codec, batch), the measured latency crossover
+    # region [last N where brute is faster, first N where graph is faster]
+    # and the planner's chosen crossover (first N routed to graph)
+    crossovers: dict = {}
+    for codec in codecs:
+        for b in batches:
+            ps = [p for p in points
+                  if p["codec"] == codec and p["batch"] == b]
+            brute_faster = [p["n"] for p in ps
+                            if p["measured_faster"] == "brute"]
+            graph_faster = [p["n"] for p in ps
+                            if p["measured_faster"] == "graph"]
+            chosen = [p["n"] for p in ps if p["planner_choice"] == "graph"]
+            cross = {
+                "measured_region": [
+                    max(brute_faster) if brute_faster else None,
+                    min(graph_faster) if graph_faster else None,
+                ],
+                "planner_crossover_n": min(chosen) if chosen else None,
+            }
+            crossovers[f"{codec}/b{b}"] = cross
+            emit(bench, f"{codec}/b{b}", "planner_crossover_n",
+                 cross["planner_crossover_n"])
+
+    flush_csv(bench)
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    with open(os.path.join(BENCH_DIR, "BENCH_planner.json"), "w") as f:
+        json.dump({
+            "k": k, "pool": pool, "grid": grid, "batches": batches,
+            "points": points,
+            "crossovers": crossovers,
+            "cost_model": table_model.to_json() if table_model else None,
+        }, f, indent=2)
+
+
 ALL = [
     tab1_magnitude_stats,
     fig3_qps_recall,
@@ -502,4 +630,5 @@ ALL = [
     tab5_kernel_fusion,
     quant_sweep,
     filter_sweep,
+    planner_sweep,
 ]

@@ -43,6 +43,11 @@ def main():
     plan = eng.plan(batch, params)
     print(f"  planner: backend={plan.backend} quant={plan.quant_mode} "
           f"({plan.reason})")
+    if plan.backend != "graph":
+        # at demo sizes the calibrated cost model can honestly prefer the
+        # dense scan — pin the graph backend so the traversal is on display
+        print("  (pinning backend='graph' to demo the HELP traversal)")
+        params = SearchParams(k=10, backend="graph")
     res = eng.search(batch, params)
     truth = brute_force_hybrid(
         ds.features, ds.attrs, ds.query_features, ds.query_attrs, 10

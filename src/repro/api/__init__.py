@@ -11,11 +11,14 @@ queries. This package is that promise as an API:
   consumes natively — value-set and range queries ride the HELP graph.
 * ``SearchParams`` — one consolidated knob surface (k, pool, rerank, quant,
   seed, enforce-equality, backend override).
-* ``Engine`` — the single search facade. A ``Searcher`` protocol with three
-  backends (single-host graph, mesh-sharded, brute-force oracle) and a
-  planner that picks the backend and codec automatically: brute force below
-  a size threshold or when a graph was never built, quantized two-stage when
-  the index carries codes — derived from the index, never copied by callers.
+* ``Engine`` — the single search facade, an explicit plan→compile→execute
+  pipeline: a calibrated ``CostModel`` (``api.planner``) predicts per-query
+  brute vs graph cost and picks the backend per batch; an ``Executor``
+  (``api.executor``) caches compiled executables by plan signature so
+  repeated serving batches skip Python dispatch and jit re-tracing; a
+  ``Searcher`` protocol executes over three backends (single-host graph,
+  mesh-sharded, brute-force oracle). Codec state is derived from the index,
+  never copied by callers.
 
 Typical use::
 
@@ -35,14 +38,17 @@ Typical use::
     res = eng.search(batch, SearchParams(k=10, enforce_equality=True))
 
 ``Engine.plan(batch, params)`` exposes the planner decision (backend,
-resolved quant mode, routing config, reason) without executing it.
+resolved quant mode, routing config, predicted brute/graph costs, reason)
+without executing it; ``Engine.executor.cache_info()`` reports plan-cache
+hits/misses.
 """
 from repro.api.engine import (
     Engine,
-    Plan,
     Searcher,
     SearchParams,
 )
+from repro.api.executor import Executor, PlanSignature
+from repro.api.planner import CostModel, Plan, cost_model_from_table
 from repro.api.query import (
     ANY, BETWEEN, MATCH, ONE_OF, Predicate, Query, QueryBatch,
 )
@@ -51,14 +57,18 @@ from repro.core.routing import SearchResult
 __all__ = [
     "ANY",
     "BETWEEN",
+    "CostModel",
     "Engine",
+    "Executor",
     "MATCH",
     "ONE_OF",
     "Plan",
+    "PlanSignature",
     "Predicate",
     "Query",
     "QueryBatch",
     "SearchParams",
     "SearchResult",
     "Searcher",
+    "cost_model_from_table",
 ]

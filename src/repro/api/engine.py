@@ -2,23 +2,30 @@
 
 ``Engine.search(QueryBatch, SearchParams) -> SearchResult`` is the public
 contract; serve/build launchers, the examples and the benchmark harness all
-go through it. Underneath, a small execution planner (``Engine.plan``)
-selects a ``Searcher`` backend and resolves the quantization mode *from the
-index* so callers never copy codec state into configs:
+go through it. Underneath runs an explicit plan→compile→execute pipeline:
 
-  graph    — single-host HELP traversal (``StableIndex`` + dynamic routing)
-  sharded  — mesh traversal + exact merge (``ShardedStableIndex``)
-  brute    — exact predicate oracle: hard filter + L2 top-k; on a
-             PQ-quantized index the scan runs over codes via the fused
-             ``adc_scan`` Pallas kernel with a full-precision rerank
-             (small/residual shards never touch most f32 vectors)
+  plan     — ``api.planner``: a ``CostModel`` calibrated from one probe
+             traversal on the engine's own index (or a bundled measured
+             table) predicts per-query brute vs graph cost for this (N,
+             pool, predicate width, batch, codec) and picks the backend;
+             the resolved quantization mode always comes *from the index*
+             so callers never copy codec state into configs
+  compile  — ``api.executor``: the plan signature (batch shape × predicate
+             kind × resolved RoutingConfig × codec) keys a cache of
+             compiled executables (widened exec plan, cached entry pool,
+             post-filter decision); repeated serving batches reuse the
+             executable and hit the jit cache with zero new traces
+  execute  — a ``Searcher`` backend:
+    graph    — single-host HELP traversal (``StableIndex`` + dynamic routing)
+    sharded  — mesh traversal + cross-shard rerank + exact merge
+               (``ShardedStableIndex``)
+    brute    — exact predicate oracle: hard filter + L2 top-k; on a
+               PQ-quantized index the scan runs over codes via the fused
+               ``adc_scan`` Pallas kernel with a full-precision rerank
+               (small/residual shards never touch most f32 vectors)
 
-Planning rules (first match wins):
-  1. ``params.backend`` override (validated against the index kind)
-  2. sharded index → "sharded"
-  3. no HELP graph (``build_graph=False``) or N ≤ ``params.brute_threshold``
-     → "brute" (a purely size/graph-less decision)
-  4. otherwise → "graph"
+Planning rules live in ``api.planner.make_plan`` (override → sharded →
+graph-less → deprecated fixed threshold → cost-model crossover).
 
 Predicate *class* never forces the brute oracle: value-set (ONE_OF) and
 range (BETWEEN) batches compile to per-dimension [lo, hi] interval targets
@@ -32,12 +39,15 @@ Semantics note — the brute backend is the exact predicate *oracle*: MATCH
 and BETWEEN are hard filters there, so sparse queries can return fewer
 than k ids (INVALID padding), while traversal backends treat MATCH/BETWEEN
 as the soft AUTO penalty unless ``enforce_equality=True``. Auto-planning
-therefore trades semantics as well as algorithm at ``brute_threshold``.
-Callers that need size-invariant behavior pin it: ``enforce_equality=True``
-for hard semantics everywhere, or an explicit ``backend=`` override.
+therefore trades semantics as well as algorithm at the cost-model
+crossover. Callers that need size-invariant behavior pin it:
+``enforce_equality=True`` for hard semantics everywhere, or an explicit
+``backend=`` override.
 
 Every future backend (4-bit PQ, OPQ, multi-host) implements ``Searcher``
-and registers here; ``Engine.save/load`` round-trips the whole surface.
+and registers here; ``Engine.save/load`` round-trips the whole surface —
+single-host *and* sharded engines (per-shard arrays + codec/mesh meta,
+resharded onto the current mesh on load).
 """
 from __future__ import annotations
 
@@ -57,6 +67,9 @@ from repro.core.help_graph import HelpConfig
 from repro.core.index import StableIndex
 from repro.core.routing import RoutingConfig, SearchResult
 from repro.quant import QuantConfig, QuantizedVectors, adc_lut, adc_scan
+from repro.api import planner as planner_mod
+from repro.api.executor import Executor
+from repro.api.planner import CostModel, Plan
 from repro.api.query import QueryBatch
 
 Array = jax.Array
@@ -74,6 +87,10 @@ class SearchParams:
     at the pool), ``rerank_size=0`` → whole pool. ``quant="auto"`` resolves
     from the index's code store; ``quant="none"`` forces a full-precision
     search even on a quantized index (impossible through the legacy path).
+
+    ``brute_threshold`` is deprecated: leave it at ``None`` and the planner
+    picks brute vs graph from the calibrated cost model. An explicit value
+    is still honored as a hard fixed-N override (with a DeprecationWarning).
     """
 
     k: int = 10
@@ -84,7 +101,7 @@ class SearchParams:
     seed: int = 0
     enforce_equality: bool = False
     backend: str = "auto"
-    brute_threshold: int = 2048
+    brute_threshold: Optional[int] = None  # deprecated fixed-N override
     coarse_max_iters: int = 64
     refine_max_iters: int = 256
     use_visited: bool = True
@@ -116,25 +133,20 @@ class SearchParams:
         )
 
 
-@dataclasses.dataclass(frozen=True)
-class Plan:
-    """Resolved execution plan — inspectable via ``Engine.plan``."""
-
-    backend: str  # graph | sharded | brute
-    quant_mode: str  # none | sq8 | pq (resolved from params × index)
-    routing_cfg: Optional[RoutingConfig]  # None for the brute backend
-    reason: str  # human-readable planner justification
-
-
 @runtime_checkable
 class Searcher(Protocol):
-    """Backend contract: execute a compiled plan over an index."""
+    """Backend contract: execute a compiled plan over an index.
+
+    ``entry_ids`` is the executor-cached seed pool (graph backend); backends
+    that derive their own entry pools (sharded: per-shard rows) or have none
+    (brute) ignore it.
+    """
 
     name: str
 
     def search(
         self, engine: "Engine", queries: QueryBatch, params: SearchParams,
-        plan: Plan,
+        plan: Plan, entry_ids: Optional[Array] = None,
     ) -> SearchResult:
         ...
 
@@ -153,7 +165,7 @@ class GraphSearcher:
 
     name = "graph"
 
-    def search(self, engine, queries, params, plan):
+    def search(self, engine, queries, params, plan, entry_ids=None):
         idx = engine.index
         quant = idx.quant if plan.quant_mode != "none" else None
         return routing_mod.search(
@@ -161,16 +173,19 @@ class GraphSearcher:
             jnp.asarray(queries.vectors, jnp.float32),
             _targets_jnp(queries),
             idx.metric_cfg, plan.routing_cfg,
-            mask=_mask_jnp(queries), seed=params.seed, quant=quant,
+            mask=_mask_jnp(queries), entry_ids=entry_ids,
+            seed=params.seed, quant=quant,
         )
 
 
 class ShardedSearcher:
-    """Mesh traversal + exact top-k merge (``ShardedStableIndex``)."""
+    """Mesh traversal + cross-shard rerank + exact top-k merge
+    (``ShardedStableIndex``; entry pools are per-shard-local, so the
+    executor-cached global entry pool is ignored)."""
 
     name = "sharded"
 
-    def search(self, engine, queries, params, plan):
+    def search(self, engine, queries, params, plan, entry_ids=None):
         return engine.index.search(
             jnp.asarray(queries.vectors, jnp.float32),
             _targets_jnp(queries),
@@ -197,7 +212,7 @@ class BruteForceSearcher:
 
     name = "brute"
 
-    def search(self, engine, queries, params, plan):
+    def search(self, engine, queries, params, plan, entry_ids=None):
         idx = engine.index
         qv = jnp.asarray(queries.vectors, jnp.float32)
         if plan.quant_mode == "pq" and idx.quant is not None:
@@ -296,10 +311,24 @@ _SEARCHERS: dict[str, Searcher] = {
 class Engine:
     """The one search facade. Wraps a single-host ``StableIndex`` or a mesh
     ``ShardedStableIndex`` and dispatches compiled query batches through the
-    planner onto a ``Searcher`` backend."""
+    plan→compile→execute pipeline onto a ``Searcher`` backend.
+
+    ``cost_model`` may be injected at construction (e.g. loaded from a
+    measured ``BENCH_planner.json`` table via
+    ``planner.cost_model_from_table``); otherwise it is calibrated lazily
+    from one probe traversal the first time an auto-plan needs it."""
 
     index: Union[StableIndex, "ShardedStableIndex"]  # noqa: F821
+    cost_model_override: Optional[CostModel] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
     _attrs_np: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+    _cost_model: Optional[CostModel] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+    _executor: Optional[Executor] = dataclasses.field(
         default=None, repr=False, compare=False
     )
 
@@ -310,6 +339,33 @@ class Engine:
         if self._attrs_np is None:
             self._attrs_np = np.asarray(self.index.attrs)
         return self._attrs_np
+
+    @property
+    def cost_model(self) -> CostModel:
+        """The calibrated planner cost model (probe runs on first access
+        unless one was injected)."""
+        if self._cost_model is None:
+            if self.cost_model_override is not None:
+                self._cost_model = self.cost_model_override
+            elif self.is_sharded:
+                raise ValueError(
+                    "cost_model applies to single-host engines only — a "
+                    "sharded index always plans onto the sharded backend, "
+                    "so there is no brute/graph crossover to calibrate"
+                )
+            else:
+                self._cost_model = planner_mod.calibrate(self.index)
+        return self._cost_model
+
+    @property
+    def executor(self) -> Executor:
+        """The plan-signature → compiled-executable cache for this engine."""
+        if self._executor is None:
+            self._executor = Executor(self)
+        return self._executor
+
+    def searcher(self, name: str) -> Searcher:
+        return _SEARCHERS[name]
 
     # -- construction --------------------------------------------------------
 
@@ -409,47 +465,9 @@ class Engine:
         return params.quant
 
     def plan(self, queries: QueryBatch, params: SearchParams) -> Plan:
-        """Resolve (backend, quant_mode, routing_cfg) for one batch."""
-        if queries.attr_dim != self.attr_dim:
-            raise ValueError(
-                f"query attr_dim {queries.attr_dim} != index {self.attr_dim}"
-            )
-        if params.backend != "auto":
-            backend = params.backend
-            if backend == "sharded" and not self.is_sharded:
-                raise ValueError("backend='sharded' needs a sharded index")
-            if backend != "sharded" and self.is_sharded:
-                raise ValueError(
-                    f"backend={backend!r} unavailable on a sharded index"
-                )
-            if backend == "graph" and not self.has_graph:
-                raise ValueError("backend='graph' but the index has no graph")
-            reason = "explicit backend override"
-        elif self.is_sharded:
-            backend, reason = "sharded", "index is sharded over the mesh"
-        elif not self.has_graph:
-            backend, reason = "brute", "index built without a HELP graph"
-        elif self.n_items <= params.brute_threshold:
-            backend, reason = "brute", (
-                f"N={self.n_items} ≤ brute_threshold={params.brute_threshold}"
-            )
-        else:
-            backend, reason = "graph", "large single-host index"
-
-        quant_mode = self._resolve_quant(params, backend)
-        routing_cfg = None
-        if backend != "brute":
-            # Traversal-level enforcement checks interval containment for
-            # wide predicates, which never rejects an admissible value
-            # (ONE_OF members all lie within the covering hull); the exact
-            # set-membership filter still runs engine-side afterwards.
-            routing_cfg = params.routing_config(
-                quant_mode, params.enforce_equality
-            )
-        return Plan(
-            backend=backend, quant_mode=quant_mode,
-            routing_cfg=routing_cfg, reason=reason,
-        )
+        """Resolve (backend, quant_mode, routing_cfg, predicted costs) for
+        one batch — see ``api.planner.make_plan`` for the rules."""
+        return planner_mod.make_plan(self, queries, params)
 
     # -- execution -----------------------------------------------------------
 
@@ -458,51 +476,14 @@ class Engine:
         queries: Union[QueryBatch, tuple],
         params: SearchParams = SearchParams(),
     ) -> SearchResult:
-        """Execute a compiled query batch. Also accepts a plain
-        ``(query_vectors, query_attrs)`` tuple as an all-MATCH batch."""
+        """Execute a compiled query batch: plan → executor (compiled-
+        executable cache keyed on the plan signature) → backend. Also
+        accepts a plain ``(query_vectors, query_attrs)`` tuple as an
+        all-MATCH batch."""
         if isinstance(queries, tuple):
             queries = QueryBatch.match(*queries)
         plan = self.plan(queries, params)
-        needs_filter = queries.has_one_of or (
-            params.enforce_equality and queries.has_intervals
-        )
-        exec_params, exec_plan = params, plan
-        if needs_filter and plan.backend != "brute":
-            # Widen the traversal cut from k to the whole exactly-scored
-            # head: the covering-interval penalty admits in-hull
-            # non-members with zero gap, so the membership filter below
-            # needs surplus candidates to backfill the slots they displace.
-            # On the exact path the entire pool is exactly scored
-            # (rerank_size only bounds the quantized rerank stage).
-            cfg = plan.routing_cfg
-            repl = {}
-            if plan.quant_mode == "none":
-                wide_k = cfg.pool_size
-                repl["rerank_size"] = 0  # unused on the exact path
-            else:
-                wide_k = cfg.effective_rerank
-            if wide_k > params.k:
-                exec_params = dataclasses.replace(params, k=wide_k)
-                exec_plan = dataclasses.replace(
-                    plan,
-                    routing_cfg=dataclasses.replace(cfg, k=wide_k, **repl),
-                )
-        res = _SEARCHERS[plan.backend].search(
-            self, queries, exec_params, exec_plan
-        )
-        if needs_filter and plan.backend != "brute":
-            # ONE_OF membership is exact on every backend; full predicate
-            # enforcement (MATCH/BETWEEN included) only under
-            # enforce_equality — the host-side pass also re-sorts so
-            # survivors keep the ascending-with-INVALID-tail invariant.
-            res = self._predicate_filter(res, queries, params.enforce_equality)
-            if res.ids.shape[1] > params.k:
-                res = res._replace(
-                    ids=res.ids[:, : params.k],
-                    dists=res.dists[:, : params.k],
-                    sqdists=res.sqdists[:, : params.k],
-                )
-        return res
+        return self.executor.run(queries, params, plan)
 
     def _predicate_filter(
         self, res: SearchResult, queries: QueryBatch, full: bool
@@ -531,19 +512,26 @@ class Engine:
     # -- persistence ---------------------------------------------------------
 
     def save(self, path: str) -> None:
-        """Persist a single-host engine (features, attrs, graph, metric
-        calibration, codes and codebooks) under ``path``."""
-        if self.is_sharded:
-            raise NotImplementedError(
-                "Engine.save supports single-host indexes only: a "
-                "ShardedStableIndex holds per-shard device arrays and "
-                "per-shard local HELP graphs with no serialized form yet "
-                "(tracked in ROADMAP.md under 'Sharded engine "
-                "persistence'). Rebuild sharded engines from the builder, "
-                "or save the single-host StableIndex and reshard on load."
-            )
+        """Persist the engine under ``path``. Single-host engines write the
+        flat ``StableIndex`` layout (features, attrs, graph, metric
+        calibration, codes and codebooks); sharded engines write one
+        subdirectory per model shard (arrays + local HELP graph + codes)
+        plus replicated codec state and mesh metadata — see
+        ``ShardedStableIndex.save``."""
         self.index.save(path)
 
     @classmethod
-    def load(cls, path: str) -> "Engine":
+    def load(cls, path: str, mesh=None) -> "Engine":
+        """Load a saved engine, sniffing the on-disk format. Sharded
+        layouts reshard onto ``mesh`` (or a freshly built local mesh with
+        the saved model-shard count when ``mesh`` is None)."""
+        from repro.distributed.search import ShardedStableIndex, is_sharded_dir
+
+        if is_sharded_dir(path):
+            return cls(ShardedStableIndex.load(path, mesh=mesh))
+        if mesh is not None:
+            raise ValueError(
+                f"{path} holds a single-host engine; mesh= only applies to "
+                "sharded layouts"
+            )
         return cls(StableIndex.load(path))

@@ -1,0 +1,381 @@
+"""Execution planner: calibrated cost model + backend selection.
+
+The planner turns one (QueryBatch, SearchParams) pair into a ``Plan`` — the
+*compile* input of the plan→compile→execute pipeline (``api.executor`` holds
+the compile/execute half). Backend choice is driven by a ``CostModel``
+measured on the engine's own index rather than a fixed size threshold:
+
+  brute cost ≈ N full-precision scorings (or, with PQ codes, N code
+               scorings at a fractional relative cost + a pool-sized exact
+               rerank — the fused ``adc_scan`` path);
+  graph cost ≈ measured candidate scorings per pool slot × pool size,
+               grown logarithmically with corpus size, widened for wide
+               (interval) predicates, with a fixed dispatch overhead
+               amortized over the batch.
+
+Costs are expressed in *full-precision-evaluation units* — the same
+architecture-neutral currency ``SearchResult.n_dist_evals`` reports — so the
+model can be calibrated from one cheap probe traversal at build/load time
+(``calibrate``) or loaded from a previously measured ``BENCH_planner.json``
+style table (``cost_model_from_table``). The crossover is chosen per batch:
+``Plan`` records both predicted costs so ``Engine.plan`` stays inspectable
+and the ``planner_sweep`` benchmark can audit the decision against measured
+latency.
+
+``SearchParams.brute_threshold`` survives as a deprecated escape hatch:
+when explicitly set it is honored as a hard override (old fixed-N rule) and
+a ``DeprecationWarning`` is emitted.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import warnings
+from typing import TYPE_CHECKING, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import routing as routing_mod
+from repro.core.routing import RoutingConfig
+from repro.api.query import QueryBatch
+
+if TYPE_CHECKING:  # engine imports planner; never the reverse at runtime
+    from repro.api.engine import Engine, SearchParams
+
+__all__ = [
+    "CostModel",
+    "Plan",
+    "calibrate",
+    "cost_model_from_table",
+    "make_plan",
+]
+
+#: Probe-traversal shape used by ``calibrate`` — small enough to be free at
+#: build/load time, large enough to average out per-query variance.
+PROBE_BATCH = 8
+PROBE_POOL = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Resolved execution plan — inspectable via ``Engine.plan``.
+
+    ``cost_brute``/``cost_graph`` carry the cost model's per-query
+    predictions (fp-eval units) whenever the calibrated crossover made the
+    decision; None when an override or a structural rule (sharded index, no
+    graph) decided instead.
+    """
+
+    backend: str  # graph | sharded | brute
+    quant_mode: str  # none | sq8 | pq (resolved from params × index)
+    routing_cfg: Optional[RoutingConfig]  # None for the brute backend
+    reason: str  # human-readable planner justification
+    cost_brute: Optional[float] = None  # predicted brute cost (fp-eval units)
+    cost_graph: Optional[float] = None  # predicted graph cost (fp-eval units)
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Per-query search-cost predictor in full-precision-eval units.
+
+    ``unit_evals`` is the measured number of candidate scorings per pool
+    slot at calibration time — the one free parameter of the traversal-cost
+    curve. The remaining fields pin the probe operating point and the two
+    structural constants (relative code-eval cost, per-batch dispatch
+    overhead).
+    """
+
+    unit_evals: float  # candidate scorings per pool slot at the probe point
+    probe_pool: int  # pool size the probe ran at
+    probe_n: int  # corpus size the probe ran at
+    code_eval_cost: float = 0.25  # one code scoring vs one fp scoring
+    batch_overhead: float = 64.0  # fixed dispatch cost per batch (fp units)
+    brute_eval_cost: float = 1.0  # wall cost of one brute-*scan* eval vs one
+    # traversal eval — dense row-major scans beat gather+merge per eval; the
+    # probe measures the ratio so the crossover tracks latency, not counts
+
+    def __post_init__(self):
+        if self.unit_evals <= 0 or self.probe_pool <= 0 or self.probe_n <= 0:
+            raise ValueError("CostModel needs positive probe measurements")
+
+    def _scale(self, n: int) -> float:
+        """Corpus-growth factor: traversal walks lengthen ~logarithmically
+        with N (monotone nondecreasing, 1.0 at the probe point)."""
+        return max(
+            1.0, math.log(max(n, 2)) / math.log(max(self.probe_n, 2))
+        )
+
+    def graph_evals(self, *, n: int, pool: int, width: float = 0.0) -> float:
+        """Predicted candidate scorings per query for one traversal.
+
+        Linear in pool size (each slot is expanded roughly once), scaled by
+        corpus growth and by predicate width (wide intervals widen the
+        traversal cut for the membership backfill)."""
+        return self.unit_evals * pool * self._scale(n) * (1.0 + width)
+
+    def graph_cost(
+        self,
+        *,
+        n: int,
+        pool: int,
+        batch: int = 1,
+        width: float = 0.0,
+        quant_mode: str = "none",
+        rerank: int = 0,
+    ) -> float:
+        """Per-query traversal cost. Quantized traversals score codes (cheap)
+        and pay an exact rerank of the pool head on top."""
+        evals = self.graph_evals(n=n, pool=pool, width=width)
+        if quant_mode == "none":
+            cost = evals
+        else:
+            cost = self.code_eval_cost * evals + float(
+                min(rerank or pool, pool)
+            )
+        return cost + self.batch_overhead / max(batch, 1)
+
+    def brute_cost(
+        self, *, n: int, pool: int, quant_mode: str = "none"
+    ) -> float:
+        """Per-query scan cost: N exact scorings (at the measured scan
+        discount), or — through the fused ADC kernel — N code scorings plus
+        a pool-head exact rerank."""
+        if quant_mode == "pq":
+            return (
+                self.brute_eval_cost * self.code_eval_cost * n
+                + float(min(pool, n))
+            )
+        return self.brute_eval_cost * float(n)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def cost_model_from_table(table) -> CostModel:
+    """Rebuild a ``CostModel`` from a measured table — either the dict/path
+    of a ``BENCH_planner.json`` artifact (its ``cost_model`` section) or a
+    bare field dict. This is the "bundled calibration" alternative to the
+    build-time probe: serving fleets measure once, ship the table."""
+    if isinstance(table, (str, bytes)):
+        with open(table) as f:
+            table = json.load(f)
+    d = table.get("cost_model", table)
+    kw = {k: d[k] for k in ("unit_evals", "probe_pool", "probe_n")}
+    for k in ("code_eval_cost", "batch_overhead", "brute_eval_cost"):
+        if k in d:
+            kw[k] = d[k]
+    return CostModel(**kw)
+
+
+def calibrate(index, seed: int = 0, time_probe: bool = True) -> CostModel:
+    """Fit a ``CostModel`` from one cheap probe on ``index``.
+
+    The probe reuses PROBE_BATCH database rows (deterministically spread
+    over the corpus) as queries with their own attributes as targets, runs a
+    small capped traversal, and measures *traversal* candidate scorings per
+    pool slot — on a quantized index the probe routes over codes exactly as
+    serving will and ``unit_evals`` counts the code scorings only (the
+    probe's fp evals are the exact rerank stage, which ``graph_cost``
+    prices as its separate rerank term); the codec discount is applied at
+    prediction time.
+
+    With ``time_probe`` (default) it additionally times the brute scan and
+    the traversal (post-compile, best of two runs to damp scheduler jitter)
+    to measure the per-eval wall-cost ratio of dense scans vs gathered
+    traversal scoring (``brute_eval_cost``), so the predicted crossover
+    tracks measured latency rather than raw eval counts. The measured ratio
+    makes auto-planning hardware-honest but not run-to-run deterministic
+    near the crossover; deployments that need a frozen decision inject a
+    measured table (``Engine(cost_model_override=cost_model_from_table(...))``)
+    or pin ``SearchParams(backend=...)``.
+    """
+    import time
+
+    from repro.core import auto as auto_mod
+    from repro.core.auto import MetricConfig
+
+    n = int(index.features.shape[0])
+    take = jnp.asarray(
+        np.linspace(0, n - 1, num=min(PROBE_BATCH, n)).astype(np.int32)
+    )
+    qv = jnp.take(index.features, take, axis=0)
+    qa = jnp.take(index.attrs, take, axis=0)
+    pool = min(PROBE_POOL, n)
+    cfg = RoutingConfig(
+        k=min(8, pool),
+        pool_size=pool,
+        pioneer_size=min(8, pool),
+        coarse_max_iters=8,
+        refine_max_iters=32,
+    )
+
+    def run_traversal():
+        return routing_mod.search(
+            index.features, index.attrs, index.graph, qv, qa,
+            index.metric_cfg, cfg, seed=seed, quant=index.quant,
+        )
+
+    res = run_traversal()
+    # unit_evals prices *traversal* scorings only — on a quantized index
+    # the probe's fp evals are the exact rerank stage, which graph_cost
+    # prices separately (counting them here would double-charge the rerank)
+    if index.quant is None:
+        per_query = res.mean_dist_evals
+    else:
+        per_query = res.mean_code_evals
+    wall_per_query = res.mean_dist_evals + res.mean_code_evals
+    brute_eval_cost = 1.0
+    if time_probe:
+        def run_brute():
+            # l2 scan mirrors the brute oracle (baselines.brute_force_hybrid
+            # ranks by exact L2 under the equality mask)
+            sv2 = auto_mod.brute_fused_sqdist(
+                qv, qa, index.features, index.attrs, MetricConfig(mode="l2")
+            )
+            return jax.lax.top_k(-sv2, cfg.k)
+
+        def best_of_two(fn) -> float:
+            # min of two post-compile runs: the standard noise-robust
+            # single-shot estimator (scheduler/thermal jitter only ever
+            # slows a run down)
+            times = []
+            for _ in range(2):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn())
+                times.append(time.perf_counter() - t0)
+            return min(times)
+
+        jax.block_until_ready(run_brute()[0])  # compile outside the clock
+        t_brute = best_of_two(lambda: run_brute()[0])
+        t_graph = best_of_two(lambda: run_traversal().ids)
+        per_brute_eval = t_brute / max(qv.shape[0] * n, 1)
+        per_graph_eval = t_graph / max(wall_per_query * qv.shape[0], 1.0)
+        if per_graph_eval > 0:
+            # clamp: one noisy probe must not wedge the planner into either
+            # backend permanently
+            brute_eval_cost = float(
+                np.clip(per_brute_eval / per_graph_eval, 0.05, 20.0)
+            )
+    return CostModel(
+        unit_evals=max(per_query / cfg.pool_size, 1e-3),
+        probe_pool=cfg.pool_size,
+        probe_n=n,
+        brute_eval_cost=brute_eval_cost,
+    )
+
+
+def predicate_width(queries: QueryBatch) -> float:
+    """Mean fraction of wide (lo < hi interval) attribute dimensions — the
+    planner's predicate-width signal. Wide predicates widen the traversal
+    cut to the pool head for the exact-membership backfill, so they raise
+    the predicted graph cost toward the full-pool regime."""
+    if queries.intervals is None:
+        return 0.0
+    wide = queries.intervals[..., 1] > queries.intervals[..., 0]
+    return float(np.mean(wide))
+
+
+def make_plan(
+    engine: "Engine", queries: QueryBatch, params: "SearchParams"
+) -> Plan:
+    """Resolve (backend, quant_mode, routing_cfg, predicted costs) for one
+    batch. Rules, first match wins:
+
+      1. ``params.backend`` override (validated against the index kind)
+      2. sharded index → "sharded"
+      3. no HELP graph (``build_graph=False``) → "brute"
+      4. deprecated ``params.brute_threshold`` explicitly set → old fixed-N
+         rule (hard override, DeprecationWarning)
+      5. calibrated cost model: brute vs graph at the predicted per-query
+         cost crossover for this (N, pool, predicate width, batch, codec)
+    """
+    if queries.attr_dim != engine.attr_dim:
+        raise ValueError(
+            f"query attr_dim {queries.attr_dim} != index {engine.attr_dim}"
+        )
+    cost_brute = cost_graph = None
+    if params.backend != "auto":
+        backend = params.backend
+        if backend == "sharded" and not engine.is_sharded:
+            raise ValueError("backend='sharded' needs a sharded index")
+        if backend != "sharded" and engine.is_sharded:
+            raise ValueError(
+                f"backend={backend!r} unavailable on a sharded index"
+            )
+        if backend == "graph" and not engine.has_graph:
+            raise ValueError("backend='graph' but the index has no graph")
+        reason = "explicit backend override"
+    elif engine.is_sharded:
+        backend, reason = "sharded", "index is sharded over the mesh"
+    elif not engine.has_graph:
+        backend, reason = "brute", "index built without a HELP graph"
+    elif params.brute_threshold is not None:
+        warnings.warn(
+            "SearchParams.brute_threshold is deprecated: the planner now "
+            "chooses brute vs graph from a calibrated cost model "
+            "(Engine.cost_model). The explicit value is honored as a hard "
+            "override; leave it unset to use the cost model.",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+        if engine.n_items <= params.brute_threshold:
+            backend = "brute"
+            reason = (
+                f"N={engine.n_items} ≤ brute_threshold="
+                f"{params.brute_threshold} (deprecated override)"
+            )
+        else:
+            backend = "graph"
+            reason = (
+                f"N={engine.n_items} > brute_threshold="
+                f"{params.brute_threshold} (deprecated override)"
+            )
+    else:
+        cm = engine.cost_model
+        n = engine.n_items
+        pool = min(params.effective_pool, n)
+        # price the codec that will actually execute: quant="none" forces a
+        # full-precision search even on a quantized index, and the brute
+        # oracle only has a code-scan path for pq
+        q = "none" if params.quant == "none" else engine.quant_mode
+        cost_brute = cm.brute_cost(
+            n=n, pool=pool, quant_mode="pq" if q == "pq" else "none"
+        )
+        # the width surcharge models the executor's cut-widening for the
+        # exact-membership backfill — charged only when that widening will
+        # actually run (ONE_OF always; intervals under enforce_equality),
+        # never for soft BETWEEN batches that traverse at plain k
+        widens = queries.has_one_of or (
+            params.enforce_equality and queries.has_intervals
+        )
+        cost_graph = cm.graph_cost(
+            n=n, pool=pool, batch=queries.batch_size,
+            width=predicate_width(queries) if widens else 0.0, quant_mode=q,
+            rerank=params.rerank_size,
+        )
+        if cost_brute <= cost_graph:
+            backend = "brute"
+        else:
+            backend = "graph"
+        reason = (
+            f"cost model: brute≈{cost_brute:.0f} vs graph≈{cost_graph:.0f} "
+            f"fp-eval units/query → {backend}"
+        )
+
+    quant_mode = engine._resolve_quant(params, backend)
+    routing_cfg = None
+    if backend != "brute":
+        # Traversal-level enforcement checks interval containment for wide
+        # predicates, which never rejects an admissible value (ONE_OF
+        # members all lie within the covering hull); the exact set-
+        # membership filter still runs engine-side afterwards.
+        routing_cfg = params.routing_config(
+            quant_mode, params.enforce_equality
+        )
+    return Plan(
+        backend=backend, quant_mode=quant_mode, routing_cfg=routing_cfg,
+        reason=reason, cost_brute=cost_brute, cost_graph=cost_graph,
+    )

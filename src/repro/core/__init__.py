@@ -1,3 +1,23 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+from collections import OrderedDict
+from typing import Callable, Tuple, TypeVar
+
+_V = TypeVar("_V")
+
+
+def lru_get(
+    cache: "OrderedDict", key, build: Callable[[], _V], max_size: int
+) -> Tuple[_V, bool]:
+    """Bounded-LRU lookup shared by the executable caches (api.executor,
+    distributed.search): returns ``(value, hit)``, building + inserting on
+    miss and evicting least-recently-used beyond ``max_size``."""
+    hit = cache.get(key)
+    if hit is not None:
+        cache.move_to_end(key)
+        return hit, True
+    out = cache[key] = build()
+    if len(cache) > max_size:
+        cache.popitem(last=False)
+    return out, False

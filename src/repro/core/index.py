@@ -119,6 +119,9 @@ class StableIndex:
         np.save(os.path.join(path, "attrs.npy"), np.asarray(self.attrs))
         np.save(os.path.join(path, "graph.npy"), np.asarray(self.graph))
         meta = {
+            # format tag lets Engine.load sniff flat single-host layouts
+            # apart from the per-shard sharded layout (distributed/search)
+            "format": "stable-single-v1",
             "metric_cfg": dataclasses.asdict(self.metric_cfg),
             "help_cfg": dataclasses.asdict(self.help_cfg),
             "stats": dataclasses.asdict(self.stats),

@@ -27,6 +27,15 @@ Interval targets: ``qa`` is accepted either as (B, L) point targets or as
 penalty, the quantized rerank and the ``enforce_equality`` output filter
 (which becomes interval *containment*) all honor both forms, so value-set
 and range predicates traverse the HELP graph exactly like equality queries.
+
+Stage layout: the search is composed from four reusable pieces —
+``init_state`` (seed pool), ``coarse_stage``, ``refine_stage`` (both thin
+wrappers over ``_expand``) and ``emit_topk`` (pool head or quantized exact
+rerank + optional hard filter). ``_search_jit`` is the jitted single-host
+composition; ``distributed/search.py`` composes the same stages inside its
+``shard_map`` body (``traverse_pool`` + its own cross-shard rerank built on
+``score_exact``/``enforce_filter``), so rerank semantics cannot drift
+between the single-host and sharded paths.
 """
 from __future__ import annotations
 
@@ -36,6 +45,7 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import auto as auto_mod
 from repro.core import graph_ops as gops
@@ -45,6 +55,17 @@ from repro.quant import pq as pq_mod
 from repro.quant import sq as sq_mod
 
 Array = jax.Array
+
+#: Incremented once per *trace* of a routing search body (single-host or
+#: per-shard). jit caching makes repeated same-signature calls trace-free;
+#: tests assert plan-cache hits add nothing here. Python-side effect — only
+#: runs while jax is tracing, never per execution.
+_TRACE_COUNT = [0]
+
+
+def trace_count() -> int:
+    """Total routing-search traces so far in this process."""
+    return _TRACE_COUNT[0]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +79,8 @@ class RoutingConfig:
     enforce_equality: bool = False  # final hard filter (off: paper behavior)
     quant_mode: str = "none"  # none | sq8 | pq — traversal scoring codec
     rerank_size: int = 0  # pool entries re-scored exactly (0 → pool_size)
+    coarse_fixed: bool = False  # run coarse for exactly coarse_max_iters
+    # (no dynamic pioneer-set exit) — the "w/o Dynamic" ablation
 
     def __post_init__(self):
         if self.k > self.pool_size:
@@ -85,22 +108,24 @@ class SearchResult(NamedTuple):
 
     # Eval counters are per-query so serving can report per-request cost;
     # the aggregate properties below are the host-side reporting conveniences.
+    # They reduce with numpy: counters already on host never round-trip to
+    # the device, and device counters pay one transfer (not a compile).
 
     @property
     def total_dist_evals(self) -> int:
-        return int(jnp.sum(self.n_dist_evals))
+        return int(np.sum(np.asarray(self.n_dist_evals)))
 
     @property
     def total_code_evals(self) -> int:
-        return int(jnp.sum(self.n_code_evals))
+        return int(np.sum(np.asarray(self.n_code_evals)))
 
     @property
     def mean_dist_evals(self) -> float:
-        return self.total_dist_evals / max(int(jnp.asarray(self.ids).shape[0]), 1)
+        return self.total_dist_evals / max(self.ids.shape[0], 1)
 
     @property
     def mean_code_evals(self) -> float:
-        return self.total_code_evals / max(int(jnp.asarray(self.ids).shape[0]), 1)
+        return self.total_code_evals / max(self.ids.shape[0], 1)
 
 
 def _score_candidates(
@@ -166,13 +191,14 @@ def _expand(
     use_visited: bool,
     quant: tuple = (),
     quant_mode: str = "none",
+    force_active: bool = False,  # expand regardless of the dynamic-exit flag
 ) -> _State:
     b, pool = state.r_ids.shape
-    gamma = graph.shape[1]
 
     # --- choose expansion entries: all unchecked among R[:scope] -------------
     elig = (state.checked[:, :scope] == 0) & (state.r_ids[:, :scope] >= 0)
-    elig = elig & state.active[:, None]
+    if not force_active:
+        elig = elig & state.active[:, None]
     exp_ids = jnp.where(elig, state.r_ids[:, :scope], INVALID)  # (B, scope)
 
     # --- gather neighbor candidates ------------------------------------------
@@ -228,6 +254,229 @@ def _expand(
     )
 
 
+# ---------------------------------------------------------------------------
+# Composable stages — shared by _search_jit and distributed/search.py
+# ---------------------------------------------------------------------------
+
+
+def init_state(
+    db_v: Array,
+    db_a: Array,
+    qv: Array,
+    qa: Array,
+    entry_ids: Array,  # (B, pool) initial pool node ids
+    metric_cfg: MetricConfig,
+    cfg: RoutingConfig,
+    n_nodes: int,
+    mask: Optional[Array] = None,
+    quant: tuple = (),
+) -> _State:
+    """Stage 1 (paper Alg. 3 init): score the random-K seed pool, sorted
+    ascending, with the visited map primed on the seeds."""
+    b = qv.shape[0]
+    pool = cfg.pool_size
+    d0 = _score_candidates(
+        db_v, db_a, entry_ids, qv, qa, metric_cfg, mask, quant, cfg.quant_mode
+    )
+    d0 = jnp.where(entry_ids < 0, INF, d0)
+    r_ids, r_d, _ = gops.merge_pools(
+        jnp.full((b, pool), INVALID), jnp.full((b, pool), INF),
+        entry_ids, d0, pool,
+    )
+    checked = jnp.where(r_ids < 0, jnp.int8(1), jnp.int8(0))
+    if cfg.use_visited:
+        visited = jnp.zeros((b, n_nodes), jnp.int8)
+        visited = visited.at[
+            jnp.arange(b)[:, None], jnp.maximum(entry_ids, 0)
+        ].set(jnp.int8(1), mode="drop")
+    else:
+        visited = jnp.zeros((b, 1), jnp.int8)
+    return _State(
+        r_ids=r_ids, r_d=r_d, checked=checked, visited=visited,
+        active=jnp.ones((b,), bool),
+        evals=(entry_ids >= 0).sum(axis=1).astype(jnp.int32),
+        hops=jnp.zeros((), jnp.int32),
+        it=jnp.zeros((), jnp.int32),
+    )
+
+
+def coarse_stage(
+    state: _State,
+    db_v: Array,
+    db_a: Array,
+    graph: Array,
+    qv: Array,
+    qa: Array,
+    metric_cfg: MetricConfig,
+    cfg: RoutingConfig,
+    mask: Optional[Array] = None,
+    quant: tuple = (),
+) -> _State:
+    """Stage 2 — Dynamic Coarse Routing: pioneer set = R[:P], half-fanout
+    expansion until no iteration improves P (or, with ``cfg.coarse_fixed``,
+    for exactly ``coarse_max_iters`` iterations — the NHQ-style strict
+    first-stage exit of the "w/o Dynamic" ablation)."""
+    half = max(1, graph.shape[1] // 2)
+
+    def cond(s):
+        budget = s.it < cfg.coarse_max_iters
+        if cfg.coarse_fixed:
+            return budget
+        return s.active.any() & budget
+
+    def body(s):
+        return _expand(
+            s, db_v, db_a, graph, qv, qa, metric_cfg, mask,
+            scope=cfg.pioneer_size, fanout=half, watch=cfg.pioneer_size,
+            use_visited=cfg.use_visited, quant=quant,
+            quant_mode=cfg.quant_mode, force_active=cfg.coarse_fixed,
+        )
+
+    return jax.lax.while_loop(cond, body, state)
+
+
+def refine_stage(
+    state: _State,
+    db_v: Array,
+    db_a: Array,
+    graph: Array,
+    qv: Array,
+    qa: Array,
+    metric_cfg: MetricConfig,
+    cfg: RoutingConfig,
+    mask: Optional[Array] = None,
+    quant: tuple = (),
+) -> _State:
+    """Stage 3 — Greedy Refinement Routing: full pool, full fanout, until the
+    pool is fully checked."""
+    b = qv.shape[0]
+    pool = cfg.pool_size
+    gamma = graph.shape[1]
+    state = state._replace(
+        active=jnp.ones((b,), bool), it=jnp.zeros((), jnp.int32)
+    )
+
+    def cond(s):
+        unchecked = ((s.checked == 0) & (s.r_ids >= 0)).any()
+        return unchecked & (s.it < cfg.refine_max_iters)
+
+    def body(s):
+        return _expand(
+            s, db_v, db_a, graph, qv, qa, metric_cfg, mask,
+            scope=pool, fanout=gamma, watch=pool,
+            use_visited=cfg.use_visited, quant=quant,
+            quant_mode=cfg.quant_mode,
+        )
+
+    return jax.lax.while_loop(cond, body, state)
+
+
+def traverse_pool(
+    db_v: Array,
+    db_a: Array,
+    graph: Array,
+    qv: Array,
+    qa: Array,
+    entry_ids: Array,
+    metric_cfg: MetricConfig,
+    cfg: RoutingConfig,
+    n_nodes: int,
+    mask: Optional[Array] = None,
+    quant: tuple = (),
+) -> _State:
+    """Stages 1–3: seed + coarse + refine, returning the final pool state
+    (ids sorted ascending by traversal-codec distance). The sharded path
+    stops here and reranks across shards; ``_search_jit`` finishes with
+    ``emit_topk`` locally."""
+    state = init_state(
+        db_v, db_a, qv, qa, entry_ids, metric_cfg, cfg, n_nodes, mask, quant
+    )
+    state = coarse_stage(
+        state, db_v, db_a, graph, qv, qa, metric_cfg, cfg, mask, quant
+    )
+    return refine_stage(
+        state, db_v, db_a, graph, qv, qa, metric_cfg, cfg, mask, quant
+    )
+
+
+def score_exact(
+    db_v: Array,
+    db_a: Array,
+    ids: Array,  # (B, C), INVALID allowed
+    qv: Array,
+    qa: Array,
+    metric_cfg: MetricConfig,
+    mask: Optional[Array] = None,
+) -> Array:
+    """(B, C) exact full-precision fused sqdists for gathered candidates
+    (INF on INVALID slots) — the rerank primitive shared by the single-host
+    tail and the sharded cross-shard rerank."""
+    d = _score_candidates(
+        db_v, db_a, ids, qv, qa, metric_cfg, mask, (), "none"
+    )
+    return jnp.where(ids < 0, INF, d)
+
+
+def enforce_filter(
+    out_ids: Array,
+    out_sq: Array,
+    db_a: Array,
+    qa: Array,
+    mask: Optional[Array] = None,
+) -> tuple[Array, Array]:
+    """Hard predicate filter on emitted ids: equality for point targets,
+    [lo, hi] containment for interval targets; masked-out dims always pass."""
+    oa = gops.gather_rows(db_a, out_ids)
+    if qa.ndim == 3:  # interval targets: containment in [lo, hi]
+        okl = (oa >= qa[:, None, :, 0]) & (oa <= qa[:, None, :, 1])
+    else:
+        okl = oa == qa[:, None, :]
+    if mask is not None:
+        okl = okl | (mask[:, None, :] == 0)
+    ok = okl.all(-1)
+    return jnp.where(ok, out_ids, INVALID), jnp.where(ok, out_sq, INF)
+
+
+def emit_topk(
+    state: _State,
+    db_v: Array,
+    db_a: Array,
+    qv: Array,
+    qa: Array,
+    metric_cfg: MetricConfig,
+    cfg: RoutingConfig,
+    mask: Optional[Array] = None,
+) -> SearchResult:
+    """Stage 4 — two-stage output: exact mode emits the pool head directly;
+    quant mode reranks the top rerank_size pool entries with exact fused
+    distances (the only full-precision evaluations of the whole search)."""
+    b = state.r_ids.shape[0]
+    if cfg.quant_mode == "none":
+        out_ids = state.r_ids[:, : cfg.k]
+        out_sq = state.r_d[:, : cfg.k]
+        n_dist_evals = state.evals
+        n_code_evals = jnp.zeros((b,), jnp.int32)
+    else:
+        r_ids = state.r_ids[:, : cfg.effective_rerank]
+        rd = score_exact(db_v, db_a, r_ids, qv, qa, metric_cfg, mask)
+        neg, take = jax.lax.top_k(-rd, cfg.k)
+        out_sq = -neg
+        out_ids = jnp.take_along_axis(r_ids, take, axis=1)
+        out_ids = jnp.where(out_sq < INF / 2, out_ids, INVALID)
+        n_dist_evals = (r_ids >= 0).sum(axis=1).astype(jnp.int32)
+        n_code_evals = state.evals
+    if cfg.enforce_equality:
+        out_ids, out_sq = enforce_filter(out_ids, out_sq, db_a, qa, mask)
+    return SearchResult(
+        ids=out_ids,
+        dists=jnp.sqrt(jnp.maximum(out_sq, 0.0)),
+        sqdists=out_sq,
+        n_dist_evals=n_dist_evals,
+        n_hops=state.hops,
+        n_code_evals=n_code_evals,
+    )
+
+
 @partial(
     jax.jit,
     static_argnames=("metric_cfg", "cfg", "n_nodes"),
@@ -245,110 +494,12 @@ def _search_jit(
     mask: Optional[Array] = None,
     quant: tuple = (),
 ) -> SearchResult:
-    b = qv.shape[0]
-    pool = cfg.pool_size
-    gamma = graph.shape[1]
-    half = max(1, gamma // 2)
-    qmode = cfg.quant_mode
-
-    # (1) Initialization — random-K seed pool, sorted ascending.
-    d0 = _score_candidates(
-        db_v, db_a, entry_ids, qv, qa, metric_cfg, mask, quant, qmode
+    _TRACE_COUNT[0] += 1  # runs only while tracing (see trace_count)
+    state = traverse_pool(
+        db_v, db_a, graph, qv, qa, entry_ids, metric_cfg, cfg, n_nodes,
+        mask, quant,
     )
-    d0 = jnp.where(entry_ids < 0, INF, d0)
-    r_ids, r_d, _ = gops.merge_pools(
-        jnp.full((b, pool), INVALID), jnp.full((b, pool), INF),
-        entry_ids, d0, pool,
-    )
-    checked = jnp.where(r_ids < 0, jnp.int8(1), jnp.int8(0))
-    if cfg.use_visited:
-        visited = jnp.zeros((b, n_nodes), jnp.int8)
-        visited = visited.at[
-            jnp.arange(b)[:, None], jnp.maximum(entry_ids, 0)
-        ].set(jnp.int8(1), mode="drop")
-    else:
-        visited = jnp.zeros((b, 1), jnp.int8)
-
-    state = _State(
-        r_ids=r_ids, r_d=r_d, checked=checked, visited=visited,
-        active=jnp.ones((b,), bool),
-        evals=(entry_ids >= 0).sum(axis=1).astype(jnp.int32),
-        hops=jnp.zeros((), jnp.int32),
-        it=jnp.zeros((), jnp.int32),
-    )
-
-    # (2) Dynamic Coarse Routing: pioneer set = R[:P], half-fanout expansion.
-    def coarse_cond(s):
-        return s.active.any() & (s.it < cfg.coarse_max_iters)
-
-    def coarse_body(s):
-        return _expand(
-            s, db_v, db_a, graph, qv, qa, metric_cfg, mask,
-            scope=cfg.pioneer_size, fanout=half, watch=cfg.pioneer_size,
-            use_visited=cfg.use_visited, quant=quant, quant_mode=qmode,
-        )
-
-    state = jax.lax.while_loop(coarse_cond, coarse_body, state)
-
-    # (3) Greedy Refinement Routing: full pool, full fanout.
-    state = state._replace(active=jnp.ones((b,), bool), it=jnp.zeros((), jnp.int32))
-
-    def refine_cond(s):
-        unchecked = ((s.checked == 0) & (s.r_ids >= 0)).any()
-        return unchecked & (s.it < cfg.refine_max_iters)
-
-    def refine_body(s):
-        return _expand(
-            s, db_v, db_a, graph, qv, qa, metric_cfg, mask,
-            scope=pool, fanout=gamma, watch=pool,
-            use_visited=cfg.use_visited, quant=quant, quant_mode=qmode,
-        )
-
-    state = jax.lax.while_loop(refine_cond, refine_body, state)
-
-    # (4) Two-stage output: exact mode emits the pool head directly; quant
-    # mode reranks the top rerank_size pool entries with exact fused
-    # distances (the only full-precision evaluations of the whole search).
-    if qmode == "none":
-        out_ids = state.r_ids[:, : cfg.k]
-        out_sq = state.r_d[:, : cfg.k]
-        n_dist_evals = state.evals
-        n_code_evals = jnp.zeros((b,), jnp.int32)
-    else:
-        rr = cfg.effective_rerank
-        r_ids = state.r_ids[:, :rr]
-        cv = gops.gather_rows(db_v, r_ids)
-        ca = gops.gather_rows(db_a, r_ids)
-        m = mask[:, None, :] if mask is not None else None
-        rd = auto_mod.fused_sqdist(
-            qv[:, None, :], qa[:, None], cv, ca, metric_cfg, m
-        )
-        rd = jnp.where(r_ids < 0, INF, rd)
-        neg, take = jax.lax.top_k(-rd, cfg.k)
-        out_sq = -neg
-        out_ids = jnp.take_along_axis(r_ids, take, axis=1)
-        out_ids = jnp.where(out_sq < INF / 2, out_ids, INVALID)
-        n_dist_evals = (r_ids >= 0).sum(axis=1).astype(jnp.int32)
-        n_code_evals = state.evals
-    if cfg.enforce_equality:
-        oa = gops.gather_rows(db_a, out_ids)
-        if qa.ndim == 3:  # interval targets: containment in [lo, hi]
-            okl = (oa >= qa[:, None, :, 0]) & (oa <= qa[:, None, :, 1])
-        else:
-            okl = oa == qa[:, None, :]
-        if mask is not None:
-            okl = okl | (mask[:, None, :] == 0)
-        ok = okl.all(-1)
-        out_ids = jnp.where(ok, out_ids, INVALID)
-        out_sq = jnp.where(ok, out_sq, INF)
-    return SearchResult(
-        ids=out_ids,
-        dists=jnp.sqrt(jnp.maximum(out_sq, 0.0)),
-        sqdists=out_sq,
-        n_dist_evals=n_dist_evals,
-        n_hops=state.hops,
-        n_code_evals=n_code_evals,
-    )
+    return emit_topk(state, db_v, db_a, qv, qa, metric_cfg, cfg, mask)
 
 
 def make_entry_ids(n_nodes: int, batch: int, pool_size: int, seed: int = 0) -> Array:
@@ -423,11 +574,11 @@ def search_two_stage(
 ):
     """'w/o Dynamic': NHQ-style fixed two-stage routing — the coarse stage
     runs to a *fixed* iteration budget (no dynamic pioneer-set exit), then
-    refinement. Models the strict first-stage exit the paper criticizes."""
+    refinement. Models the strict first-stage exit the paper criticizes.
+    ``coarse_fixed`` force-keeps rows active for exactly ``coarse_max_iters``
+    iterations: unchecked pioneers are expanded every iteration even after
+    the pioneer set stops improving."""
     c = dataclasses.replace(
-        cfg, pioneer_size=max(cfg.pool_size // 2, 1)
+        cfg, pioneer_size=max(cfg.pool_size // 2, 1), coarse_fixed=True
     )
-    # fixed coarse budget: always run coarse_max_iters iterations (no early
-    # exit) by keeping rows active artificially — approximated by a higher
-    # iteration floor with full pioneer width.
     return search(db_v, db_a, graph, qv, qa, metric_cfg, c, mask, entry_ids, seed)

@@ -11,15 +11,33 @@ union equals top-k of per-shard top-k's).
 Quantized serving (``quant_cfg.mode`` ∈ {sq8, pq}): codes are sharded over
 `model` alongside the graph; codec state (SQ8 affine params / PQ codebooks)
 is replicated, and PQ ADC tables are computed per data-shard inside the
-shard_map body. Each shard routes over its codes and reranks its own pool
-slice at full precision before the exact global merge, so the merge stays
-exact w.r.t. the fused metric (sharded *quantized* rerank — pooling rerank
-across shards before the merge — is a tracked ROADMAP follow-on).
+shard_map body. The rerank is *pooled across shards*: every shard traverses
+over codes only (``routing.traverse_pool`` — the same stages the single-host
+path composes), the per-shard *code* top-k heads are all-gathered over
+`model` and reduced to one global code top-k, and only those candidates are
+re-scored at full precision — each shard scores the candidates it owns and a
+``pmin`` over `model` assembles the exact distances. Full-precision work per
+query is therefore one global ``rerank_size`` pool instead of one per shard.
+
+The compiled search fn is cached per (routing config, k, mask/target
+arity): repeated serving batches reuse one ``jax.jit``-wrapped ``shard_map``
+callable (and its cached entry pools) instead of re-wrapping and re-tracing
+the mesh program every call.
+
+Persistence: ``save``/``load`` round-trip the whole sharded index through
+one subdirectory per model shard (that shard's feature/attr/code rows and
+its *local* HELP graph — independently writable per host at fleet scale)
+plus replicated codec arrays and mesh/codec metadata. Loading reshards onto
+the current mesh; the model-axis size must match the saved shard count
+(per-shard graphs are local to those boundaries), while the data axis is
+free to differ.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import json
+import os
+from collections import OrderedDict
 from typing import Optional
 
 import jax
@@ -27,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import lru_get
 from repro.core import routing as routing_mod
 from repro.core.auto import MetricConfig
 from repro.distributed import sharding as sharding_mod
@@ -36,6 +55,18 @@ from repro.core.routing import RoutingConfig
 from repro.quant import PQCodebook, QuantConfig, QuantizedVectors, adc_lut
 
 Array = jax.Array
+
+SHARDED_META = "sharded_meta.json"
+SHARDED_FORMAT = "stable-sharded-v1"
+
+#: per-index executable/entry-pool caches are LRU-bounded so a long-running
+#: server cycling seeds or params cannot grow them without limit
+CACHE_SIZE = 64
+
+
+def is_sharded_dir(path: str) -> bool:
+    """True when ``path`` holds the sharded on-disk layout."""
+    return os.path.exists(os.path.join(path, SHARDED_META))
 
 
 @dataclasses.dataclass
@@ -54,6 +85,15 @@ class ShardedStableIndex:
     sq_zero: Optional[Array] = None  # (M,) replicated
     pq_centroids: Optional[Array] = None  # (S, K, D_sub) replicated
     pq_dim: int = 0  # original feature dim (PQ codebook metadata)
+    # per-instance executable/entry caches (see search): keyed on the static
+    # search signature so serving batches reuse one jitted mesh program;
+    # LRU-bounded at CACHE_SIZE
+    _fn_cache: OrderedDict = dataclasses.field(
+        default_factory=OrderedDict, repr=False, compare=False
+    )
+    _entry_cache: OrderedDict = dataclasses.field(
+        default_factory=OrderedDict, repr=False, compare=False
+    )
 
     @classmethod
     def build(
@@ -103,6 +143,137 @@ class ShardedStableIndex:
             **kw,
         )
 
+    # -- search ---------------------------------------------------------------
+
+    def _entry_ids(self, b: int, pool: int, seed: int) -> Array:
+        entry, _ = lru_get(
+            self._entry_cache, (b, pool, seed),
+            lambda: routing_mod.make_entry_ids(self.shard_rows, b, pool, seed),
+            CACHE_SIZE,
+        )
+        return entry
+
+    def _compile_search(
+        self, cfg: RoutingConfig, k: int, has_mask: bool, qa_ndim: int
+    ):
+        """One jitted shard_map program per static search signature."""
+        mesh = self.mesh
+        rows = self.shard_rows
+        metric_cfg = self.metric_cfg
+        qmode = cfg.quant_mode
+        pq_dim = self.pq_dim
+
+        def local_search(feats, attrs, graph, qv, qa, entry, *rest):
+            # one model shard: this data-shard's query block vs the local
+            # sub-index (NOTE: shapes here are per-device, not global)
+            routing_mod._TRACE_COUNT[0] += 1  # per-shard trace (see routing)
+            b_loc = qv.shape[0]
+            m, qops = (rest[0], rest[1:]) if has_mask else (None, rest)
+            if qmode == "sq8":
+                codes, scale, zero = qops
+                operand = (codes, scale, zero)
+            elif qmode == "pq":
+                codes, centroids = qops
+                # per data-shard ADC tables from the replicated codebook
+                operand = (codes, adc_lut(qv, PQCodebook(centroids, pq_dim)))
+            else:
+                operand = ()
+            shard_id = jax.lax.axis_index("model")
+            lo = shard_id * rows
+            state = routing_mod.traverse_pool(
+                feats, attrs, graph, qv, qa, entry, metric_cfg, cfg, rows,
+                m, operand,
+            )
+            if qmode == "none":
+                # exact traversal: per-shard top-k heads merge exactly
+                # (top-k of a union == top-k of per-shard top-k's)
+                out = routing_mod.emit_topk(
+                    state, feats, attrs, qv, qa, metric_cfg, cfg, m
+                )
+                gids = jnp.where(out.ids >= 0, out.ids + lo, INVALID)
+                all_ids = jax.lax.all_gather(gids, "model", axis=0)
+                all_d = jax.lax.all_gather(out.sqdists, "model", axis=0)
+                all_ids = jnp.moveaxis(all_ids, 0, 1).reshape(b_loc, -1)
+                all_d = jnp.moveaxis(all_d, 0, 1).reshape(b_loc, -1)
+                neg, take = jax.lax.top_k(-all_d, k)
+                out_ids = jnp.take_along_axis(all_ids, take, axis=1)
+                out_sq = -neg
+                evals = jax.lax.psum(out.n_dist_evals, "model")
+                code_evals = jax.lax.psum(out.n_code_evals, "model")
+                hops = jax.lax.psum(out.n_hops, ("data", "model"))
+                return out_ids, out_sq, evals, code_evals, hops[None]
+
+            # quantized sharded rerank: pool per-shard *code* top-k across
+            # `model` first, rerank once globally at full precision.
+            r = min(cfg.effective_rerank, cfg.pool_size)
+            loc_ids = state.r_ids[:, :r]
+            loc_d = jnp.where(loc_ids < 0, INF, state.r_d[:, :r])
+            gids = jnp.where(loc_ids >= 0, loc_ids + lo, INVALID)
+            all_ids = jax.lax.all_gather(gids, "model", axis=0)  # (S, b, r)
+            all_d = jax.lax.all_gather(loc_d, "model", axis=0)
+            all_ids = jnp.moveaxis(all_ids, 0, 1).reshape(b_loc, -1)
+            all_d = jnp.moveaxis(all_d, 0, 1).reshape(b_loc, -1)
+            neg, take = jax.lax.top_k(-all_d, r)  # global code top-k
+            cand = jnp.take_along_axis(all_ids, take, axis=1)  # global ids
+            cand = jnp.where(-neg < INF / 2, cand, INVALID)
+            # each shard exactly re-scores only the candidates it owns; the
+            # pmin over `model` assembles the full (B, r) exact distances
+            # (every non-owner holds INF)
+            mine = (cand >= lo) & (cand < lo + rows)
+            loc = jnp.where(mine, cand - lo, INVALID)
+            rd = routing_mod.score_exact(
+                feats, attrs, loc, qv, qa, metric_cfg, m
+            )
+            rd = jnp.where(mine, rd, INF)
+            if cfg.enforce_equality:
+                # owner shards flag violating candidates; the verdict is
+                # applied AFTER the final top-k (INVALID holes in place),
+                # matching emit_topk's single-host ordering exactly
+                ids_f, _ = routing_mod.enforce_filter(
+                    loc, rd, attrs, qa, m
+                )
+                viol = jax.lax.pmax(
+                    (mine & (ids_f < 0)).astype(jnp.int32), "model"
+                )
+            exact = jax.lax.pmin(rd, "model")
+            neg2, take2 = jax.lax.top_k(-exact, k)
+            out_sq = -neg2
+            out_ids = jnp.take_along_axis(cand, take2, axis=1)
+            out_ids = jnp.where(out_sq < INF / 2, out_ids, INVALID)
+            if cfg.enforce_equality:
+                bad = jnp.take_along_axis(viol, take2, axis=1).astype(bool)
+                out_ids = jnp.where(bad, INVALID, out_ids)
+                out_sq = jnp.where(bad, INF, out_sq)
+            evals = jax.lax.psum(
+                mine.sum(axis=1).astype(jnp.int32), "model"
+            )  # fp rerank cost: one global pool, not one per shard
+            code_evals = jax.lax.psum(state.evals, "model")
+            hops = jax.lax.psum(state.hops, ("data", "model"))
+            return out_ids, out_sq, evals, code_evals, hops[None]
+
+        extra_specs: tuple = ()
+        if has_mask:
+            extra_specs = (P("data", None),)
+        if qmode == "sq8":
+            extra_specs += (P("model", None), P(None), P(None))
+        elif qmode == "pq":
+            extra_specs += (P("model", None), P(None, None, None))
+        # interval targets carry a trailing replicated [lo, hi] axis
+        qa_spec = P("data", None, None) if qa_ndim == 3 else P("data", None)
+        fn = sharding_mod.shard_map(
+            local_search,
+            mesh=mesh,
+            in_specs=(
+                P("model", None), P("model", None), P("model", None),
+                P("data", None), qa_spec, P("data", None),
+            ) + extra_specs,
+            out_specs=(
+                P("data", None), P("data", None), P("data"), P("data"), P(None)
+            ),
+            check_vma=False,
+        )
+        return jax.jit(fn)
+
     def search(
         self,
         qv: Array,
@@ -133,84 +304,25 @@ class ShardedStableIndex:
                 f"routing_cfg.quant_mode={cfg.quant_mode!r} but this index "
                 f"was built with quant mode {self.quant_mode!r}"
             )
-        mesh = self.mesh
-        rows = self.shard_rows
-        metric_cfg = self.metric_cfg
-        qmode = cfg.quant_mode
-        pq_dim = self.pq_dim
-        has_mask = mask is not None
-        b = qv.shape[0]
-        entry = routing_mod.make_entry_ids(rows, b, cfg.pool_size, seed)
-
-        def local_search(feats, attrs, graph, qv, qa, entry, *rest):
-            # one model shard: this data-shard's query block vs the local
-            # sub-index (NOTE: shapes here are per-device, not global)
-            b_loc = qv.shape[0]
-            m, qops = (rest[0], rest[1:]) if has_mask else (None, rest)
-            if qmode == "sq8":
-                codes, scale, zero = qops
-                operand = (codes, scale, zero)
-            elif qmode == "pq":
-                codes, centroids = qops
-                # per data-shard ADC tables from the replicated codebook
-                operand = (codes, adc_lut(qv, PQCodebook(centroids, pq_dim)))
-            else:
-                operand = ()
-            res = routing_mod._search_jit(
-                feats, attrs, graph, qv, qa, entry, metric_cfg, cfg, rows,
-                m, operand,
-            )
-            shard_id = jax.lax.axis_index("model")
-            gids = jnp.where(
-                res.ids >= 0, res.ids + shard_id * rows, INVALID
-            )
-            # exact merge: all-gather per-shard top-k, re-top-k (per-shard
-            # rerank already restored exact fused distances in quant mode)
-            all_ids = jax.lax.all_gather(gids, "model", axis=0)  # (S, b, K)
-            all_d = jax.lax.all_gather(res.sqdists, "model", axis=0)
-            all_ids = jnp.moveaxis(all_ids, 0, 1).reshape(b_loc, -1)
-            all_d = jnp.moveaxis(all_d, 0, 1).reshape(b_loc, -1)
-            neg, take = jax.lax.top_k(-all_d, k)
-            # per-query counters: sum shard contributions over `model` only
-            evals = jax.lax.psum(res.n_dist_evals, "model")
-            code_evals = jax.lax.psum(res.n_code_evals, "model")
-            hops = jax.lax.psum(res.n_hops, ("data", "model"))
-            return (
-                jnp.take_along_axis(all_ids, take, axis=1),
-                -neg,
-                evals,
-                code_evals,
-                hops[None],
-            )
-
-        extra_args: tuple = ()
-        extra_specs: tuple = ()
-        if has_mask:
-            extra_args = (jnp.asarray(mask, jnp.int32),)
-            extra_specs = (P("data", None),)
-        if qmode == "sq8":
-            extra_args += (self.codes, self.sq_scale, self.sq_zero)
-            extra_specs += (P("model", None), P(None), P(None))
-        elif qmode == "pq":
-            extra_args += (self.codes, self.pq_centroids)
-            extra_specs += (P("model", None), P(None, None, None))
-
         qv = jnp.asarray(qv, jnp.float32)
         qa = jnp.asarray(qa, jnp.int32)
-        # interval targets carry a trailing replicated [lo, hi] axis
-        qa_spec = P("data", None, None) if qa.ndim == 3 else P("data", None)
-        fn = sharding_mod.shard_map(
-            local_search,
-            mesh=mesh,
-            in_specs=(
-                P("model", None), P("model", None), P("model", None),
-                P("data", None), qa_spec, P("data", None),
-            ) + extra_specs,
-            out_specs=(
-                P("data", None), P("data", None), P("data"), P("data"), P(None)
-            ),
-            check_vma=False,
+        has_mask = mask is not None
+        entry = self._entry_ids(qv.shape[0], cfg.pool_size, seed)
+
+        fn, _ = lru_get(
+            self._fn_cache, (cfg, k, has_mask, qa.ndim),
+            lambda: self._compile_search(cfg, k, has_mask, qa.ndim),
+            CACHE_SIZE,
         )
+
+        extra_args: tuple = ()
+        if has_mask:
+            extra_args = (jnp.asarray(mask, jnp.int32),)
+        if cfg.quant_mode == "sq8":
+            extra_args += (self.codes, self.sq_scale, self.sq_zero)
+        elif cfg.quant_mode == "pq":
+            extra_args += (self.codes, self.pq_centroids)
+
         ids, sqd, evals, code_evals, hops = fn(
             self.features, self.attrs, self.graphs, qv, qa, entry, *extra_args
         )
@@ -221,4 +333,119 @@ class ShardedStableIndex:
             n_dist_evals=evals,
             n_hops=hops[0],
             n_code_evals=code_evals,
+        )
+
+    # -- persistence ----------------------------------------------------------
+
+    def save(self, path: str) -> None:
+        """Write one subdirectory per model shard (its feature/attr/code
+        rows + *local* HELP graph), replicated codec arrays, and mesh/codec
+        metadata. Arrays round-trip bit-exactly through ``np.save``; at
+        fleet scale each host writes only its own ``shard_*`` directory —
+        this single-host implementation loops over shards."""
+        os.makedirs(path, exist_ok=True)
+        n_shards = int(self.mesh.shape["model"])
+        rows = self.shard_rows
+        feats = np.asarray(self.features)
+        attrs = np.asarray(self.attrs)
+        graphs = np.asarray(self.graphs)
+        codes = None if self.codes is None else np.asarray(self.codes)
+        for s in range(n_shards):
+            d = os.path.join(path, f"shard_{s:05d}")
+            os.makedirs(d, exist_ok=True)
+            sl = slice(s * rows, (s + 1) * rows)
+            np.save(os.path.join(d, "features.npy"), feats[sl])
+            np.save(os.path.join(d, "attrs.npy"), attrs[sl])
+            np.save(os.path.join(d, "graph.npy"), graphs[sl])
+            if codes is not None:
+                np.save(os.path.join(d, "codes.npy"), codes[sl])
+        if self.sq_scale is not None:
+            np.save(os.path.join(path, "sq_scale.npy"),
+                    np.asarray(self.sq_scale))
+            np.save(os.path.join(path, "sq_zero.npy"),
+                    np.asarray(self.sq_zero))
+        if self.pq_centroids is not None:
+            np.save(os.path.join(path, "pq_centroids.npy"),
+                    np.asarray(self.pq_centroids))
+        meta = {
+            "format": SHARDED_FORMAT,
+            "n_shards": n_shards,
+            "shard_rows": rows,
+            "metric_cfg": dataclasses.asdict(self.metric_cfg),
+            "quant_mode": self.quant_mode,
+            "pq_dim": self.pq_dim,
+            "mesh_shape": {k: int(v) for k, v in self.mesh.shape.items()},
+        }
+        tmp = os.path.join(path, SHARDED_META + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(meta, f, indent=2)
+        os.replace(tmp, os.path.join(path, SHARDED_META))
+
+    @classmethod
+    def load(cls, path: str, mesh: Optional[Mesh] = None) -> "ShardedStableIndex":
+        """Reload a saved sharded index onto ``mesh`` (default: a fresh
+        local mesh with the saved model-shard count). The model axis must
+        match the saved shard count — per-shard HELP graphs hold ids local
+        to those boundaries — while the data axis is free to differ from
+        save time (that is the reshard)."""
+        with open(os.path.join(path, SHARDED_META)) as f:
+            meta = json.load(f)
+        if meta.get("format") != SHARDED_FORMAT:
+            raise ValueError(
+                f"{path} is not a {SHARDED_FORMAT} layout "
+                f"(found {meta.get('format')!r})"
+            )
+        n_shards = int(meta["n_shards"])
+        if mesh is None:
+            from repro.launch.mesh import make_local_mesh
+
+            nd = jax.device_count()
+            if nd % n_shards:
+                raise ValueError(
+                    f"cannot build a default mesh: {nd} devices do not "
+                    f"divide into {n_shards} saved model shards — pass mesh="
+                )
+            mesh = make_local_mesh(data=nd // n_shards, model=n_shards)
+        if int(mesh.shape["model"]) != n_shards:
+            raise ValueError(
+                f"mesh has {mesh.shape['model']} model shards but {path} "
+                f"was saved with {n_shards}: per-shard HELP graphs are "
+                "local to the saved shard boundaries (rebuild to change "
+                "the model-axis size; the data axis may differ freely)"
+            )
+
+        def stack(name):
+            return np.concatenate([
+                np.load(os.path.join(path, f"shard_{s:05d}", name))
+                for s in range(n_shards)
+            ])
+
+        fsh = NamedSharding(mesh, P("model", None))
+        rep = NamedSharding(mesh, P())
+        kw: dict = {}
+        if meta["quant_mode"] != "none":
+            kw["quant_mode"] = meta["quant_mode"]
+            kw["codes"] = jax.device_put(jnp.asarray(stack("codes.npy")), fsh)
+            sq_scale = os.path.join(path, "sq_scale.npy")
+            if os.path.exists(sq_scale):
+                kw["sq_scale"] = jax.device_put(
+                    jnp.asarray(np.load(sq_scale)), rep)
+                kw["sq_zero"] = jax.device_put(
+                    jnp.asarray(np.load(os.path.join(path, "sq_zero.npy"))),
+                    rep)
+            pq_c = os.path.join(path, "pq_centroids.npy")
+            if os.path.exists(pq_c):
+                kw["pq_centroids"] = jax.device_put(
+                    jnp.asarray(np.load(pq_c)), rep)
+                kw["pq_dim"] = int(meta["pq_dim"])
+        return cls(
+            mesh=mesh,
+            features=jax.device_put(
+                jnp.asarray(stack("features.npy"), jnp.float32), fsh),
+            attrs=jax.device_put(
+                jnp.asarray(stack("attrs.npy"), jnp.int32), fsh),
+            graphs=jax.device_put(jnp.asarray(stack("graph.npy")), fsh),
+            metric_cfg=MetricConfig(**meta["metric_cfg"]),
+            shard_rows=int(meta["shard_rows"]),
+            **kw,
         )

@@ -8,7 +8,10 @@ caches and data batches alike.
 Also the offline STABLE index builder CLI —
 ``python -m repro.launch.build --n 20000 --quant pq --out DIR`` builds (and
 optionally quantizes) an index over a synthetic hybrid dataset and saves it
-for ``repro.launch.serve --index-dir DIR``.
+for ``repro.launch.serve --index-dir DIR``. With ``--shards S`` the build
+produces a mesh-sharded engine (one HELP sub-index per model shard) and
+saves it in the per-shard sharded layout that ``Engine.load`` reshards onto
+the serving mesh.
 """
 from __future__ import annotations
 
@@ -354,6 +357,10 @@ def main() -> None:
     ap.add_argument("--no-graph", action="store_true",
                     help="scan-only corpus: skip the HELP graph build "
                          "(the engine planner will use brute force)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="build a mesh-sharded engine over this many model "
+                         "shards and save the per-shard layout (0 = "
+                         "single-host)")
     args = ap.parse_args()
 
     ds = make_hybrid_dataset(
@@ -361,10 +368,36 @@ def main() -> None:
         labels_per_dim=3, n_clusters=16, attr_cluster_corr=0.6, seed=0,
     )
     t0 = time.time()
+    help_cfg = HelpConfig(gamma=args.gamma, gamma_new=6,
+                          max_rounds=args.max_rounds)
+    quant_cfg = QuantConfig(mode=args.quant, pq_subspaces=args.pq_subspaces)
+    if args.shards:
+        from repro.core import auto as auto_mod
+        from repro.core.auto import MetricConfig
+        from repro.distributed.search import ShardedStableIndex
+        from repro.launch.mesh import make_local_mesh
+
+        nd = jax.device_count()
+        if nd % args.shards:
+            raise SystemExit(
+                f"--shards {args.shards} does not divide {nd} devices"
+            )
+        mesh = make_local_mesh(data=nd // args.shards, model=args.shards)
+        stats = auto_mod.sample_stats(ds.features, ds.attrs)
+        eng = Engine(ShardedStableIndex.build(
+            mesh, ds.features, ds.attrs,
+            MetricConfig(mode="auto", alpha=stats.alpha),
+            help_cfg=help_cfg, quant_cfg=quant_cfg,
+        ))
+        eng.save(args.out)
+        print(f"built {args.shards}-shard {args.n}×{ds.features.shape[1]} "
+              f"engine in {time.time()-t0:.1f}s → {args.out} "
+              f"(per-shard layout; Engine.load reshards onto the serving "
+              f"mesh)")
+        return
     eng = Engine.build(
-        ds.features, ds.attrs,
-        HelpConfig(gamma=args.gamma, gamma_new=6, max_rounds=args.max_rounds),
-        quant_cfg=QuantConfig(mode=args.quant, pq_subspaces=args.pq_subspaces),
+        ds.features, ds.attrs, help_cfg,
+        quant_cfg=quant_cfg,
         build_graph=not args.no_graph,
     )
     eng.save(args.out)

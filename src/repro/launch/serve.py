@@ -1,12 +1,14 @@
 """Serving launcher: build/load a STABLE engine and serve batched hybrid
 queries — ``python -m repro.launch.serve [--index-dir DIR]``.
 
-All requests go through ``repro.api.Engine`` — the planner resolves the
-backend (graph traversal, or brute-force below ``--brute-threshold``) and
-derives the quantization mode from the index's code store, so a quantized
-index automatically serves through the two-stage path (traversal over
-compressed codes, exact rerank of the pool head). Eval counters are
-per-query, so the report includes honest per-request cost percentiles.
+All requests go through ``repro.api.Engine`` — the planner picks brute vs
+graph from the calibrated cost model (``--brute-threshold`` remains as the
+deprecated fixed-N override) and derives the quantization mode from the
+index's code store, so a quantized index automatically serves through the
+two-stage path (traversal over compressed codes, exact rerank of the pool
+head). Repeated batches reuse the executor's compiled executable (the
+report prints the plan-cache hit rate) and eval counters are per-query, so
+the report includes honest per-request cost percentiles.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --n 20000 --batches 8
@@ -44,8 +46,9 @@ def main() -> None:
     ap.add_argument("--rerank", type=int, default=0,
                     help="pool entries reranked exactly (0 = whole pool)")
     ap.add_argument("--pq-subspaces", type=int, default=32)
-    ap.add_argument("--brute-threshold", type=int, default=2048,
-                    help="planner scans instead of traversing at/below this N")
+    ap.add_argument("--brute-threshold", type=int, default=None,
+                    help="DEPRECATED fixed-N override: scan at/below this N "
+                         "(default: calibrated cost model decides)")
     args = ap.parse_args()
 
     ds = make_hybrid_dataset(
@@ -90,6 +93,10 @@ def main() -> None:
     plan = eng.plan(warm, params)
     print(f"plan: backend={plan.backend} quant={plan.quant_mode} "
           f"({plan.reason})")
+    if plan.cost_brute is not None:
+        print(f"  cost model: brute≈{plan.cost_brute:.0f} vs "
+              f"graph≈{plan.cost_graph:.0f} fp-eval units/query "
+              f"(unit_evals={eng.cost_model.unit_evals:.2f})")
     eng.search(warm, params)  # warm compile
 
     lat, recalls = [], []
@@ -117,6 +124,9 @@ def main() -> None:
     print(f"  per-request cost: evals p50={np.percentile(ev, 50):.0f} "
           f"p99={np.percentile(ev, 99):.0f} mean={ev.mean():.0f}  "
           f"code_evals mean={cev.mean():.0f}")
+    ci = eng.executor.cache_info()
+    print(f"  plan cache: {ci['hits']} hits / {ci['misses']} misses "
+          f"({ci['size']} executables resident)")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
 """Unified query/engine API: predicate→mask compilation semantics, planner
-rules, and engine-vs-legacy bit-exact parity on all three backends
-(including after ``Engine.save/load``)."""
+rules (calibrated cost model + deprecated fixed-threshold shim), executor
+plan-cache semantics, and engine-vs-legacy bit-exact parity on all three
+backends (including after ``Engine.save/load``, sharded layouts included)."""
 import json
 import os
 import subprocess
@@ -13,10 +14,11 @@ import numpy as np
 import pytest
 
 from repro.api import (
-    ANY, BETWEEN, MATCH, ONE_OF, Engine, Predicate, Query, QueryBatch,
-    SearchParams,
+    ANY, BETWEEN, MATCH, ONE_OF, CostModel, Engine, Predicate, Query,
+    QueryBatch, SearchParams, cost_model_from_table,
 )
 from repro.core import auto as auto_mod
+from repro.core import routing as routing_mod
 from repro.core.auto import MetricConfig
 from repro.core.baselines import brute_force_hybrid, recall_at_k
 from repro.core.help_graph import HelpConfig
@@ -199,6 +201,219 @@ class TestPlanner:
             SearchParams(backend="gpu")
         with pytest.raises(ValueError):
             SearchParams(quant="fp4")
+
+
+# ---------------------------------------------------------------------------
+# Cost-model planner + deprecated threshold shim
+# ---------------------------------------------------------------------------
+
+
+class TestCostModelPlanner:
+    def test_cost_model_monotonicity(self, ds, engines):
+        """Predicted graph cost grows with pool size, brute with N (and
+        graph never shrinks with N either)."""
+        cm = engines["none"].cost_model
+        pools = [16, 32, 64, 128, 256]
+        g = [cm.graph_cost(n=3000, pool=p, batch=16) for p in pools]
+        assert all(a < b for a, b in zip(g, g[1:])), g
+        ns = [1000, 5000, 20000, 100000, 1000000]
+        b = [cm.brute_cost(n=n, pool=64) for n in ns]
+        assert all(x < y for x, y in zip(b, b[1:])), b
+        gn = [cm.graph_cost(n=n, pool=64, batch=16) for n in ns]
+        assert all(x <= y for x, y in zip(gn, gn[1:])), gn
+        # quantized scans discount the N term but still grow with N
+        bq = [cm.brute_cost(n=n, pool=64, quant_mode="pq") for n in ns]
+        assert all(x < y for x, y in zip(bq, bq[1:])), bq
+        assert bq[-1] < b[-1]  # ADC scan cheaper than exact at scale
+
+    def test_auto_plan_uses_cost_model(self, ds, engines):
+        """Without overrides the planner must decide from the calibrated
+        crossover and expose both predicted costs on the Plan."""
+        plan = engines["none"].plan(
+            QueryBatch.match(ds.query_features, ds.query_attrs),
+            SearchParams(k=10),
+        )
+        assert plan.cost_brute is not None and plan.cost_graph is not None
+        assert plan.backend in ("brute", "graph")
+        assert (plan.backend == "brute") == (
+            plan.cost_brute <= plan.cost_graph
+        )
+        assert "cost model" in plan.reason
+
+    def test_widening_predicates_raise_graph_cost(self, ds, engines):
+        """The width surcharge prices the executor's cut-widening — charged
+        exactly when the widening will run: ONE_OF always, BETWEEN only
+        under enforce_equality (soft BETWEEN traverses at plain k, so its
+        graph cost must match the point batch's)."""
+        eng = engines["none"]
+        point = QueryBatch.match(ds.query_features[:8], ds.query_attrs[:8])
+        one_of = QueryBatch.from_queries([
+            Query(ds.query_features[i],
+                  [ONE_OF(0, 2), BETWEEN(0, 1), ANY, ANY, ANY])
+            for i in range(8)
+        ])
+        soft_between = QueryBatch.from_queries([
+            Query(ds.query_features[i],
+                  [BETWEEN(0, 2), BETWEEN(0, 1), ANY, ANY, ANY])
+            for i in range(8)
+        ])
+        p_point = eng.plan(point, SearchParams(k=10))
+        p_one_of = eng.plan(one_of, SearchParams(k=10))
+        p_soft = eng.plan(soft_between, SearchParams(k=10))
+        p_hard = eng.plan(soft_between,
+                          SearchParams(k=10, enforce_equality=True))
+        assert p_one_of.cost_graph > p_point.cost_graph
+        assert p_soft.cost_graph == pytest.approx(p_point.cost_graph)
+        assert p_hard.cost_graph > p_soft.cost_graph
+        for p in (p_one_of, p_soft, p_hard):
+            assert p.cost_brute == pytest.approx(p_point.cost_brute)
+
+    def test_cost_model_table_roundtrip(self, engines):
+        cm = engines["none"].cost_model
+        cm2 = cost_model_from_table({"cost_model": cm.to_json()})
+        assert cm2 == cm
+        # injected models skip the probe entirely
+        eng = Engine(engines["none"].index, cost_model_override=cm2)
+        assert eng.cost_model == cm
+        with pytest.raises(ValueError):
+            CostModel(unit_evals=0.0, probe_pool=32, probe_n=100)
+
+    def test_brute_threshold_deprecated_but_honored(self, ds, engines):
+        """The old knob survives as a hard override: explicitly set, it
+        pins the decision (warning emitted); unset, the cost model rules."""
+        eng = engines["none"]
+        qb = QueryBatch.match(ds.query_features, ds.query_attrs)
+        with pytest.warns(DeprecationWarning, match="brute_threshold"):
+            plan = eng.plan(qb, SearchParams(k=10, brute_threshold=10**6))
+        assert plan.backend == "brute"
+        assert plan.cost_brute is None  # cost model never consulted
+        with pytest.warns(DeprecationWarning, match="brute_threshold"):
+            plan = eng.plan(qb, SearchParams(k=10, brute_threshold=1))
+        assert plan.backend == "graph"
+        # the override also flows through Engine.search end to end
+        with pytest.warns(DeprecationWarning):
+            res = eng.search(qb, SearchParams(k=10, brute_threshold=10**6))
+        truth = brute_force_hybrid(
+            ds.features, ds.attrs, ds.query_features, ds.query_attrs, 10
+        )
+        np.testing.assert_array_equal(np.asarray(res.ids),
+                                      np.asarray(truth.ids))
+
+    def test_tiny_graph_index_auto_plans_without_crash(self, ds):
+        """Calibration must cope with indexes smaller than the probe shape
+        (k/pioneer clamp to the pool, pool clamps to N)."""
+        eng = Engine.build(
+            ds.features[:6], ds.attrs[:6],
+            HelpConfig(gamma=4, gamma_new=2, max_rounds=2,
+                       quality_sample=4, node_block=64),
+        )
+        plan = eng.plan(
+            QueryBatch.match(ds.query_features, ds.query_attrs),
+            SearchParams(k=2),
+        )
+        assert plan.backend in ("brute", "graph")
+        assert plan.cost_brute is not None
+
+    def test_quant_none_priced_at_full_precision(self, ds, engines):
+        """quant='none' forces full-precision execution, so the planner
+        must price the N-row fp scan, not the ADC code scan that won't
+        run."""
+        eng = engines["pq"]
+        qb = QueryBatch.match(ds.query_features, ds.query_attrs)
+        p_auto = eng.plan(qb, SearchParams(k=10))
+        p_none = eng.plan(qb, SearchParams(k=10, quant="none"))
+        assert p_none.quant_mode == "none"
+        assert p_none.cost_brute > p_auto.cost_brute
+
+    def test_sharded_cost_model_raises_clearly(self):
+        """cost_model is single-host only (sharded always plans sharded) —
+        accessing it on a sharded engine must fail with a clear error, not
+        an AttributeError from the probe poking missing fields."""
+
+        class _FakeShardedIndex:  # anything that isn't a StableIndex
+            pass
+
+        eng = Engine(_FakeShardedIndex())
+        assert eng.is_sharded
+        with pytest.raises(ValueError, match="single-host"):
+            eng.cost_model
+
+    def test_graphless_engine_skips_calibration(self, ds):
+        eng = Engine.build(ds.features[:500], ds.attrs[:500],
+                           build_graph=False)
+        plan = eng.plan(QueryBatch.match(ds.query_features, ds.query_attrs),
+                        SearchParams(k=5))
+        assert plan.backend == "brute" and plan.cost_brute is None
+        assert eng._cost_model is None  # probe never ran
+
+
+# ---------------------------------------------------------------------------
+# Executor plan cache
+# ---------------------------------------------------------------------------
+
+
+class TestExecutorCache:
+    def test_same_signature_hits_cache_and_never_retraces(self, ds, engines):
+        """Two consecutive searches with the same (batch shape, predicate
+        kind, params) signature: the second must reuse the compiled
+        executable and add zero new jit traces."""
+        eng = engines["none"]
+        params = SearchParams(k=7, pool_size=48, pioneer_size=6, seed=3,
+                              backend="graph")
+        qb = QueryBatch.match(ds.query_features, ds.query_attrs)
+        r1 = eng.search(qb, params)
+        before = eng.executor.cache_info()
+        t0 = routing_mod.trace_count()
+        r2 = eng.search(qb, params)
+        assert routing_mod.trace_count() == t0  # zero new traces
+        after = eng.executor.cache_info()
+        assert after["hits"] == before["hits"] + 1
+        assert after["misses"] == before["misses"]
+        np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+        np.testing.assert_array_equal(np.asarray(r1.sqdists),
+                                      np.asarray(r2.sqdists))
+
+    def test_different_batch_shape_misses(self, ds, engines):
+        eng = engines["none"]
+        params = SearchParams(k=7, pool_size=48, pioneer_size=6, seed=3,
+                              backend="graph")
+        eng.search(QueryBatch.match(ds.query_features, ds.query_attrs),
+                   params)
+        before = eng.executor.cache_info()
+        eng.search(QueryBatch.match(ds.query_features[:8],
+                                    ds.query_attrs[:8]), params)
+        after = eng.executor.cache_info()
+        assert after["misses"] == before["misses"] + 1
+
+    def test_different_predicate_kind_misses(self, ds, engines):
+        eng = engines["none"]
+        params = SearchParams(k=7, pool_size=48, pioneer_size=6, seed=3,
+                              backend="graph")
+        point = QueryBatch.match(ds.query_features[:8], ds.query_attrs[:8])
+        interval = QueryBatch.from_queries([
+            Query(ds.query_features[i], [BETWEEN(0, 1), ANY, ANY, ANY, ANY])
+            for i in range(8)
+        ])
+        eng.search(point, params)
+        before = eng.executor.cache_info()
+        eng.search(interval, params)
+        after = eng.executor.cache_info()
+        assert after["misses"] == before["misses"] + 1
+        # …and repeating the interval batch is now a hit
+        t0 = routing_mod.trace_count()
+        eng.search(interval, params)
+        assert routing_mod.trace_count() == t0
+        assert eng.executor.cache_info()["hits"] == after["hits"] + 1
+
+    def test_changed_params_miss(self, ds, engines):
+        eng = engines["none"]
+        qb = QueryBatch.match(ds.query_features[:8], ds.query_attrs[:8])
+        eng.search(qb, SearchParams(k=7, pool_size=48, pioneer_size=6,
+                                    seed=3, backend="graph"))
+        before = eng.executor.cache_info()
+        eng.search(qb, SearchParams(k=7, pool_size=64, pioneer_size=6,
+                                    seed=3, backend="graph"))
+        assert eng.executor.cache_info()["misses"] == before["misses"] + 1
 
 
 # ---------------------------------------------------------------------------
@@ -495,20 +710,27 @@ class TestEngineSemantics:
         )
         assert recall_at_k(res.ids, truth.ids, 10) >= 0.85
 
-    def test_sharded_engine_save_raises_clear_error(self):
-        """Engine.save on a sharded backend must fail up front with a
-        NotImplementedError naming the limitation — not surface an
-        arbitrary error from deep inside checkpointing."""
+    def test_engine_load_sniffs_on_disk_format(self, ds, engines, tmp_path):
+        """Engine.load distinguishes the flat single-host layout from the
+        per-shard sharded layout (full sharded round-trip parity is covered
+        under 8 fake devices below); passing mesh= for a single-host dir is
+        a clear error, and saved single-host meta carries its format tag."""
+        from repro.distributed.search import is_sharded_dir
 
-        class _FakeShardedIndex:  # anything that isn't a StableIndex
-            pass
-
-        eng = Engine(_FakeShardedIndex())
-        assert eng.is_sharded
-        with pytest.raises(NotImplementedError, match="single-host"):
-            eng.save("/tmp/should-never-be-written")
-        with pytest.raises(NotImplementedError, match="ShardedStableIndex"):
-            eng.save("/tmp/should-never-be-written")
+        path = os.path.join(tmp_path, "single")
+        engines["none"].save(path)
+        assert not is_sharded_dir(path)
+        with open(os.path.join(path, "meta.json")) as f:
+            assert json.load(f)["format"] == "stable-single-v1"
+        with pytest.raises(ValueError, match="single-host"):
+            Engine.load(path, mesh=object())
+        eng2 = Engine.load(path)
+        qb = QueryBatch.match(ds.query_features, ds.query_attrs)
+        p = SearchParams(k=10, backend="graph")
+        np.testing.assert_array_equal(
+            np.asarray(eng2.search(qb, p).ids),
+            np.asarray(engines["none"].search(qb, p).ids),
+        )
 
     def test_engine_from_parts_matches_build(self, ds, engines):
         idx = engines["none"].index
@@ -533,7 +755,7 @@ def test_engine_sharded_backend_parity():
                XLA_FLAGS="--xla_force_host_platform_device_count=8",
                PYTHONPATH="src")
     code = textwrap.dedent("""
-        import json
+        import json, os, tempfile
         import numpy as np, jax, jax.numpy as jnp
         from repro.api import (ANY, BETWEEN, MATCH, ONE_OF, Engine, Query,
                                QueryBatch, SearchParams)
@@ -542,15 +764,17 @@ def test_engine_sharded_backend_parity():
         from repro.core.auto import MetricConfig
         from repro.core.help_graph import HelpConfig
         from repro.data.synthetic import make_hybrid_dataset
+        from repro.quant import QuantConfig
 
         ds = make_hybrid_dataset(n=2048, n_queries=32, profile="sift",
                                  attr_dim=5, labels_per_dim=3, n_clusters=8,
                                  attr_cluster_corr=0.8, seed=5)
         mesh = make_local_mesh(data=2, model=4)
+        help_cfg = HelpConfig(gamma=16, gamma_new=4, max_rounds=4,
+                              quality_sample=64, node_block=512)
         idx = ShardedStableIndex.build(
             mesh, ds.features, ds.attrs, MetricConfig(mode="auto", alpha=1.0),
-            HelpConfig(gamma=16, gamma_new=4, max_rounds=4,
-                       quality_sample=64, node_block=512),
+            help_cfg,
         )
         eng = Engine(idx)
         qb = QueryBatch.match(ds.query_features, ds.query_attrs)
@@ -576,11 +800,42 @@ def test_engine_sharded_backend_parity():
         # ONE_OF membership is hard on every backend; BETWEEN stays a soft
         # penalty without enforce_equality, so only dim 0 is checked.
         iv_ok = ((iv_ids < 0) | (a[:, :, 0] == 0) | (a[:, :, 0] == 2)).all()
-        try:
-            eng.save("/tmp/sharded-save-should-fail")
-            save_err = ""
-        except NotImplementedError as e:
-            save_err = str(e)
+
+        # sharded persistence: save -> load -> bit-exact round trip (the
+        # regression test that replaced the old NotImplementedError check)
+        tmp = tempfile.mkdtemp()
+        eng.save(os.path.join(tmp, "plain"))
+        eng_rt = Engine.load(os.path.join(tmp, "plain"), mesh=mesh)
+        with mesh:
+            res_rt = eng_rt.search(qb, params)
+        rt_exact = (np.array_equal(np.asarray(res.ids),
+                                   np.asarray(res_rt.ids))
+                    and np.array_equal(np.asarray(res.sqdists),
+                                       np.asarray(res_rt.sqdists)))
+
+        # ...and with PQ codes: codes/codebooks must survive bit-exactly,
+        # loading through the default-mesh branch (8 devices / 4 shards)
+        idxq = ShardedStableIndex.build(
+            mesh, ds.features, ds.attrs, MetricConfig(mode="auto", alpha=1.0),
+            help_cfg,
+            quant_cfg=QuantConfig(mode="pq", pq_subspaces=8,
+                                  pq_train_iters=4),
+        )
+        engq = Engine(idxq)
+        with mesh:
+            resq = engq.search(qb, params)
+        engq.save(os.path.join(tmp, "pq"))
+        engq_rt = Engine.load(os.path.join(tmp, "pq"))  # default mesh
+        with engq_rt.index.mesh:
+            resq_rt = engq_rt.search(qb, params)
+        pq_rt_exact = (np.array_equal(np.asarray(resq.ids),
+                                      np.asarray(resq_rt.ids))
+                       and np.array_equal(np.asarray(resq.sqdists),
+                                          np.asarray(resq_rt.sqdists))
+                       and np.array_equal(np.asarray(resq.n_code_evals),
+                                          np.asarray(resq_rt.n_code_evals)))
+        pq_codes_exact = np.array_equal(np.asarray(idxq.codes),
+                                        np.asarray(engq_rt.index.codes))
         print(json.dumps({
             "backend": plan.backend,
             "ids_equal": bool(np.array_equal(np.asarray(res.ids),
@@ -595,7 +850,13 @@ def test_engine_sharded_backend_parity():
             "interval_plan": eng.plan(ivq, params).backend,
             "interval_ok": bool(iv_ok),
             "interval_nonempty": bool((iv_ids >= 0).any()),
-            "save_error": save_err,
+            "roundtrip_exact": bool(rt_exact),
+            "pq_roundtrip_exact": bool(pq_rt_exact),
+            "pq_codes_exact": bool(pq_codes_exact),
+            "pq_quant_mode": engq_rt.quant_mode,
+            "pq_rerank_bounded": bool(
+                (np.asarray(resq.n_dist_evals)
+                 <= params.effective_pool).all()),
         }))
     """)
     proc = subprocess.run(
@@ -611,7 +872,12 @@ def test_engine_sharded_backend_parity():
     assert out["masked_ids_equal"], out
     assert out["masked_differs"] and out["masked_sorted"], out
     # interval (ONE_OF + BETWEEN) batches run on the sharded backend with
-    # exact ONE_OF membership, and Engine.save names its limitation
+    # exact ONE_OF membership
     assert out["interval_plan"] == "sharded"
     assert out["interval_ok"] and out["interval_nonempty"], out
-    assert "single-host" in out["save_error"], out
+    # sharded Engine.save/load round-trips bit-exactly, pq codes included,
+    # and the pooled cross-shard rerank bounds fp evals by one global pool
+    assert out["roundtrip_exact"], out
+    assert out["pq_roundtrip_exact"] and out["pq_codes_exact"], out
+    assert out["pq_quant_mode"] == "pq"
+    assert out["pq_rerank_bounded"], out

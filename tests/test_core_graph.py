@@ -216,6 +216,22 @@ class TestRouting:
                 if ids[b, j] >= 0:
                     assert (attrs[ids[b, j]] == ds.query_attrs[b]).all()
 
+    def test_two_stage_runs_fixed_coarse_budget(self, ds, built):
+        """'w/o Dynamic' ablation: the coarse stage must run for exactly
+        ``coarse_max_iters`` iterations (rows force-kept active), not exit
+        early on pioneer-set convergence — hops therefore include the full
+        fixed budget, and never less than the dynamic variant's."""
+        from repro.core.routing import search_two_stage
+
+        mc, _, graph, _, _ = built
+        cfg = RoutingConfig(k=10, pool_size=32, pioneer_size=4,
+                            coarse_max_iters=12, refine_max_iters=16)
+        fixed = search_two_stage(ds.features, ds.attrs, graph,
+                                 ds.query_features, ds.query_attrs, mc, cfg)
+        assert int(fixed.n_hops) >= 12  # full fixed coarse budget + refine
+        d = np.asarray(fixed.sqdists)
+        assert (np.diff(d, axis=1) >= -1e-5).all()  # output still valid
+
     def test_subset_query_masking(self, ds, built):
         """Eq. 8: a fully-wildcarded query ranks by pure feature distance."""
         mc, _, graph, _, _ = built
