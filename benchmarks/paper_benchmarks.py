@@ -617,6 +617,120 @@ def planner_sweep(fast: bool = True, n: int = 0) -> None:
         }, f, indent=2)
 
 
+# ---------------------------------------------------------------------------
+# Serve sweep — multi-tenant micro-batching vs the unbatched baseline
+# ---------------------------------------------------------------------------
+
+
+def serve_sweep(fast: bool = True, n: int = 0) -> None:
+    """Throughput + end-to-end p99 of the serving loop across micro-batch
+    window × bucket ladder × tenant count, against the unbatched per-query
+    baseline on the same engine.
+
+    Requests arrive on a deterministic virtual clock (fixed inter-arrival
+    spacing), so coalescing decisions are reproducible; throughput is
+    measured as completed requests per second of *wall* batch-execution
+    time (``service_qps`` — padding overhead is charged), and p99 is the
+    end-to-end request latency (virtual queueing + wall service). Emits
+    ``BENCH_serve.json``. Pass ``--n`` (benchmarks.run) for the CI smoke.
+    """
+    import json
+    import os
+
+    from benchmarks.common import BENCH_DIR
+    from repro.api import Engine, Query, MATCH
+    from repro.serve import (
+        Request, ServerStats, TenantPolicy, TenantRegistry, serve_loop,
+    )
+
+    bench = "serve_sweep"
+    n = n or (10_000 if fast else 20_000)
+    n_requests = 256 if fast else 512
+    windows_ms = [0.5, 2.0, 8.0]
+    ladders = [(1,), (1, 8, 32), (1, 8, 32, 128)]
+    tenant_counts = [1, 4] if fast else [1, 4, 16]
+    arrival_spacing_s = 5e-5  # 20k offered QPS — keeps windows full
+    k, pool = 10, 64
+
+    ds = dataset("sift", 5, 3, n, n_requests)
+    eng = built_engine(ds, "auto")
+    params = SearchParams(k=k, pool_size=pool,
+                          pioneer_size=max(4, pool // 8))
+
+    def requests_for(n_tenants: int):
+        return [
+            (i * arrival_spacing_s,
+             Request(f"t{i % n_tenants}",
+                     Query(ds.query_features[i],
+                           [MATCH(int(v)) for v in ds.query_attrs[i]])))
+            for i in range(n_requests)
+        ]
+
+    # -- unbatched baseline: one Engine.search per request, no coalescing --
+    singles = [QueryBatch.match(ds.query_features[i:i + 1],
+                                ds.query_attrs[i:i + 1])
+               for i in range(n_requests)]
+    jax.block_until_ready(eng.search(singles[0], params).ids)  # warm compile
+    lat = []
+    for qb in singles:
+        t0 = time.perf_counter()
+        jax.block_until_ready(eng.search(qb, params).ids)
+        lat.append(time.perf_counter() - t0)
+    unbatched = {
+        "qps": round(n_requests / sum(lat), 1),
+        "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+        "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+    }
+    emit(bench, "unbatched", "qps", unbatched["qps"])
+    emit(bench, "unbatched", "p99_ms", unbatched["p99_ms"])
+
+    points = []
+    for n_tenants in tenant_counts:
+        reg_proto = TenantPolicy(params=params)
+        for ladder in ladders:
+            for w in windows_ms:
+                reg = TenantRegistry(default_policy=reg_proto)
+                trace = requests_for(n_tenants)
+                # warm the executables for this ladder, then measure
+                serve_loop(eng, trace, reg, window_ms=w, buckets=ladder)
+                stats = ServerStats(eng)
+                resp, stats = serve_loop(
+                    eng, trace, TenantRegistry(default_policy=reg_proto),
+                    window_ms=w, buckets=ladder, stats=stats,
+                )
+                snap = stats.snapshot()
+                tag = f"t{n_tenants}/b{'-'.join(map(str, ladder))}/w{w}"
+                emit(bench, tag, "service_qps", snap["service_qps"])
+                emit(bench, tag, "p99_ms", snap["latency_ms"]["p99"])
+                emit(bench, tag, "fill", snap["batch_fill_ratio"])
+                points.append({
+                    "tenants": n_tenants,
+                    "buckets": list(ladder),
+                    "window_ms": w,
+                    "completed": snap["completed"],
+                    "batches": snap["batches"],
+                    "service_qps": snap["service_qps"],
+                    "p50_ms": snap["latency_ms"]["p50"],
+                    "p99_ms": snap["latency_ms"]["p99"],
+                    "batch_fill_ratio": snap["batch_fill_ratio"],
+                    "retraces": snap["retraces"],
+                    "plan_cache_hit_rate": snap["plan_cache"]["hit_rate"],
+                    "speedup_vs_unbatched": round(
+                        snap["service_qps"] / unbatched["qps"], 2
+                    ) if unbatched["qps"] else None,
+                })
+
+    flush_csv(bench)
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    with open(os.path.join(BENCH_DIR, "BENCH_serve.json"), "w") as f:
+        json.dump({
+            "n": n, "n_requests": n_requests, "k": k, "pool": pool,
+            "arrival_spacing_s": arrival_spacing_s,
+            "unbatched": unbatched,
+            "points": points,
+        }, f, indent=2)
+
+
 ALL = [
     tab1_magnitude_stats,
     fig3_qps_recall,
@@ -631,4 +745,5 @@ ALL = [
     quant_sweep,
     filter_sweep,
     planner_sweep,
+    serve_sweep,
 ]

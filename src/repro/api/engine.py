@@ -67,6 +67,7 @@ from repro.core.help_graph import HelpConfig
 from repro.core.index import StableIndex
 from repro.core.routing import RoutingConfig, SearchResult
 from repro.quant import QuantConfig, QuantizedVectors, adc_lut, adc_scan
+from repro.api import executor as executor_mod
 from repro.api import planner as planner_mod
 from repro.api.executor import Executor
 from repro.api.planner import CostModel, Plan
@@ -322,6 +323,11 @@ class Engine:
     cost_model_override: Optional[CostModel] = dataclasses.field(
         default=None, repr=False, compare=False
     )
+    #: bound on resident compiled executables (multi-tenant serving streams
+    #: produce many distinct plan signatures; see api.executor)
+    executor_max_entries: int = dataclasses.field(
+        default=executor_mod.CACHE_SIZE, repr=False, compare=False
+    )
     _attrs_np: Optional[np.ndarray] = dataclasses.field(
         default=None, repr=False, compare=False
     )
@@ -361,7 +367,7 @@ class Engine:
     def executor(self) -> Executor:
         """The plan-signature → compiled-executable cache for this engine."""
         if self._executor is None:
-            self._executor = Executor(self)
+            self._executor = Executor(self, max_entries=self.executor_max_entries)
         return self._executor
 
     def searcher(self, name: str) -> Searcher:
@@ -517,21 +523,51 @@ class Engine:
         calibration, codes and codebooks); sharded engines write one
         subdirectory per model shard (arrays + local HELP graph + codes)
         plus replicated codec state and mesh metadata — see
-        ``ShardedStableIndex.save``."""
-        self.index.save(path)
+        ``ShardedStableIndex.save``.
+
+        The calibrated planner ``CostModel`` is persisted in the meta of
+        both formats, so ``Engine.load`` skips the calibration probe
+        entirely. A single-host graph engine that has not planned yet runs
+        the probe once here — save time is the natural place to pay it;
+        graph-less engines never calibrate (they always plan brute) and
+        sharded engines persist a model only when one was injected."""
+        extra = {}
+        cm = self._cost_model or self.cost_model_override
+        if cm is None and not self.is_sharded and self.has_graph:
+            cm = self.cost_model  # probe once at save time, not per load
+        if cm is not None:
+            extra["cost_model"] = cm.to_json()
+        self.index.save(path, extra_meta=extra)
 
     @classmethod
     def load(cls, path: str, mesh=None) -> "Engine":
         """Load a saved engine, sniffing the on-disk format. Sharded
         layouts reshard onto ``mesh`` (or a freshly built local mesh with
-        the saved model-shard count when ``mesh`` is None)."""
-        from repro.distributed.search import ShardedStableIndex, is_sharded_dir
+        the saved model-shard count when ``mesh`` is None). A persisted
+        cost model in the saved meta (written by ``save``) is restored as
+        ``cost_model_override`` — load performs zero probe traversals."""
+        import json as json_mod
+        import os as os_mod
+
+        from repro.distributed.search import (
+            SHARDED_META, ShardedStableIndex, is_sharded_dir,
+        )
 
         if is_sharded_dir(path):
-            return cls(ShardedStableIndex.load(path, mesh=mesh))
-        if mesh is not None:
-            raise ValueError(
-                f"{path} holds a single-host engine; mesh= only applies to "
-                "sharded layouts"
-            )
-        return cls(StableIndex.load(path))
+            index = ShardedStableIndex.load(path, mesh=mesh)
+            meta_file = os_mod.path.join(path, SHARDED_META)
+        else:
+            if mesh is not None:
+                raise ValueError(
+                    f"{path} holds a single-host engine; mesh= only applies "
+                    "to sharded layouts"
+                )
+            index = StableIndex.load(path)
+            meta_file = os_mod.path.join(path, "meta.json")
+        with open(meta_file) as f:
+            saved_cm = json_mod.load(f).get("cost_model")
+        override = (
+            planner_mod.cost_model_from_table(saved_cm)
+            if saved_cm is not None else None
+        )
+        return cls(index, cost_model_override=override)

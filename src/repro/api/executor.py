@@ -13,6 +13,22 @@ via ``core.routing.trace_count`` in the tests).
 
 Repeated serving batches (the common case: fixed batch shape, fixed params)
 therefore pay one dict lookup + the device computation, nothing else.
+
+The serving layer (``repro.serve``) leans on two properties here:
+
+* signatures are *bucket-friendly* — batch size is part of the signature, so
+  the microbatcher pads every coalesced batch up to a fixed bucket ladder
+  (1/8/32/…) and the whole serving stream collapses onto a handful of
+  resident executables;
+* padded rows can never perturb real rows — all traversal state is per-row
+  and the entry pool is row-invariant (``routing.make_entry_ids`` draws one
+  seed set shared by every row), so a query returns bit-identical top-k
+  whether it is served alone or coalesced into a padded bucket batch.
+
+A multi-tenant stream can still produce many distinct signatures (tenants ×
+predicate kinds × buckets), so the cache is an explicitly bounded LRU:
+``max_entries`` caps resident executables and ``stats()`` reports evictions
+(an evicted signature recompiles on its next miss — correct, just slower).
 """
 from __future__ import annotations
 
@@ -31,8 +47,9 @@ if TYPE_CHECKING:
 
 __all__ = ["Executor", "PlanSignature"]
 
-#: Executables kept per engine; least-recently-used beyond this are dropped
-#: (signatures are tiny — this bounds closures + cached entry pools).
+#: Default executables kept per engine; least-recently-used beyond this are
+#: dropped (signatures are tiny — this bounds closures + cached entry pools).
+#: Override per engine via ``Engine(executor_max_entries=...)``.
 CACHE_SIZE = 256
 
 
@@ -60,17 +77,27 @@ class PlanSignature(NamedTuple):
 class Executor:
     """Per-engine plan-signature cache of compiled search executables."""
 
-    def __init__(self, engine: "Engine"):
+    def __init__(self, engine: "Engine", max_entries: int = CACHE_SIZE):
+        if max_entries <= 0:
+            raise ValueError("max_entries must be positive")
         self._engine = engine
+        self.max_entries = max_entries
         self._cache: OrderedDict[PlanSignature, Callable] = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
-    def cache_info(self) -> dict:
+    def stats(self) -> dict:
+        """Host-side cache counters (no device traffic): hits, misses,
+        evictions, resident size and the configured bound."""
         return {
             "hits": self.hits, "misses": self.misses,
-            "size": len(self._cache),
+            "evictions": self.evictions, "size": len(self._cache),
+            "max_entries": self.max_entries,
         }
+
+    # legacy name kept for callers that predate stats()
+    cache_info = stats
 
     def signature(
         self, queries: QueryBatch, params: "SearchParams", plan: "Plan"
@@ -95,14 +122,17 @@ class Executor:
         self, queries: QueryBatch, params: "SearchParams", plan: "Plan"
     ) -> SearchResult:
         sig = self.signature(queries, params, plan)
+        size0 = len(self._cache)
         fn, hit = lru_get(
             self._cache, sig, lambda: self._compile(params, plan, sig),
-            CACHE_SIZE,
+            self.max_entries,
         )
         if hit:
             self.hits += 1
         else:
             self.misses += 1
+            if len(self._cache) == size0:  # insert displaced the LRU entry
+                self.evictions += 1
         return fn(queries)
 
     # -- compilation ---------------------------------------------------------

@@ -49,6 +49,7 @@ __all__ = [
     "CostModel",
     "Plan",
     "calibrate",
+    "calibration_count",
     "cost_model_from_table",
     "make_plan",
 ]
@@ -57,6 +58,16 @@ __all__ = [
 #: build/load time, large enough to average out per-query variance.
 PROBE_BATCH = 8
 PROBE_POOL = 32
+
+#: Process-wide count of calibration probes run. Tests assert that loading
+#: an engine whose save meta carries a persisted cost model adds nothing
+#: here (the whole point of persisting the calibration).
+_CALIBRATION_COUNT = [0]
+
+
+def calibration_count() -> int:
+    """Total calibration probes run so far in this process."""
+    return _CALIBRATION_COUNT[0]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -197,6 +208,7 @@ def calibrate(index, seed: int = 0, time_probe: bool = True) -> CostModel:
     from repro.core import auto as auto_mod
     from repro.core.auto import MetricConfig
 
+    _CALIBRATION_COUNT[0] += 1
     n = int(index.features.shape[0])
     take = jnp.asarray(
         np.linspace(0, n - 1, num=min(PROBE_BATCH, n)).astype(np.int32)

@@ -113,7 +113,10 @@ class StableIndex:
 
     # -- persistence ----------------------------------------------------------
 
-    def save(self, path: str) -> None:
+    def save(self, path: str, extra_meta: Optional[dict] = None) -> None:
+        """``extra_meta`` lets wrappers persist engine-level state (e.g. the
+        calibrated planner cost model — see ``api.Engine.save``) inside
+        meta.json; unknown keys are ignored by ``load``."""
         os.makedirs(path, exist_ok=True)
         np.save(os.path.join(path, "features.npy"), np.asarray(self.features))
         np.save(os.path.join(path, "attrs.npy"), np.asarray(self.attrs))
@@ -126,6 +129,7 @@ class StableIndex:
             "help_cfg": dataclasses.asdict(self.help_cfg),
             "stats": dataclasses.asdict(self.stats),
             "quant": self.quant.save(path) if self.quant is not None else None,
+            **(extra_meta or {}),
         }
         tmp = os.path.join(path, "meta.json.tmp")
         with open(tmp, "w") as f:

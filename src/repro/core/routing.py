@@ -503,13 +503,21 @@ def _search_jit(
 
 
 def make_entry_ids(n_nodes: int, batch: int, pool_size: int, seed: int = 0) -> Array:
-    """Paper Alg. 3 init: random-K seed nodes per query."""
+    """Paper Alg. 3 init: random-K seed nodes, shared across the batch.
+
+    The draw depends only on (n_nodes, pool_size, seed) — every row gets the
+    same seed pool, so a query's result is invariant to its row position and
+    to the batch size it is served in. That invariance is what lets the
+    serving layer coalesce requests into padded bucket batches (repro.serve)
+    with bit-identical per-query results: all remaining traversal state is
+    per-row. Per-row recall is unaffected (each query still sees pool_size
+    uniform seeds; rows are merely correlated with each other).
+    """
     import numpy as np
 
     rng = np.random.default_rng(seed)
-    return jnp.asarray(
-        rng.integers(0, n_nodes, size=(batch, pool_size), dtype=np.int32)
-    )
+    row = rng.integers(0, n_nodes, size=(1, pool_size), dtype=np.int32)
+    return jnp.asarray(np.broadcast_to(row, (batch, pool_size)))
 
 
 def search(

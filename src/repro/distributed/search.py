@@ -337,12 +337,14 @@ class ShardedStableIndex:
 
     # -- persistence ----------------------------------------------------------
 
-    def save(self, path: str) -> None:
+    def save(self, path: str, extra_meta: Optional[dict] = None) -> None:
         """Write one subdirectory per model shard (its feature/attr/code
         rows + *local* HELP graph), replicated codec arrays, and mesh/codec
         metadata. Arrays round-trip bit-exactly through ``np.save``; at
         fleet scale each host writes only its own ``shard_*`` directory —
-        this single-host implementation loops over shards."""
+        this single-host implementation loops over shards. ``extra_meta``
+        persists engine-level state (e.g. an injected planner cost model)
+        inside the sharded meta; unknown keys are ignored by ``load``."""
         os.makedirs(path, exist_ok=True)
         n_shards = int(self.mesh.shape["model"])
         rows = self.shard_rows
@@ -375,6 +377,7 @@ class ShardedStableIndex:
             "quant_mode": self.quant_mode,
             "pq_dim": self.pq_dim,
             "mesh_shape": {k: int(v) for k, v in self.mesh.shape.items()},
+            **(extra_meta or {}),
         }
         tmp = os.path.join(path, SHARDED_META + ".tmp")
         with open(tmp, "w") as f:

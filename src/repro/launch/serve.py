@@ -1,34 +1,39 @@
-"""Serving launcher: build/load a STABLE engine and serve batched hybrid
-queries — ``python -m repro.launch.serve [--index-dir DIR]``.
+"""Serving launcher: build/load a STABLE engine and serve a multi-tenant
+request stream — ``python -m repro.launch.serve [--index-dir DIR]``.
 
-All requests go through ``repro.api.Engine`` — the planner picks brute vs
-graph from the calibrated cost model (``--brute-threshold`` remains as the
-deprecated fixed-N override) and derives the quantization mode from the
-index's code store, so a quantized index automatically serves through the
-two-stage path (traversal over compressed codes, exact rerank of the pool
-head). Repeated batches reuse the executor's compiled executable (the
-report prints the plan-cache hit rate) and eval counters are per-query, so
-the report includes honest per-request cost percentiles.
+The launcher is a client of the ``repro.serve`` subsystem: requests are
+admitted per tenant (token bucket + k/pool caps), coalesced by compatible
+plan signature inside a micro-batch window, padded up the bucket ladder and
+executed through one shared ``Engine`` — repeated windows replay cached
+executables with zero re-traces. One engine is built (or loaded from
+``--index-dir``) once and reused for the whole stream; all timing comes
+from ``ServerStats`` (end-to-end p50/p95/p99, batch-fill ratio, plan-cache
+hit rate, per-tenant QPS), not ad-hoc stopwatches.
 
 Examples:
-  PYTHONPATH=src python -m repro.launch.serve --n 20000 --batches 8
-  PYTHONPATH=src python -m repro.launch.serve --n 20000 --quant pq
+  PYTHONPATH=src python -m repro.launch.serve --n 20000 --requests 512
+  PYTHONPATH=src python -m repro.launch.serve --n 20000 --quant pq \\
+      --tenants 8 --window-ms 4 --buckets 1,8,32
+  PYTHONPATH=src python -m repro.launch.serve --index-dir /tmp/idx --rate 200
 """
 from __future__ import annotations
 
 import argparse
+import math
 import time
 
-import jax
 import numpy as np
 
 
 def main() -> None:
-    from repro.api import Engine, QueryBatch, SearchParams
+    from repro.api import Engine, Query, SearchParams, MATCH
     from repro.core.baselines import brute_force_hybrid, recall_at_k
     from repro.core.help_graph import HelpConfig
     from repro.data.synthetic import make_hybrid_dataset
     from repro.quant import QUANT_MODES, QuantConfig
+    from repro.serve import (
+        Request, TenantPolicy, TenantRegistry, ThreadedServer, serve_loop,
+    )
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--index-dir", default=None,
@@ -37,8 +42,18 @@ def main() -> None:
     ap.add_argument("--n", type=int, default=20_000)
     ap.add_argument("--profile", default="sift")
     ap.add_argument("--attr-dim", type=int, default=5)
-    ap.add_argument("--batch", type=int, default=64)
-    ap.add_argument("--batches", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=512,
+                    help="total requests in the served stream")
+    ap.add_argument("--tenants", type=int, default=4,
+                    help="number of tenants (round-robin request stream)")
+    ap.add_argument("--window-ms", type=float, default=2.0,
+                    help="micro-batch coalescing window")
+    ap.add_argument("--buckets", default="1,8,32,128",
+                    help="comma-separated batch bucket ladder")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="per-tenant admitted QPS (token bucket); 0 = unlimited")
+    ap.add_argument("--burst", type=float, default=32.0,
+                    help="per-tenant token-bucket burst capacity")
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--pool", type=int, default=64)
     ap.add_argument("--quant", default="none", choices=QUANT_MODES,
@@ -46,18 +61,17 @@ def main() -> None:
     ap.add_argument("--rerank", type=int, default=0,
                     help="pool entries reranked exactly (0 = whole pool)")
     ap.add_argument("--pq-subspaces", type=int, default=32)
-    ap.add_argument("--brute-threshold", type=int, default=None,
-                    help="DEPRECATED fixed-N override: scan at/below this N "
-                         "(default: calibrated cost model decides)")
     args = ap.parse_args()
+    buckets = tuple(int(b) for b in args.buckets.split(","))
 
     ds = make_hybrid_dataset(
-        n=args.n, n_queries=args.batch * args.batches, profile=args.profile,
+        n=args.n, n_queries=args.requests, profile=args.profile,
         attr_dim=args.attr_dim, labels_per_dim=3, n_clusters=16,
         attr_cluster_corr=0.6, seed=0,
     )
     if args.index_dir:
-        print(f"loading engine from {args.index_dir}")
+        print(f"loading engine from {args.index_dir} "
+              "(one engine reused for the whole stream)")
         eng = Engine.load(args.index_dir)
     else:
         print(f"building index over {args.n} nodes ({args.profile} profile, "
@@ -80,53 +94,70 @@ def main() -> None:
                   f"({f32_mb/code_mb:.0f}× compression)")
         if args.save_index:
             eng.save(args.save_index)
-            print(f"  saved to {args.save_index}")
+            print(f"  saved to {args.save_index} (incl. calibrated cost "
+                  "model — loads skip the probe)")
 
-    # the engine derives quant_mode from the index — no codec copying here
+    # one policy per tenant; the engine derives quant from the index
     params = SearchParams(
         k=args.k, pool_size=args.pool,
-        pioneer_size=max(4, args.pool // 8),
-        rerank_size=args.rerank, brute_threshold=args.brute_threshold,
+        pioneer_size=max(4, args.pool // 8), rerank_size=args.rerank,
     )
-    warm = QueryBatch.match(ds.query_features[: args.batch],
-                            ds.query_attrs[: args.batch])
-    plan = eng.plan(warm, params)
-    print(f"plan: backend={plan.backend} quant={plan.quant_mode} "
-          f"({plan.reason})")
-    if plan.cost_brute is not None:
-        print(f"  cost model: brute≈{plan.cost_brute:.0f} vs "
-              f"graph≈{plan.cost_graph:.0f} fp-eval units/query "
-              f"(unit_evals={eng.cost_model.unit_evals:.2f})")
-    eng.search(warm, params)  # warm compile
+    rate = args.rate if args.rate > 0 else math.inf
+    reg = TenantRegistry()
+    tenants = [f"tenant-{t}" for t in range(max(args.tenants, 1))]
+    for t in tenants:
+        reg.register(t, TenantPolicy(params=params, rate=rate,
+                                     burst=args.burst))
+    reqs = [
+        Request(tenants[i % len(tenants)],
+                Query(ds.query_features[i],
+                      [MATCH(int(v)) for v in ds.query_attrs[i]]))
+        for i in range(args.requests)
+    ]
 
-    lat, recalls = [], []
-    per_q_evals, per_q_code = [], []
-    for b in range(args.batches):
-        sl = slice(b * args.batch, (b + 1) * args.batch)
-        qv, qa = ds.query_features[sl], ds.query_attrs[sl]
-        t0 = time.perf_counter()
-        res = eng.search(QueryBatch.match(qv, qa), params)
-        jax.block_until_ready(res.ids)
-        lat.append(time.perf_counter() - t0)
-        per_q_evals.append(np.asarray(res.n_dist_evals))
-        per_q_code.append(np.asarray(res.n_code_evals))
-        truth = brute_force_hybrid(ds.features, ds.attrs, qv, qa, args.k)
-        recalls.append(recall_at_k(res.ids, truth.ids, args.k))
+    # warmup: compile the executables the stream will replay (deterministic
+    # driver, same buckets/params) so the timed run measures serving, not jit
+    warm = min(len(reqs), max(buckets))
+    serve_loop(eng, [(0.0, r) for r in reqs[:warm]],
+               TenantRegistry(default_policy=TenantPolicy(params=params)),
+               window_ms=args.window_ms, buckets=buckets)
 
-    lat_ms = np.array(lat) * 1e3
-    ev = np.concatenate(per_q_evals)
-    cev = np.concatenate(per_q_code)
-    total_q = args.batch * args.batches
-    print(f"[served] {total_q} queries: QPS={total_q/sum(lat):.0f}  "
-          f"p50={np.percentile(lat_ms, 50):.1f}ms "
-          f"p99={np.percentile(lat_ms, 99):.1f}ms  "
-          f"Recall@{args.k}={np.mean(recalls):.3f}")
-    print(f"  per-request cost: evals p50={np.percentile(ev, 50):.0f} "
-          f"p99={np.percentile(ev, 99):.0f} mean={ev.mean():.0f}  "
-          f"code_evals mean={cev.mean():.0f}")
-    ci = eng.executor.cache_info()
-    print(f"  plan cache: {ci['hits']} hits / {ci['misses']} misses "
-          f"({ci['size']} executables resident)")
+    print(f"serving {len(reqs)} requests from {len(tenants)} tenants "
+          f"(window={args.window_ms}ms, buckets={buckets})")
+    with ThreadedServer(eng, reg, window_ms=args.window_ms,
+                        buckets=buckets) as srv:
+        futs = [srv.submit(r) for r in reqs]
+        results = [f.result() for f in futs]
+
+    done = [r for r in results if r.ok]
+    snap = srv.stats.snapshot()
+    lat = snap["latency_ms"]
+    print(f"[served] {snap['completed']}/{snap['submitted']} completed, "
+          f"{snap['rejected']} shed {dict(snap['rejected_by_reason'])}")
+    print(f"  end-to-end: QPS={snap['qps']:.0f}  p50={lat['p50']:.1f}ms "
+          f"p95={lat['p95']:.1f}ms p99={lat['p99']:.1f}ms")
+    print(f"  batches: {snap['batches']} "
+          f"(fill={snap['batch_fill_ratio']:.2f}, "
+          f"queue p99={snap['queue_ms_p99']:.1f}ms, "
+          f"service p99={snap['service_ms_p99']:.1f}ms)")
+    pc = snap["plan_cache"]
+    print(f"  plan cache: {pc['hits']} hits / {pc['misses']} misses "
+          f"(hit rate {pc['hit_rate']:.2f}, {pc['evictions']} evictions, "
+          f"{pc['size']} resident)  retraces={snap['retraces']} "
+          f"(jit hit rate {snap['jit_hit_rate']:.2f})")
+    for t, c in snap["per_tenant"].items():
+        print(f"    {t}: {c['completed']}/{c['submitted']} served "
+              f"({c['qps']:.0f} qps, {c['rejected']} shed)")
+
+    if done:
+        take = [r.request_id for r in done]
+        ids = np.stack([r.ids for r in done])
+        truth = brute_force_hybrid(
+            ds.features, ds.attrs, ds.query_features[take],
+            ds.query_attrs[take], args.k,
+        )
+        print(f"  Recall@{args.k}={recall_at_k(ids, truth.ids, args.k):.3f} "
+              f"(vs exact oracle, completed requests)")
 
 
 if __name__ == "__main__":

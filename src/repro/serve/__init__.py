@@ -1,0 +1,61 @@
+"""Multi-tenant serving subsystem on top of ``api.Engine``.
+
+Turns a stream of heterogeneous single ``(tenant, Query)`` requests into
+the uniform, cache-hitting batches the plan→compile→execute pipeline was
+built for:
+
+  request ──admission──▶ RequestQueue ──window/bucket──▶ Microbatcher
+  (token bucket,         (grouped by        (pad to bucket ladder,
+   k/pool caps)           plan signature)    one Engine.search per group)
+
+* ``Request`` / ``Completed`` / ``Rejected`` — typed request/response
+  surface; load shedding is a result, not an exception.
+* ``TenantRegistry`` / ``TenantPolicy`` — per-tenant default
+  ``SearchParams``, k/pool caps, deterministic token-bucket admission.
+* ``Microbatcher`` / ``RequestQueue`` — coalesce admitted requests by
+  compatible plan signature within a time/size window, pad each batch up a
+  fixed bucket ladder so every batch replays a cached executable with zero
+  re-traces after warmup; per-request results are bit-identical to serving
+  each query alone (row-invariant entry pools + per-row traversal state).
+* ``ServerStats`` — live metrics sampled without device round-trips
+  (end-to-end latency percentiles, queue depth, batch-fill ratio, plan- and
+  jit-cache hit rates, per-tenant QPS, shed counts).
+* ``serve_loop`` — deterministic synchronous driver over a scripted
+  ``(arrival_time, Request)`` trace (unit-testable without threads);
+  ``ThreadedServer`` — thin wall-clock front-end for live serving
+  (``launch/serve.py``).
+
+Typical use::
+
+    from repro.serve import (
+        Request, TenantPolicy, TenantRegistry, serve_loop,
+    )
+
+    reg = TenantRegistry()
+    reg.register("acme", TenantPolicy(params=SearchParams(k=10),
+                                      rate=500.0, burst=64))
+    trace = [(i * 1e-4, Request("acme", q)) for i, q in enumerate(queries)]
+    responses, stats = serve_loop(engine, trace, reg, window_ms=2.0)
+    print(stats.snapshot())
+"""
+from repro.serve.batcher import DEFAULT_BUCKETS, Microbatcher, RequestQueue
+from repro.serve.loop import ThreadedServer, serve_loop
+from repro.serve.request import Completed, Rejected, Request, Response
+from repro.serve.stats import ServerStats
+from repro.serve.tenants import TenantPolicy, TenantRegistry, TokenBucket
+
+__all__ = [
+    "Completed",
+    "DEFAULT_BUCKETS",
+    "Microbatcher",
+    "Rejected",
+    "Request",
+    "RequestQueue",
+    "Response",
+    "ServerStats",
+    "TenantPolicy",
+    "TenantRegistry",
+    "ThreadedServer",
+    "TokenBucket",
+    "serve_loop",
+]

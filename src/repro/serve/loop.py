@@ -1,0 +1,254 @@
+"""Serving drivers: a deterministic synchronous loop and a threaded server.
+
+``serve_loop`` is the unit-testable core: it replays a *scripted trace* of
+``(arrival_time, Request)`` pairs against a virtual clock — admission,
+windowing, coalescing and bucket choice are all pure functions of the trace,
+so tests assert exact admission decisions, exact batch shapes and bit-exact
+results without threads or sleeps. The threaded front-end
+(``ThreadedServer``) runs the same queue/microbatcher/registry objects off
+the wall clock for live use (``launch/serve.py``).
+
+Every submitted request receives exactly one typed response (``Completed``
+or ``Rejected``), returned in submission order by ``serve_loop`` and as a
+``Future`` by ``ThreadedServer.submit``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue as queue_mod
+import threading
+import time
+from concurrent.futures import Future
+from typing import Iterable, List, Optional, Tuple, Union
+
+from repro.api import Engine
+from repro.serve import request as request_mod
+from repro.serve.batcher import DEFAULT_BUCKETS, Microbatcher
+from repro.serve.request import Rejected, Request, Response
+from repro.serve.stats import ServerStats
+from repro.serve.tenants import TenantPolicy, TenantRegistry
+
+__all__ = ["ThreadedServer", "serve_loop"]
+
+TraceItem = Union[Request, Tuple[float, Request]]
+
+
+def serve_loop(
+    engine: Engine,
+    requests: Iterable[TraceItem],
+    registry: Optional[TenantRegistry] = None,
+    *,
+    window_ms: float = 2.0,
+    buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
+    max_queue: int = 1024,
+    stats: Optional[ServerStats] = None,
+) -> Tuple[List[Response], ServerStats]:
+    """Drive a scripted request trace through the serving stack.
+
+    ``requests`` yields ``(arrival_time_s, Request)`` pairs in
+    nondecreasing arrival order (bare ``Request`` items arrive at the
+    current clock — a plain list coalesces maximally). The virtual clock
+    advances only from those timestamps: groups flush when their window
+    deadline passes or they fill the largest bucket, and token buckets
+    refill from the same clock, so the whole run is reproducible. Batch
+    *service* time is still measured wall time (it feeds latency stats, not
+    decisions).
+
+    Returns one response per submitted request, in submission order, plus
+    the ``ServerStats`` for the run.
+    """
+    registry = registry or TenantRegistry(default_policy=TenantPolicy())
+    stats = stats or ServerStats(engine)
+    mb = Microbatcher(
+        engine, stats, window_s=window_ms * 1e-3, buckets=buckets
+    )
+    out: List[Optional[Response]] = []
+    slot: dict = {}  # in-flight request_id → submission index
+    now = 0.0
+    t_start: Optional[float] = None
+    next_id = 0
+
+    def settle(completions) -> None:
+        for c in completions:
+            out[slot.pop(c.request_id)] = c
+
+    for item in requests:
+        t, req = item if isinstance(item, tuple) else (now, item)
+        now = max(now, float(t))
+        t_start = now if t_start is None else t_start
+        settle(mb.flush_due(now))
+        if req.request_id is None:
+            req = dataclasses.replace(req, request_id=next_id)
+        next_id = max(next_id, req.request_id) + 1
+        idx = len(out)
+        out.append(None)
+        stats.record_submit(req.tenant)
+        if req.request_id in slot:  # collides with an in-flight request
+            reason: Optional[str] = request_mod.REJECT_DUPLICATE
+        elif mb.queue.depth >= max_queue:
+            reason = request_mod.REJECT_QUEUE
+        else:
+            reason = registry.admit(req, now)
+        if reason is not None:
+            stats.record_reject(req.tenant, reason)
+            out[idx] = Rejected(
+                request_id=req.request_id, tenant=req.tenant, reason=reason
+            )
+            continue
+        slot[req.request_id] = idx
+        settle(mb.enqueue(req, registry.resolve_params(req), now))
+
+    # drain: every remaining deadline is ≤ last arrival + window
+    now += mb.queue.window_s
+    settle(mb.flush_all(now))
+    assert not slot, "every admitted request must have been flushed"
+    stats.span_s = max(now - (t_start or 0.0), 1e-9)
+    return out, stats
+
+
+class ThreadedServer:
+    """Thin wall-clock front-end over the same queue/microbatcher core.
+
+    ``submit`` performs admission synchronously on the caller's thread
+    (rejections resolve the returned ``Future`` immediately — backpressure
+    is instant); admitted requests are handed to one worker thread that
+    owns the ``Microbatcher`` and flushes groups on window expiry or full
+    buckets. Use as a context manager::
+
+        with ThreadedServer(engine, registry, window_ms=2.0) as srv:
+            futs = [srv.submit(r) for r in reqs]
+            results = [f.result() for f in futs]
+        print(srv.stats.snapshot())
+    """
+
+    def __init__(
+        self,
+        engine: Engine,
+        registry: Optional[TenantRegistry] = None,
+        *,
+        window_ms: float = 2.0,
+        buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
+        max_queue: int = 1024,
+    ):
+        self.registry = registry or TenantRegistry(
+            default_policy=TenantPolicy()
+        )
+        self.stats = ServerStats(engine)
+        self._mb = Microbatcher(
+            engine, self.stats, window_s=window_ms * 1e-3, buckets=buckets
+        )
+        self.max_queue = max_queue
+        self._inbox: "queue_mod.Queue" = queue_mod.Queue()
+        self._futures: dict = {}
+        self._lock = threading.Lock()  # admission + id assignment
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._t0 = time.monotonic()
+        self._next_id = 0
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def start(self) -> "ThreadedServer":
+        if self._thread is None:
+            self._thread = threading.Thread(target=self._run, daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Drain the queue, flush every pending group, join the worker.
+        Requests that slipped into the inbox after the worker's final
+        emptiness check are resolved as ``Rejected(server_stopped)`` —
+        no Future is ever stranded."""
+        if self._thread is not None:
+            self._stop.set()
+            self._thread.join()
+            self._thread = None
+        while True:
+            try:
+                req, _ = self._inbox.get_nowait()
+            except queue_mod.Empty:
+                break
+            with self._lock:
+                fut = self._futures.pop(req.request_id, None)
+            if fut is not None and not fut.done():
+                self.stats.record_reject(
+                    req.tenant, request_mod.REJECT_STOPPED
+                )
+                fut.set_result(Rejected(
+                    request_id=req.request_id, tenant=req.tenant,
+                    reason=request_mod.REJECT_STOPPED,
+                ))
+        self.stats.span_s = max(time.monotonic() - self._t0, 1e-9)
+
+    def __enter__(self) -> "ThreadedServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- client surface -------------------------------------------------------
+
+    def _now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def submit(self, req: Request) -> "Future[Response]":
+        """Admit (or shed) on the caller's thread; returns a Future that
+        resolves to this request's typed response."""
+        fut: "Future[Response]" = Future()
+        with self._lock:
+            if req.request_id is None:
+                req = dataclasses.replace(req, request_id=self._next_id)
+            self._next_id = max(self._next_id, req.request_id) + 1
+            self.stats.record_submit(req.tenant)
+            if self._stop.is_set():
+                reason: Optional[str] = request_mod.REJECT_STOPPED
+            elif req.request_id in self._futures:  # collides with in-flight
+                reason = request_mod.REJECT_DUPLICATE
+            elif (self._inbox.qsize() + self._mb.queue.depth
+                    >= self.max_queue):
+                reason = request_mod.REJECT_QUEUE
+            else:
+                reason = self.registry.admit(req, self._now())
+            if reason is not None:
+                self.stats.record_reject(req.tenant, reason)
+                fut.set_result(Rejected(
+                    request_id=req.request_id, tenant=req.tenant,
+                    reason=reason,
+                ))
+                return fut
+            params = self.registry.resolve_params(req)
+            self._futures[req.request_id] = fut
+        self._inbox.put((req, params))
+        return fut
+
+    # -- worker ---------------------------------------------------------------
+
+    def _resolve(self, completions) -> None:
+        for c in completions:
+            with self._lock:
+                fut = self._futures.pop(c.request_id, None)
+            if fut is not None:
+                fut.set_result(c)
+
+    def _run(self) -> None:
+        window = self._mb.queue.window_s
+        try:
+            while not (self._stop.is_set() and self._inbox.empty()):
+                deadline = self._mb.queue.next_deadline()
+                timeout = window if deadline is None else max(
+                    min(deadline - self._now(), window), 1e-4
+                )
+                try:
+                    req, params = self._inbox.get(timeout=timeout)
+                    self._resolve(self._mb.enqueue(req, params, self._now()))
+                except queue_mod.Empty:
+                    pass
+                self._resolve(self._mb.flush_due(self._now()))
+            self._resolve(self._mb.flush_all(self._now()))
+        except BaseException as exc:  # fail loudly: never strand futures
+            with self._lock:
+                pending, self._futures = self._futures, {}
+            for fut in pending.values():
+                if not fut.done():
+                    fut.set_exception(exc)
+            raise

@@ -1,0 +1,94 @@
+"""Serving request/response types.
+
+A ``Request`` is one tenant-attributed declarative query. The serving loop
+answers every submitted request with exactly one typed response:
+
+* ``Completed`` — the per-query top-k (host numpy, sliced out of the
+  coalesced batch) plus the request's own latency decomposition;
+* ``Rejected``  — admission control shed the request *before* it consumed
+  any device work (token budget exhausted, queue full, per-tenant cap
+  violated, unknown tenant). Rejection is a result, not an exception: under
+  overload the serving loop keeps draining at its provisioned rate and the
+  caller sees exactly which requests were shed and why.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import numpy as np
+
+from repro.api import Query, SearchParams
+
+__all__ = ["Completed", "Rejected", "Request", "Response"]
+
+#: Rejection reasons emitted by admission control (``TenantRegistry.admit``)
+#: and the bounded request queue.
+REJECT_RATE = "rate_limit"  # token bucket empty for this tenant
+REJECT_QUEUE = "queue_full"  # global pending-request bound hit
+REJECT_K_CAP = "k_cap"  # per-request k above the tenant's cap
+REJECT_POOL_CAP = "pool_cap"  # per-request pool above the tenant's cap
+REJECT_UNKNOWN = "unknown_tenant"  # tenant not registered, no default policy
+REJECT_DUPLICATE = "duplicate_id"  # request_id collides with one in flight
+REJECT_STOPPED = "server_stopped"  # submitted to a stopped ThreadedServer
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One serving request: a tenant id plus a declarative ``Query``.
+
+    ``params`` optionally overrides the tenant's default ``SearchParams``
+    for this request only; the override must respect the tenant's k/pool
+    caps or admission rejects it. ``request_id`` is assigned by the driver
+    (submission order) when left at None.
+    """
+
+    tenant: str
+    query: Query
+    params: Optional[SearchParams] = None
+    request_id: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Completed:
+    """Successful response — per-query slices of the coalesced batch result.
+
+    ``queue_ms`` is time spent waiting for the micro-batch window (the
+    driver's clock domain: virtual under ``serve_loop``, wall under the
+    threaded front-end); ``service_ms`` is the measured wall time of the
+    batch execution this request rode in; ``bucket``/``batch_fill`` say how
+    that batch was shaped (ladder size and real-row fraction).
+    """
+
+    request_id: int
+    tenant: str
+    ids: np.ndarray  # (k,) neighbor ids, INVALID-padded
+    dists: np.ndarray  # (k,) fused distances
+    queue_ms: float
+    service_ms: float
+    bucket: int
+    batch_fill: float
+
+    @property
+    def ok(self) -> bool:
+        return True
+
+    @property
+    def latency_ms(self) -> float:
+        return self.queue_ms + self.service_ms
+
+
+@dataclasses.dataclass(frozen=True)
+class Rejected:
+    """Load-shedding response: the request never reached the device."""
+
+    request_id: int
+    tenant: str
+    reason: str  # one of the REJECT_* constants above
+
+    @property
+    def ok(self) -> bool:
+        return False
+
+
+Response = Union[Completed, Rejected]

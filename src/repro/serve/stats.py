@@ -1,0 +1,155 @@
+"""Live serving metrics, sampled without device round-trips.
+
+``ServerStats`` accumulates host-side counters only: request latencies are
+host clock differences, batch shapes are Python ints, and the cache/trace
+rates come from host counters the executor and router already maintain
+(``Executor.stats()``, ``core.routing.trace_count``). ``snapshot()`` never
+touches a device array, so metrics can be scraped from a live server
+without stalling the serving stream.
+
+Latency is decomposed per request into ``queue`` (waiting for the
+micro-batch window — the driver's clock domain) and ``service`` (measured
+wall time of the coalesced batch execution the request rode in); the
+percentiles reported are end-to-end (queue + service).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import TYPE_CHECKING, Optional
+
+import numpy as np
+
+if TYPE_CHECKING:
+    from repro.api import Engine
+
+__all__ = ["ServerStats"]
+
+
+class ServerStats:
+    """Serving-loop metrics accumulator (one per driver run or server)."""
+
+    def __init__(self, engine: Optional["Engine"] = None):
+        from repro.core import routing as routing_mod
+
+        self._engine = engine
+        ex = engine.executor.stats() if engine is not None else None
+        # baselines: snapshot deltas isolate *this* serving run from
+        # whatever warmed the process earlier
+        self._cache0 = ex or {"hits": 0, "misses": 0, "evictions": 0}
+        self._traces0 = routing_mod.trace_count()
+        self.submitted = 0
+        self.admitted = 0
+        self.completed = 0
+        self.rejected = 0
+        self.rejected_by_reason: dict = defaultdict(int)
+        self.per_tenant: dict = defaultdict(
+            lambda: {"submitted": 0, "completed": 0, "rejected": 0}
+        )
+        self.queue_ms: list = []
+        self.service_ms: list = []
+        self.total_ms: list = []
+        self.batches = 0
+        self.real_rows = 0
+        self.bucket_rows = 0
+        self.service_wall_s = 0.0
+        self.queue_depth = 0
+        self.max_queue_depth = 0
+        self.span_s = 0.0  # driver-clock span of the run (for QPS)
+
+    # -- recording (host-side only) ------------------------------------------
+
+    def record_submit(self, tenant: str) -> None:
+        self.submitted += 1
+        self.per_tenant[tenant]["submitted"] += 1
+
+    def record_reject(self, tenant: str, reason: str) -> None:
+        self.rejected += 1
+        self.rejected_by_reason[reason] += 1
+        self.per_tenant[tenant]["rejected"] += 1
+
+    def record_queue_depth(self, depth: int) -> None:
+        self.queue_depth = depth
+        self.max_queue_depth = max(self.max_queue_depth, depth)
+
+    def record_batch(self, n_real: int, bucket: int, service_s: float) -> None:
+        self.batches += 1
+        self.real_rows += n_real
+        self.bucket_rows += bucket
+        self.service_wall_s += service_s
+
+    def record_completion(
+        self, tenant: str, queue_ms: float, service_ms: float
+    ) -> None:
+        self.admitted += 1  # completion implies prior admission
+        self.completed += 1
+        self.per_tenant[tenant]["completed"] += 1
+        self.queue_ms.append(queue_ms)
+        self.service_ms.append(service_ms)
+        self.total_ms.append(queue_ms + service_ms)
+
+    # -- reporting ------------------------------------------------------------
+
+    @property
+    def batch_fill_ratio(self) -> float:
+        """Real rows / padded bucket rows across every coalesced batch —
+        the padding overhead of the bucket ladder (1.0 = no padding)."""
+        return self.real_rows / self.bucket_rows if self.bucket_rows else 0.0
+
+    def _pct(self, xs: list, q: float) -> float:
+        return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+    def snapshot(self) -> dict:
+        """One host-side metrics sample (safe to call mid-stream)."""
+        from repro.core import routing as routing_mod
+
+        out = {
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "rejected_by_reason": dict(self.rejected_by_reason),
+            "latency_ms": {
+                "p50": round(self._pct(self.total_ms, 50), 3),
+                "p95": round(self._pct(self.total_ms, 95), 3),
+                "p99": round(self._pct(self.total_ms, 99), 3),
+                "mean": round(
+                    float(np.mean(self.total_ms)) if self.total_ms else 0.0, 3
+                ),
+            },
+            "queue_ms_p99": round(self._pct(self.queue_ms, 99), 3),
+            "service_ms_p99": round(self._pct(self.service_ms, 99), 3),
+            "queue_depth": self.queue_depth,
+            "max_queue_depth": self.max_queue_depth,
+            "batches": self.batches,
+            "batch_fill_ratio": round(self.batch_fill_ratio, 4),
+            "qps": round(self.completed / self.span_s, 1) if self.span_s else 0.0,
+            "service_qps": round(
+                self.completed / self.service_wall_s, 1
+            ) if self.service_wall_s else 0.0,
+            "per_tenant": {
+                t: {
+                    **c,
+                    "qps": round(c["completed"] / self.span_s, 1)
+                    if self.span_s else 0.0,
+                }
+                for t, c in sorted(self.per_tenant.items())
+            },
+        }
+        # cache/trace rates from host counters (deltas vs construction time)
+        retraces = routing_mod.trace_count() - self._traces0
+        out["retraces"] = retraces
+        out["jit_hit_rate"] = round(
+            1.0 - retraces / self.batches, 4
+        ) if self.batches else 1.0
+        if self._engine is not None:
+            now = self._engine.executor.stats()
+            hits = now["hits"] - self._cache0["hits"]
+            misses = now["misses"] - self._cache0["misses"]
+            out["plan_cache"] = {
+                "hits": hits,
+                "misses": misses,
+                "hit_rate": round(hits / (hits + misses), 4)
+                if hits + misses else 1.0,
+                "evictions": now["evictions"] - self._cache0["evictions"],
+                "size": now["size"],
+            }
+        return out

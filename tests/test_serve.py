@@ -1,0 +1,413 @@
+"""Multi-tenant serving subsystem: deterministic trace semantics (bit-exact
+coalescing, zero re-traces after warmup, admission shedding), padded-batch
+bit-exactness across codecs × predicate kinds, token-bucket determinism,
+executor LRU bounds, and cost-model persistence (zero probes on load)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    ANY, BETWEEN, MATCH, ONE_OF, Engine, Query, QueryBatch, SearchParams,
+)
+from repro.api import planner as planner_mod
+from repro.core import routing as routing_mod
+from repro.core.help_graph import HelpConfig
+from repro.data.synthetic import make_hybrid_dataset
+from repro.quant import QuantConfig
+from repro.serve import (
+    Microbatcher, Rejected, Request, ServerStats, TenantPolicy,
+    TenantRegistry, ThreadedServer, TokenBucket, serve_loop,
+)
+
+HELP_CFG = HelpConfig(gamma=12, gamma_new=4, max_rounds=3,
+                      quality_sample=64, node_block=512)
+PARAMS = SearchParams(k=10, pool_size=32, pioneer_size=8)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_hybrid_dataset(
+        n=2000, n_queries=48, profile="sift", attr_dim=5, labels_per_dim=3,
+        n_clusters=8, attr_cluster_corr=0.6, seed=0,
+    )
+
+
+@pytest.fixture(scope="module")
+def engines(ds):
+    out = {}
+    for mode in ("none", "sq8", "pq"):
+        out[mode] = Engine.build(
+            ds.features, ds.attrs, HELP_CFG,
+            quant_cfg=QuantConfig(mode=mode, pq_subspaces=8,
+                                  pq_train_iters=4),
+        )
+    return out
+
+
+def _query(ds, i: int, kind: str) -> Query:
+    v, a = ds.query_features[i], ds.query_attrs[i]
+    if kind == "match":
+        return Query(v, [MATCH(int(x)) for x in a])
+    if kind == "one_of":
+        # alternate value-set widths: the ONE_OF `allowed` operand is
+        # host-side only, so width must not affect signatures or traces
+        sets = ONE_OF(0, 1) if i % 2 else ONE_OF(0, 1, 2)
+        return Query(v, [MATCH(int(a[0])), ANY, sets,
+                         MATCH(int(a[3])), ANY])
+    assert kind == "between"
+    return Query(v, [BETWEEN(0, 1), MATCH(int(a[1])), ANY, ANY,
+                     MATCH(int(a[4]))])
+
+
+def _mixed_trace(ds, n=48, spacing=2e-4, tenants=("acme", "beta")):
+    kinds = ("match", "one_of", "between")
+    return [
+        (i * spacing,
+         Request(tenants[i % len(tenants)], _query(ds, i, kinds[i % 3])))
+        for i in range(n)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# The deterministic serving acceptance test
+# ---------------------------------------------------------------------------
+
+
+class TestServeLoopDeterministic:
+    def test_trace_bit_identical_to_per_query_search(self, ds, engines):
+        """Every coalesced, padded, bucketed response is bit-identical (ids
+        and distances) to searching that query alone through Engine.search."""
+        eng = engines["none"]
+        reg = TenantRegistry(default_policy=TenantPolicy(params=PARAMS))
+        trace = _mixed_trace(ds)
+        resp, stats = serve_loop(eng, trace, reg, window_ms=2.0,
+                                 buckets=(1, 8, 32))
+        assert all(r.ok for r in resp)
+        assert stats.batches > 0 and stats.completed == len(trace)
+        for (_, req), r in zip(trace, resp):
+            solo = eng.search(QueryBatch.from_queries([req.query]), PARAMS)
+            np.testing.assert_array_equal(np.asarray(solo.ids[0]), r.ids)
+            np.testing.assert_array_equal(np.asarray(solo.dists[0]), r.dists)
+
+    def test_zero_retraces_after_warmup(self, ds, engines):
+        """After one warmup pass, replaying the whole heterogeneous trace
+        compiles nothing: every batch replays a cached executable."""
+        eng = engines["none"]
+        reg = TenantPolicy(params=PARAMS)
+        trace = _mixed_trace(ds)
+        serve_loop(eng, trace, TenantRegistry(default_policy=reg),
+                   window_ms=2.0, buckets=(1, 8, 32))  # warmup
+        t0 = routing_mod.trace_count()
+        resp, stats = serve_loop(eng, trace,
+                                 TenantRegistry(default_policy=reg),
+                                 window_ms=2.0, buckets=(1, 8, 32))
+        assert routing_mod.trace_count() == t0
+        snap = stats.snapshot()
+        assert snap["retraces"] == 0
+        assert snap["plan_cache"]["misses"] == 0
+        assert snap["plan_cache"]["hit_rate"] == 1.0
+        assert all(r.ok for r in resp)
+
+    def test_admission_sheds_over_budget_tenant(self, ds, engines):
+        """A tenant exceeding its token budget is shed with a typed
+        Rejected result; the co-tenant's stream is untouched."""
+        eng = engines["none"]
+        reg = TenantRegistry()
+        reg.register("greedy", TenantPolicy(params=PARAMS, rate=10.0,
+                                            burst=4.0))
+        reg.register("modest", TenantPolicy(params=PARAMS))
+        trace = [
+            (i * 1e-3,
+             Request("greedy" if i % 2 == 0 else "modest",
+                     _query(ds, i, "match")))
+            for i in range(32)
+        ]
+        resp, stats = serve_loop(eng, trace, reg, window_ms=2.0,
+                                 buckets=(1, 8, 32))
+        shed = [r for r in resp if not r.ok]
+        assert shed and all(isinstance(r, Rejected) for r in shed)
+        assert {r.tenant for r in shed} == {"greedy"}
+        assert {r.reason for r in shed} == {"rate_limit"}
+        # 16 greedy requests over 15ms at rate 10/s: burst 4 + ~0 refill
+        assert 10 <= len(shed) <= 12
+        snap = stats.snapshot()
+        assert snap["per_tenant"]["modest"]["rejected"] == 0
+        assert snap["per_tenant"]["modest"]["completed"] == 16
+        assert snap["rejected_by_reason"]["rate_limit"] == len(shed)
+
+    def test_trace_is_reproducible(self, ds, engines):
+        eng = engines["none"]
+        pol = TenantPolicy(params=PARAMS, rate=50.0, burst=8.0)
+        trace = _mixed_trace(ds, n=32, spacing=1e-3)
+        r1, _ = serve_loop(eng, trace, TenantRegistry(default_policy=pol),
+                           window_ms=2.0, buckets=(1, 8))
+        r2, _ = serve_loop(eng, trace, TenantRegistry(default_policy=pol),
+                           window_ms=2.0, buckets=(1, 8))
+        assert [type(a) for a in r1] == [type(b) for b in r2]
+        for a, b in zip(r1, r2):
+            if a.ok:
+                np.testing.assert_array_equal(a.ids, b.ids)
+                assert a.bucket == b.bucket
+
+
+# ---------------------------------------------------------------------------
+# Padded-batch bit-exactness across codecs × predicate kinds
+# ---------------------------------------------------------------------------
+
+
+class TestPaddedBatchBitExact:
+    @pytest.mark.parametrize("codec", ["none", "sq8", "pq"])
+    @pytest.mark.parametrize("kind", ["match", "one_of", "between"])
+    def test_padded_bucket_matches_solo(self, ds, engines, codec, kind):
+        """A coalesced batch padded up the bucket ladder returns bit-
+        identical top-k (ids and distances) to each query searched alone."""
+        eng = engines[codec]
+        reqs = [Request("t", _query(ds, i, kind), request_id=i)
+                for i in range(5)]  # 5 real rows → bucket 8 → 3 pad rows
+        stats = ServerStats(eng)
+        mb = Microbatcher(eng, stats, window_s=1.0, buckets=(8, 16))
+        for r in reqs:
+            assert mb.enqueue(r, PARAMS, now=0.0) == []
+        out = {c.request_id: c for c in mb.flush_all(0.0)}
+        assert len(out) == 5
+        assert stats.batches == 1 and stats.bucket_rows == 8
+        for r in reqs:
+            solo = eng.search(QueryBatch.from_queries([r.query]), PARAMS)
+            np.testing.assert_array_equal(
+                np.asarray(solo.ids[0]), out[r.request_id].ids)
+            np.testing.assert_array_equal(
+                np.asarray(solo.dists[0]), out[r.request_id].dists)
+
+    def test_mixed_kinds_split_groups(self, ds, engines):
+        """Incompatible plan signatures never share a batch."""
+        eng = engines["none"]
+        stats = ServerStats(eng)
+        mb = Microbatcher(eng, stats, window_s=1.0, buckets=(1, 8))
+        for i, kind in enumerate(("match", "one_of", "between", "match")):
+            mb.enqueue(Request("t", _query(ds, i, kind), request_id=i),
+                       PARAMS, now=0.0)
+        assert len(mb.queue.keys()) == 3
+        out = mb.flush_all(0.0)
+        assert len(out) == 4 and stats.batches == 3
+
+    def test_full_bucket_flushes_eagerly(self, ds, engines):
+        eng = engines["none"]
+        mb = Microbatcher(eng, ServerStats(eng), window_s=1e9, buckets=(1, 4))
+        flushed = []
+        for i in range(4):
+            flushed = mb.enqueue(
+                Request("t", _query(ds, i, "match"), request_id=i),
+                PARAMS, now=0.0,
+            )
+        assert len(flushed) == 4  # 4th request filled the largest bucket
+        assert mb.queue.depth == 0
+        assert flushed[0].bucket == 4 and flushed[0].batch_fill == 1.0
+
+    def test_bucket_for_ladder(self, ds, engines):
+        mb = Microbatcher(engines["none"], ServerStats(), window_s=1.0,
+                          buckets=(32, 1, 8))  # unsorted on purpose
+        assert mb.buckets == (1, 8, 32)
+        assert [mb.bucket_for(n) for n in (1, 2, 8, 9, 32, 40)] == \
+            [1, 8, 8, 32, 32, 32]
+
+
+# ---------------------------------------------------------------------------
+# Admission control details
+# ---------------------------------------------------------------------------
+
+
+class TestAdmission:
+    def test_token_bucket_refill_is_deterministic(self):
+        tb = TokenBucket(rate=10.0, burst=2.0)
+        assert tb.try_take(0.0) and tb.try_take(0.0)
+        assert not tb.try_take(0.0)  # burst exhausted
+        assert not tb.try_take(0.05)  # 0.5 tokens refilled — still short
+        assert tb.try_take(0.1)  # 1.0 token refilled
+        assert not tb.try_take(0.09)  # clock never runs backwards
+
+    def test_inf_rate_never_sheds_at_identical_timestamps(self, ds, engines):
+        """rate=inf disables rate limiting entirely: a burst-sized pile of
+        same-instant arrivals (a plain un-timestamped trace) all admit."""
+        tb = TokenBucket(rate=float("inf"), burst=2.0)
+        assert all(tb.try_take(0.0) for _ in range(10))
+        eng = engines["none"]
+        trace = [(0.0, Request("t", _query(ds, i % 48, "match")))
+                 for i in range(40)]  # > default burst of 32, all at t=0
+        resp, _ = serve_loop(
+            eng, trace,
+            TenantRegistry(default_policy=TenantPolicy(params=PARAMS)),
+            window_ms=1.0, buckets=(1, 8, 64),
+        )
+        assert all(r.ok for r in resp)
+
+    def test_duplicate_inflight_id_rejected(self, ds, engines):
+        eng = engines["none"]
+        trace = [
+            (0.0, Request("t", _query(ds, 0, "match"), request_id=7)),
+            (0.0, Request("t", _query(ds, 1, "match"), request_id=7)),
+        ]
+        resp, _ = serve_loop(
+            eng, trace,
+            TenantRegistry(default_policy=TenantPolicy(params=PARAMS)),
+            window_ms=1.0, buckets=(1, 8),
+        )
+        assert resp[0].ok and not resp[1].ok
+        assert resp[1].reason == "duplicate_id"
+
+    def test_caps_and_unknown_tenant(self, ds, engines):
+        eng = engines["none"]
+        reg = TenantRegistry()
+        reg.register("t", TenantPolicy(params=PARAMS, max_k=16,
+                                       max_pool=64))
+        mk = lambda **kw: Request("t", _query(ds, 0, "match"), **kw)
+        trace = [
+            (0.0, mk(params=dataclasses.replace(PARAMS, k=32))),  # k cap
+            (0.0, mk(params=SearchParams(k=10, pool_size=128))),  # pool cap
+            (0.0, Request("ghost", _query(ds, 0, "match"))),  # unknown
+            (0.0, mk()),  # fine
+        ]
+        resp, stats = serve_loop(eng, trace, reg, window_ms=1.0,
+                                 buckets=(1, 8))
+        assert [getattr(r, "reason", None) for r in resp] == \
+            ["k_cap", "pool_cap", "unknown_tenant", None]
+        assert stats.completed == 1
+
+    def test_queue_full_sheds(self, ds, engines):
+        eng = engines["none"]
+        trace = [(0.0, Request("t", _query(ds, i, "match")))
+                 for i in range(6)]
+        resp, _ = serve_loop(
+            eng, trace, TenantRegistry(default_policy=TenantPolicy(
+                params=PARAMS)),
+            window_ms=1.0, buckets=(1, 32), max_queue=4,
+        )
+        reasons = [getattr(r, "reason", None) for r in resp]
+        assert reasons[:4] == [None] * 4
+        assert reasons[4:] == ["queue_full"] * 2
+
+    def test_stats_snapshot_is_host_side(self, ds, engines):
+        eng = engines["none"]
+        resp, stats = serve_loop(
+            eng, _mixed_trace(ds, n=12),
+            TenantRegistry(default_policy=TenantPolicy(params=PARAMS)),
+            window_ms=2.0, buckets=(1, 8),
+        )
+        snap = stats.snapshot()
+        assert snap["completed"] == 12
+        assert snap["latency_ms"]["p99"] >= snap["latency_ms"]["p50"] > 0
+        assert 0 < snap["batch_fill_ratio"] <= 1.0
+        assert snap["qps"] > 0 and snap["service_qps"] > 0
+        assert set(snap["per_tenant"]) == {"acme", "beta"}
+
+
+# ---------------------------------------------------------------------------
+# Threaded front-end
+# ---------------------------------------------------------------------------
+
+
+def test_threaded_server_serves_and_reports(ds, engines):
+    eng = engines["none"]
+    reg = TenantRegistry(default_policy=TenantPolicy(params=PARAMS))
+    reqs = [Request("t", _query(ds, i, "match")) for i in range(16)]
+    with ThreadedServer(eng, reg, window_ms=2.0, buckets=(1, 8)) as srv:
+        futs = [srv.submit(r) for r in reqs]
+        out = [f.result(timeout=120) for f in futs]
+    assert all(r.ok for r in out)
+    for req, r in zip(reqs, out):
+        solo = eng.search(QueryBatch.from_queries([req.query]), PARAMS)
+        np.testing.assert_array_equal(np.asarray(solo.ids[0]), r.ids)
+    snap = srv.stats.snapshot()
+    assert snap["completed"] == 16 and snap["batches"] >= 2
+
+
+def test_threaded_server_rejects_after_stop(ds, engines):
+    srv = ThreadedServer(engines["none"],
+                         TenantRegistry(default_policy=TenantPolicy(
+                             params=PARAMS)),
+                         window_ms=1.0, buckets=(1,))
+    srv.start()
+    srv.stop()
+    r = srv.submit(Request("t", _query(ds, 0, "match"))).result(timeout=10)
+    assert not r.ok and r.reason == "server_stopped"
+
+
+# ---------------------------------------------------------------------------
+# Executor LRU bound (serving produces many distinct signatures)
+# ---------------------------------------------------------------------------
+
+
+class TestExecutorBound:
+    def test_eviction_and_recompile(self, ds, engines):
+        eng = Engine(engines["none"].index, executor_max_entries=2)
+        p = SearchParams(k=5, pool_size=32, backend="graph")
+        qb = lambda b: QueryBatch.match(ds.query_features[:b],
+                                        ds.query_attrs[:b])
+        base = eng.search(qb(1), p)
+        eng.search(qb(2), p)
+        eng.search(qb(3), p)  # evicts the b=1 executable
+        st = eng.executor.stats()
+        assert st == {"hits": 0, "misses": 3, "evictions": 1, "size": 2,
+                      "max_entries": 2}
+        res = eng.search(qb(1), p)  # re-miss: recompiles correctly
+        st = eng.executor.stats()
+        assert st["misses"] == 4 and st["evictions"] == 2 and st["size"] == 2
+        np.testing.assert_array_equal(np.asarray(base.ids),
+                                      np.asarray(res.ids))
+        eng.search(qb(1), p)
+        assert eng.executor.stats()["hits"] == 1
+
+    def test_bad_bound_rejected(self, ds, engines):
+        from repro.api.executor import Executor
+
+        with pytest.raises(ValueError, match="max_entries"):
+            Executor(engines["none"], max_entries=0)
+
+
+# ---------------------------------------------------------------------------
+# Persisted cost-model calibration (load skips the probe)
+# ---------------------------------------------------------------------------
+
+
+class TestCostModelPersistence:
+    def test_save_persists_and_load_skips_probe(self, ds, engines, tmp_path):
+        eng = engines["none"]
+        cm = eng.cost_model  # ensure calibrated (probe may run here)
+        path = str(tmp_path / "idx")
+        eng.save(path)
+        n0 = planner_mod.calibration_count()
+        t0 = routing_mod.trace_count()
+        loaded = Engine.load(path)
+        assert loaded.cost_model_override is not None
+        # planning + searching uses the persisted model: zero probe
+        # traversals on load or first use
+        qb = QueryBatch.match(ds.query_features[:4], ds.query_attrs[:4])
+        plan = loaded.plan(qb, SearchParams(k=10, pool_size=32))
+        assert plan.cost_brute is not None
+        assert planner_mod.calibration_count() == n0
+        assert routing_mod.trace_count() == t0  # load itself never traces
+        assert loaded.cost_model.to_json() == cm.to_json()
+
+    def test_save_calibrates_once_when_lazy(self, ds, tmp_path):
+        eng = Engine.build(ds.features, ds.attrs, HELP_CFG)
+        assert eng._cost_model is None
+        n0 = planner_mod.calibration_count()
+        eng.save(str(tmp_path / "idx"))
+        assert planner_mod.calibration_count() == n0 + 1  # probed at save
+        n1 = planner_mod.calibration_count()
+        Engine.load(str(tmp_path / "idx"))
+        assert planner_mod.calibration_count() == n1
+
+    def test_graphless_save_skips_cost_model(self, ds, tmp_path):
+        eng = Engine.build(ds.features, ds.attrs, build_graph=False)
+        n0 = planner_mod.calibration_count()
+        path = str(tmp_path / "idx")
+        eng.save(path)
+        assert planner_mod.calibration_count() == n0  # nothing to calibrate
+        loaded = Engine.load(path)
+        assert loaded.cost_model_override is None
+        res = loaded.search(
+            QueryBatch.match(ds.query_features[:2], ds.query_attrs[:2]),
+            SearchParams(k=5),
+        )
+        assert res.ids.shape == (2, 5)
