@@ -731,6 +731,127 @@ def serve_sweep(fast: bool = True, n: int = 0) -> None:
         }, f, indent=2)
 
 
+def mutate_sweep(fast: bool = True, n: int = 0) -> None:
+    """Freshness cost of the LSM write path: Recall@10 and p50 query
+    latency as the delta segment grows to 0–30% of the corpus, before and
+    after the background merge folds it into the main index, plus the
+    sustained write-absorb rate. Emits ``BENCH_mutate.json`` (with the
+    ``BENCH_serve.json`` read-only baseline referenced when present).
+    Pass ``--n`` (benchmarks.run) for the CI smoke.
+    """
+    import json
+    import os
+
+    from benchmarks.common import BENCH_DIR
+    from repro.mutable import CompactionPolicy, MutableEngine
+
+    bench = "mutate_sweep"
+    n = n or (10_000 if fast else 20_000)
+    fractions = [0.0, 0.1, 0.3] if fast else [0.0, 0.05, 0.1, 0.2, 0.3]
+    k, pool = 10, 128
+    repeats = 3
+    n_queries = 64
+    max_w = max(int(max(fractions) * n), 1)
+
+    ds = dataset("sift", 5, 3, n, n_queries)  # the frozen main corpus
+    extra = dataset("sift", 5, 3, max_w, 8, seed=1)  # rows streamed in
+    params = SearchParams(k=k, pool_size=pool,
+                          pioneer_size=max(4, pool // 8), backend="graph")
+    qb = QueryBatch.match(ds.query_features, ds.query_attrs)
+    rng = np.random.default_rng(0)
+
+    def oracle(m):
+        """Exact post-write truth: main ∪ inserted rows, dead ids pushed
+        out of range so they can never rank."""
+        n_ins = m._next_id - n
+        feats = np.concatenate([ds.features, extra.features[:n_ins]])
+        attrs = np.concatenate([ds.attrs, extra.attrs[:n_ins]])
+        dead = [i for i in range(m._next_id) if not m.exists(i)]
+        if dead:
+            feats = feats.copy()
+            feats[np.asarray(dead)] = 1e6
+        return brute_force_hybrid(
+            feats, attrs, ds.query_features, ds.query_attrs, k,
+        )
+
+    def measure(m):
+        jax.block_until_ready(m.search(qb, params).ids)
+        laps = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            res = m.search(qb, params)
+            jax.block_until_ready(res.ids)
+            laps.append(time.perf_counter() - t0)
+        rec = recall_at_k(np.asarray(res.ids), oracle(m).ids, k)
+        p50_ms = float(np.percentile(laps, 50)) * 1e3 / n_queries
+        return round(float(rec), 4), round(p50_ms, 4)
+
+    points = []
+    for frac in fractions:
+        # each fraction starts from an identical frozen main index (the
+        # graph build is cached per dataset by built_index; from_parts is
+        # cheap) and streams in frac·n inserts plus frac·n/5 deletes
+        m = MutableEngine(built_engine(ds),
+                          CompactionPolicy(max_delta_rows=10**9))
+        n_writes = int(frac * n)
+        n_deletes = n_writes // 5
+        t_w = time.perf_counter()
+        for i in range(n_writes):
+            m.upsert(extra.features[i], extra.attrs[i], id=n + i)
+        dels = rng.choice(n, size=n_deletes, replace=False) if n_deletes \
+            else np.empty(0, np.int64)
+        for i in dels:
+            m.delete(int(i))
+        write_s = time.perf_counter() - t_w
+        writes_per_s = round((n_writes + n_deletes) / write_s, 1) \
+            if n_writes else None
+
+        rec_pre, p50_pre = measure(m)
+        merged = m.merge()
+        rec_post, p50_post = measure(m)
+
+        tag = f"frac{frac}"
+        emit(bench, tag, "recall_pre_merge", rec_pre)
+        emit(bench, tag, "recall_post_merge", rec_post)
+        emit(bench, tag, "p50_ms_pre_merge", p50_pre)
+        emit(bench, tag, "p50_ms_post_merge", p50_post)
+        if writes_per_s is not None:
+            emit(bench, tag, "writes_per_s", writes_per_s)
+        if merged is not None:
+            emit(bench, tag, "merge_wall_ms", round(merged["wall_ms"], 1))
+        points.append({
+            "delta_fraction": frac,
+            "n_upserts": n_writes,
+            "n_deletes": n_deletes,
+            "writes_per_s": writes_per_s,
+            "recall_pre_merge": rec_pre,
+            "recall_post_merge": rec_post,
+            "p50_ms_pre_merge": p50_pre,
+            "p50_ms_post_merge": p50_post,
+            "merge": merged and {
+                "wall_ms": round(merged["wall_ms"], 1),
+                "linked": merged["linked"],
+                "repaired": merged["repaired"],
+                "tombstones": merged["tombstones"],
+            },
+        })
+
+    flush_csv(bench)
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    serve_ref = None
+    serve_path = os.path.join(BENCH_DIR, "BENCH_serve.json")
+    if os.path.exists(serve_path):
+        with open(serve_path) as f:
+            ref = json.load(f)
+        serve_ref = {"n": ref.get("n"), "unbatched": ref.get("unbatched")}
+    with open(os.path.join(BENCH_DIR, "BENCH_mutate.json"), "w") as f:
+        json.dump({
+            "n": n, "k": k, "pool": pool, "n_queries": n_queries,
+            "read_only_baseline": serve_ref,
+            "points": points,
+        }, f, indent=2)
+
+
 ALL = [
     tab1_magnitude_stats,
     fig3_qps_recall,
@@ -746,4 +867,5 @@ ALL = [
     filter_sweep,
     planner_sweep,
     serve_sweep,
+    mutate_sweep,
 ]

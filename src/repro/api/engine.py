@@ -373,6 +373,17 @@ class Engine:
     def searcher(self, name: str) -> Searcher:
         return _SEARCHERS[name]
 
+    def invalidate_caches(self) -> None:
+        """Refresh derived state after ``self.index`` is swapped in place
+        (the ``repro.mutable`` merge path): the cached host attribute copy
+        and every compiled executable (closures hold the old arrays and
+        entry pools sized for the old N). The calibrated cost model is
+        *kept* — ``CostModel._scale`` extrapolates across corpus growth, so
+        a merge must not re-probe."""
+        self._attrs_np = None
+        if self._executor is not None:
+            self._executor.clear()
+
     # -- construction --------------------------------------------------------
 
     @classmethod

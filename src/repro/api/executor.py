@@ -99,6 +99,14 @@ class Executor:
     # legacy name kept for callers that predate stats()
     cache_info = stats
 
+    def clear(self) -> None:
+        """Drop every resident executable (the engine's index was swapped —
+        e.g. a ``repro.mutable`` merge — so cached entry pools and closures
+        are stale). Counters survive: ``ServerStats`` snapshots them at
+        construction and reports deltas, which must stay monotone across
+        merges."""
+        self._cache.clear()
+
     def signature(
         self, queries: QueryBatch, params: "SearchParams", plan: "Plan"
     ) -> PlanSignature:

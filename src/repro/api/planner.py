@@ -58,6 +58,15 @@ __all__ = [
 #: build/load time, large enough to average out per-query variance.
 PROBE_BATCH = 8
 PROBE_POOL = 32
+#: Pool sizes of the multi-point traversal sweep: two operating points fit
+#: the eval curve's slope (``unit_evals``) *and* intercept
+#: (``pool_intercept`` — entry-pool scoring and other pool-independent work
+#: a single-point fit silently folds into the slope).
+PROBE_POOLS = (16, 32)
+#: Corpus-prefix fractions of the brute-scan timing sweep: multiple sizes
+#: separate the per-eval slope (``brute_eval_cost``) from the fixed
+#: dispatch intercept (``batch_overhead``), instead of assuming a default.
+PROBE_N_FRACTIONS = (0.25, 0.5, 1.0)
 
 #: Process-wide count of calibration probes run. Tests assert that loading
 #: an engine whose save meta carries a persisted cost model adds nothing
@@ -107,6 +116,9 @@ class CostModel:
     brute_eval_cost: float = 1.0  # wall cost of one brute-*scan* eval vs one
     # traversal eval — dense row-major scans beat gather+merge per eval; the
     # probe measures the ratio so the crossover tracks latency, not counts
+    pool_intercept: float = 0.0  # pool-independent scorings per query (the
+    # eval curve's intercept from the multi-point probe sweep; 0.0 keeps
+    # single-point tables from older saves bit-compatible)
 
     def __post_init__(self):
         if self.unit_evals <= 0 or self.probe_pool <= 0 or self.probe_n <= 0:
@@ -122,10 +134,12 @@ class CostModel:
     def graph_evals(self, *, n: int, pool: int, width: float = 0.0) -> float:
         """Predicted candidate scorings per query for one traversal.
 
-        Linear in pool size (each slot is expanded roughly once), scaled by
-        corpus growth and by predicate width (wide intervals widen the
-        traversal cut for the membership backfill)."""
-        return self.unit_evals * pool * self._scale(n) * (1.0 + width)
+        Affine in pool size (each slot is expanded roughly once, on top of
+        the pool-independent intercept), scaled by corpus growth and by
+        predicate width (wide intervals widen the traversal cut for the
+        membership backfill)."""
+        per_query = self.pool_intercept + self.unit_evals * pool
+        return per_query * self._scale(n) * (1.0 + width)
 
     def graph_cost(
         self,
@@ -175,33 +189,42 @@ def cost_model_from_table(table) -> CostModel:
             table = json.load(f)
     d = table.get("cost_model", table)
     kw = {k: d[k] for k in ("unit_evals", "probe_pool", "probe_n")}
-    for k in ("code_eval_cost", "batch_overhead", "brute_eval_cost"):
+    for k in ("code_eval_cost", "batch_overhead", "brute_eval_cost",
+              "pool_intercept"):
         if k in d:
             kw[k] = d[k]
     return CostModel(**kw)
 
 
 def calibrate(index, seed: int = 0, time_probe: bool = True) -> CostModel:
-    """Fit a ``CostModel`` from one cheap probe on ``index``.
+    """Fit a ``CostModel`` from a small probe sweep on ``index``.
 
-    The probe reuses PROBE_BATCH database rows (deterministically spread
-    over the corpus) as queries with their own attributes as targets, runs a
-    small capped traversal, and measures *traversal* candidate scorings per
-    pool slot — on a quantized index the probe routes over codes exactly as
-    serving will and ``unit_evals`` counts the code scorings only (the
-    probe's fp evals are the exact rerank stage, which ``graph_cost``
-    prices as its separate rerank term); the codec discount is applied at
-    prediction time.
+    The probes reuse PROBE_BATCH database rows (deterministically spread
+    over the corpus) as queries with their own attributes as targets and run
+    small capped traversals at each ``PROBE_POOLS`` operating point. Two
+    pool sizes fit the eval curve's slope *and* intercept — ``unit_evals``
+    (candidate scorings per pool slot) and ``pool_intercept`` (entry-pool
+    scoring and other pool-independent work a single-point fit would fold
+    into the slope, overcharging large pools). On a quantized index the
+    probes route over codes exactly as serving will and the fit counts the
+    code scorings only (the probes' fp evals are the exact rerank stage,
+    which ``graph_cost`` prices as its separate rerank term); the codec
+    discount is applied at prediction time.
 
-    With ``time_probe`` (default) it additionally times the brute scan and
-    the traversal (post-compile, best of two runs to damp scheduler jitter)
-    to measure the per-eval wall-cost ratio of dense scans vs gathered
-    traversal scoring (``brute_eval_cost``), so the predicted crossover
-    tracks measured latency rather than raw eval counts. The measured ratio
-    makes auto-planning hardware-honest but not run-to-run deterministic
-    near the crossover; deployments that need a frozen decision inject a
-    measured table (``Engine(cost_model_override=cost_model_from_table(...))``)
-    or pin ``SearchParams(backend=...)``.
+    With ``time_probe`` (default) it additionally times the brute scan at
+    the ``PROBE_N_FRACTIONS`` corpus prefixes and the traversal
+    (post-compile, best of two runs each to damp scheduler jitter): the
+    least-squares line through the scan timings separates the per-eval
+    slope — ``brute_eval_cost``, the wall-cost ratio of dense scans vs
+    gathered traversal scoring — from the fixed dispatch intercept, which
+    becomes a *measured* ``batch_overhead`` instead of the default
+    constant. The compaction policy of ``repro.mutable`` leans on exactly
+    these two terms to predict a delta segment's query-cost regression, so
+    they must be honest. Measured ratios make auto-planning
+    hardware-honest but not run-to-run deterministic near the crossover;
+    deployments that need a frozen decision inject a measured table
+    (``Engine(cost_model_override=cost_model_from_table(...))``) or pin
+    ``SearchParams(backend=...)``.
     """
     import time
 
@@ -215,39 +238,64 @@ def calibrate(index, seed: int = 0, time_probe: bool = True) -> CostModel:
     )
     qv = jnp.take(index.features, take, axis=0)
     qa = jnp.take(index.attrs, take, axis=0)
-    pool = min(PROBE_POOL, n)
-    cfg = RoutingConfig(
-        k=min(8, pool),
-        pool_size=pool,
-        pioneer_size=min(8, pool),
-        coarse_max_iters=8,
-        refine_max_iters=32,
-    )
+    b = int(qv.shape[0])
+    pools = sorted({min(p, n) for p in PROBE_POOLS})
 
-    def run_traversal():
+    def traversal_cfg(pool: int) -> RoutingConfig:
+        return RoutingConfig(
+            k=min(8, pool),
+            pool_size=pool,
+            pioneer_size=min(8, pool),
+            coarse_max_iters=8,
+            refine_max_iters=32,
+        )
+
+    def run_traversal(cfg: RoutingConfig):
         return routing_mod.search(
             index.features, index.attrs, index.graph, qv, qa,
             index.metric_cfg, cfg, seed=seed, quant=index.quant,
         )
 
-    res = run_traversal()
-    # unit_evals prices *traversal* scorings only — on a quantized index
-    # the probe's fp evals are the exact rerank stage, which graph_cost
-    # prices separately (counting them here would double-charge the rerank)
-    if index.quant is None:
-        per_query = res.mean_dist_evals
-    else:
-        per_query = res.mean_code_evals
-    wall_per_query = res.mean_dist_evals + res.mean_code_evals
+    # -- eval-count sweep: per-query scorings at each pool operating point.
+    # unit_evals/pool_intercept price *traversal* scorings only — on a
+    # quantized index the probes' fp evals are the exact rerank stage,
+    # which graph_cost prices separately (double-charging otherwise).
+    per_query: dict[int, float] = {}
+    wall_per_query: dict[int, float] = {}
+    for pool in pools:
+        res = run_traversal(traversal_cfg(pool))
+        per_query[pool] = float(
+            res.mean_dist_evals if index.quant is None else res.mean_code_evals
+        )
+        wall_per_query[pool] = float(res.mean_dist_evals + res.mean_code_evals)
+    p_hi = pools[-1]
+    if len(pools) >= 2:
+        p_lo = pools[0]
+        slope = (per_query[p_hi] - per_query[p_lo]) / (p_hi - p_lo)
+        intercept = per_query[p_lo] - slope * p_lo
+        if slope <= 0 or intercept < 0:
+            # a noisy/degenerate sweep (tiny corpus, saturated traversal)
+            # must not produce a decreasing or negative cost curve — fall
+            # back to the single-point slope-only fit
+            slope, intercept = per_query[p_hi] / p_hi, 0.0
+    else:  # corpus smaller than every probe pool: one operating point
+        slope, intercept = per_query[p_hi] / p_hi, 0.0
+
     brute_eval_cost = 1.0
+    overhead_kw = {}
     if time_probe:
-        def run_brute():
-            # l2 scan mirrors the brute oracle (baselines.brute_force_hybrid
-            # ranks by exact L2 under the equality mask)
+        cfg_hi = traversal_cfg(p_hi)
+
+        def run_brute(ni: int):
+            # l2 scan over the ni-row corpus prefix mirrors the brute
+            # oracle (baselines.brute_force_hybrid ranks by exact L2 under
+            # the equality mask); prefixes share the compiled kernel only
+            # per shape, so each size is compiled outside its clock below
             sv2 = auto_mod.brute_fused_sqdist(
-                qv, qa, index.features, index.attrs, MetricConfig(mode="l2")
+                qv, qa, index.features[:ni], index.attrs[:ni],
+                MetricConfig(mode="l2")
             )
-            return jax.lax.top_k(-sv2, cfg.k)
+            return jax.lax.top_k(-sv2, min(cfg_hi.k, ni))
 
         def best_of_two(fn) -> float:
             # min of two post-compile runs: the standard noise-robust
@@ -260,22 +308,38 @@ def calibrate(index, seed: int = 0, time_probe: bool = True) -> CostModel:
                 times.append(time.perf_counter() - t0)
             return min(times)
 
-        jax.block_until_ready(run_brute()[0])  # compile outside the clock
-        t_brute = best_of_two(lambda: run_brute()[0])
-        t_graph = best_of_two(lambda: run_traversal().ids)
-        per_brute_eval = t_brute / max(qv.shape[0] * n, 1)
-        per_graph_eval = t_graph / max(wall_per_query * qv.shape[0], 1.0)
-        if per_graph_eval > 0:
+        sizes = sorted({max(int(n * f), 1) for f in PROBE_N_FRACTIONS})
+        t_scan: dict[int, float] = {}
+        for ni in sizes:
+            jax.block_until_ready(run_brute(ni)[0])  # compile off the clock
+            t_scan[ni] = best_of_two(lambda ni=ni: run_brute(ni)[0])
+        t_graph = best_of_two(lambda: run_traversal(cfg_hi).ids)
+        per_graph_eval = t_graph / max(wall_per_query[p_hi] * b, 1.0)
+        if len(sizes) >= 2:
+            # least squares t(ni) = t0 + s·ni: s prices one scan row (per
+            # batch), t0 is the fixed dispatch cost the default
+            # batch_overhead merely guessed at
+            s, t0_fit = np.polyfit(sizes, [t_scan[ni] for ni in sizes], 1)
+            per_brute_eval = max(float(s), 0.0) / b
+            if per_graph_eval > 0 and t0_fit > 0:
+                overhead_kw["batch_overhead"] = float(
+                    np.clip(t0_fit / per_graph_eval, 1.0, 65536.0)
+                )
+        else:
+            per_brute_eval = t_scan[sizes[-1]] / max(b * sizes[-1], 1)
+        if per_graph_eval > 0 and per_brute_eval > 0:
             # clamp: one noisy probe must not wedge the planner into either
             # backend permanently
             brute_eval_cost = float(
                 np.clip(per_brute_eval / per_graph_eval, 0.05, 20.0)
             )
     return CostModel(
-        unit_evals=max(per_query / cfg.pool_size, 1e-3),
-        probe_pool=cfg.pool_size,
+        unit_evals=max(slope, 1e-3),
+        probe_pool=p_hi,
         probe_n=n,
         brute_eval_cost=brute_eval_cost,
+        pool_intercept=max(intercept, 0.0),
+        **overhead_kw,
     )
 
 

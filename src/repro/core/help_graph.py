@@ -329,6 +329,127 @@ def _reverse_insert(
 
 
 # ---------------------------------------------------------------------------
+# Incremental link/repair (streaming mutability — no full rebuild)
+# ---------------------------------------------------------------------------
+
+
+def link_nodes(
+    features: Array,
+    attrs: Array,
+    graph: Array,
+    node_ids: np.ndarray,  # (D,) rows to (re-)link into the adjacency
+    metric_cfg: MetricConfig,
+    cfg: HelpConfig,
+    banned_ids: Optional[np.ndarray] = None,  # dead rows: never linked to
+    seed: int = 0,
+) -> tuple[Array, int]:
+    """Insert/re-link ``node_ids`` into an existing HELP adjacency without a
+    full rebuild — the merge path of the LSM delta segment.
+
+    Per node: (1) a routed candidate search over the *current* graph finds
+    its neighborhood under the AUTO metric (the same traversal serving
+    uses, so link quality tracks search quality); (2) an all-pairs scan
+    over the linked set supplies new↔new candidates the frozen graph cannot
+    reach yet; (3) the node's row becomes the Γ best candidates; (4)
+    mutual-neighbor repair offers every new edge's reverse to its target,
+    which keeps new nodes *reachable* (a row with out-edges only would be
+    invisible to traversal). Rows in ``banned_ids`` (tombstoned) are never
+    linked to. Returns (new adjacency, number of repaired existing rows).
+    """
+    from repro.core import routing as routing_mod
+    from repro.core.routing import RoutingConfig
+
+    node_ids = np.asarray(node_ids, np.int64)
+    n, gamma = int(features.shape[0]), int(graph.shape[1])
+    d = int(node_ids.shape[0])
+    if d == 0 or gamma == 0:
+        return graph, 0
+    banned = (
+        np.zeros(0, np.int64) if banned_ids is None
+        else np.unique(np.asarray(banned_ids, np.int64))
+    )
+
+    qv = jnp.take(features, jnp.asarray(node_ids, jnp.int32), axis=0)
+    qa = jnp.take(attrs, jnp.asarray(node_ids, jnp.int32), axis=0)
+
+    # (1) routed candidate search over the current graph (soft AUTO metric,
+    # the node's own attributes as targets — exactly how build scores edges)
+    pool = int(min(max(4 * gamma, 64), n))
+    rcfg = RoutingConfig(
+        k=pool, pool_size=pool, pioneer_size=min(8, pool),
+        coarse_max_iters=16, refine_max_iters=64,
+    )
+    res = routing_mod.search(
+        features, attrs, graph, qv, qa, metric_cfg, rcfg, seed=seed
+    )
+    cand_ids = np.asarray(res.ids)  # (D, pool)
+    cand_d = np.asarray(res.sqdists)
+
+    # (1b) one-hop expansion — the candidates' own neighbors, NN-descent's
+    # core move: the routed pool localizes the neighborhood, the expansion
+    # recovers edges the capped traversal cut off
+    node_dev = jnp.asarray(node_ids, jnp.int32)
+    graph_np0 = np.asarray(graph)
+    hop_ids = graph_np0[np.maximum(cand_ids, 0)].reshape(d, -1)  # (D, pool·Γ)
+    hop_ids = np.where(cand_ids.repeat(gamma, axis=1) < 0, INVALID, hop_ids)
+    hop_d = np.asarray(
+        _score_candidates(features, attrs, node_dev, jnp.asarray(hop_ids),
+                          metric_cfg)
+    )
+
+    # (2) new↔new candidates: the frozen graph has no edges into the linked
+    # set yet, so a routed search cannot discover co-inserted neighbors
+    d_nn = np.asarray(auto_mod.brute_fused_sqdist(
+        qv, qa, qv, qa, metric_cfg
+    ))  # (D, D)
+    nn_ids = np.broadcast_to(node_ids[None, :], (d, d))
+
+    all_ids = np.concatenate([cand_ids, hop_ids, nn_ids], axis=1)
+    all_d = np.concatenate([cand_d, hop_d, d_nn], axis=1).astype(np.float32)
+    bad = (all_ids == node_ids[:, None]) | (all_ids < 0)
+    if banned.size:
+        bad |= np.isin(all_ids, banned)
+    all_d = np.where(bad, INF, all_d)
+    all_ids = np.where(bad, INVALID, all_ids).astype(np.int32)
+
+    # (3) each linked node's row = Γ best candidates (deduped, ascending)
+    new_rows, new_d, _ = gops.merge_pools(
+        jnp.full((d, gamma), INVALID), jnp.full((d, gamma), INF),
+        jnp.asarray(all_ids), jnp.asarray(all_d), gamma,
+    )
+    new_rows_np = np.asarray(new_rows)
+    new_d_np = np.asarray(new_d)
+    graph_np = np.asarray(graph).copy()
+    graph_np[node_ids] = new_rows_np
+
+    # (4) mutual-neighbor repair: offer v to each existing neighbor u — the
+    # reverse edges are what make freshly inserted rows reachable
+    linked = set(node_ids.tolist())
+    offers: dict[int, list[int]] = {}
+    for i, v in enumerate(node_ids.tolist()):
+        for u in new_rows_np[i].tolist():
+            if u >= 0 and u not in linked:
+                offers.setdefault(u, []).append(v)
+    if not offers:
+        return jnp.asarray(graph_np), 0
+    u_ids = np.fromiter(offers, np.int32, len(offers))
+    width = max(len(vs) for vs in offers.values())
+    off = np.full((len(offers), width), INVALID, np.int32)
+    for r, vs in enumerate(offers.values()):
+        off[r, : len(vs)] = vs
+    u_dev = jnp.asarray(u_ids)
+    # existing rows carry no stored distances — rescore them once, merge the
+    # offered reverse edges in, and write the repaired rows back
+    cur_d = _score_candidates(features, attrs, u_dev, graph_np[u_ids], metric_cfg)
+    off_d = _score_candidates(features, attrs, u_dev, jnp.asarray(off), metric_cfg)
+    rep_ids, _, _ = gops.merge_pools(
+        jnp.asarray(graph_np[u_ids]), cur_d, jnp.asarray(off), off_d, gamma
+    )
+    graph_np[u_ids] = np.asarray(rep_ids)
+    return jnp.asarray(graph_np), len(offers)
+
+
+# ---------------------------------------------------------------------------
 # Public build entry point (Alg. 1)
 # ---------------------------------------------------------------------------
 

@@ -22,6 +22,8 @@ from repro.core.auto import DatasetStats, MetricConfig
 from repro.core.help_graph import BuildReport, HelpConfig
 from repro.core.routing import RoutingConfig, SearchResult
 from repro.quant import QuantConfig, QuantizedVectors
+from repro.quant.pq import pq_encode
+from repro.quant.sq import sq8_encode
 
 Array = jax.Array
 
@@ -109,6 +111,56 @@ class StableIndex:
             mask=None if mask is None else jnp.asarray(mask),
             seed=seed,
             quant=self.quant,
+        )
+
+    # -- streaming mutability (repro.mutable) ---------------------------------
+
+    def apply_rows(self, ids, features, attrs) -> "StableIndex":
+        """Scatter/append logical rows and return a new index (arrays are
+        immutable — the old index keeps serving concurrent readers).
+
+        Rows with ``id < N`` are overwritten in place; ids beyond the current
+        N grow the corpus to ``max(id) + 1`` (gap rows, if any, get zero
+        vectors — the caller tombstones them). New/updated graph rows are NOT
+        linked here: the merge path calls ``help_graph.link_nodes`` next, so
+        appended rows start with all-INVALID adjacency. Codes are extended
+        with the *frozen* codec state (SQ8 params / PQ codebook trained at
+        build) — codebooks are never retrained online.
+        """
+        ids = np.asarray(ids, np.int64)
+        if ids.size == 0:
+            return self
+        feats_new = jnp.asarray(features, jnp.float32)
+        attrs_new = jnp.asarray(attrs, jnp.int32)
+        n_old = int(self.features.shape[0])
+        n_new = max(n_old, int(ids.max()) + 1)
+        idx = jnp.asarray(ids, jnp.int32)
+
+        def grown(a, rows):
+            pad = [(0, n_new - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+            return jnp.pad(a, pad).at[idx].set(rows)
+
+        feats = grown(self.features, feats_new)
+        attrs_arr = grown(self.attrs, attrs_new)
+        gamma = int(self.graph.shape[1])
+        graph = jnp.pad(
+            self.graph, ((0, n_new - n_old), (0, 0)),
+            constant_values=np.int32(help_mod.INVALID),
+        ) if gamma else jnp.zeros((n_new, 0), jnp.int32)
+        # overwritten rows keep their old out-edges (a sane neighborhood for
+        # the new vector until link_nodes refreshes them); appended rows
+        # start all-INVALID until the merge links them
+        quant = self.quant
+        if quant is not None:
+            if quant.cfg.mode == "sq8":
+                rows, _ = sq8_encode(feats_new, quant.sq_params)
+            else:
+                rows = pq_encode(feats_new, quant.codebook)
+            pad = [(0, n_new - n_old)] + [(0, 0)] * (quant.codes.ndim - 1)
+            codes = jnp.pad(quant.codes, pad).at[idx].set(rows)
+            quant = dataclasses.replace(quant, codes=codes)
+        return dataclasses.replace(
+            self, features=feats, attrs=attrs_arr, graph=graph, quant=quant
         )
 
     # -- persistence ----------------------------------------------------------

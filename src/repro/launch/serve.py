@@ -10,11 +10,20 @@ executables with zero re-traces. One engine is built (or loaded from
 from ``ServerStats`` (end-to-end p50/p95/p99, batch-fill ratio, plan-cache
 hit rate, per-tenant QPS), not ad-hoc stopwatches.
 
+With ``--writes`` the launcher serves a *mutable* engine: the last W rows
+are held out of the build and streamed back as ``Upsert`` requests (plus a
+few ``Delete``\\ s) interleaved with the queries, so the run exercises the
+LSM write path — delta scans federated into every query, per-tenant write
+admission, and background merges that never block serving — and reports
+the write/merge/delta metrics alongside the read-side ones.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --n 20000 --requests 512
   PYTHONPATH=src python -m repro.launch.serve --n 20000 --quant pq \\
       --tenants 8 --window-ms 4 --buckets 1,8,32
   PYTHONPATH=src python -m repro.launch.serve --index-dir /tmp/idx --rate 200
+  PYTHONPATH=src python -m repro.launch.serve --n 20000 --writes 2000 \\
+      --write-rate 500 --max-delta-rows 1024
 """
 from __future__ import annotations
 
@@ -30,9 +39,11 @@ def main() -> None:
     from repro.core.baselines import brute_force_hybrid, recall_at_k
     from repro.core.help_graph import HelpConfig
     from repro.data.synthetic import make_hybrid_dataset
+    from repro.mutable import CompactionPolicy, MutableEngine
     from repro.quant import QUANT_MODES, QuantConfig
     from repro.serve import (
-        Request, TenantPolicy, TenantRegistry, ThreadedServer, serve_loop,
+        Delete, Request, TenantPolicy, TenantRegistry, ThreadedServer,
+        Upsert, serve_loop,
     )
 
     ap = argparse.ArgumentParser()
@@ -61,8 +72,18 @@ def main() -> None:
     ap.add_argument("--rerank", type=int, default=0,
                     help="pool entries reranked exactly (0 = whole pool)")
     ap.add_argument("--pq-subspaces", type=int, default=32)
+    ap.add_argument("--writes", type=int, default=0,
+                    help="hold the last W rows out of the build and stream "
+                         "them back as Upserts (plus W//4 Deletes) "
+                         "interleaved with the queries")
+    ap.add_argument("--write-rate", type=float, default=0.0,
+                    help="per-tenant admitted writes/second; 0 = unlimited")
+    ap.add_argument("--max-delta-rows", type=int, default=1024,
+                    help="compaction trigger: merge when the delta holds "
+                         "this many rows")
     args = ap.parse_args()
     buckets = tuple(int(b) for b in args.buckets.split(","))
+    n_writes = max(0, min(args.writes, args.n // 2))
 
     ds = make_hybrid_dataset(
         n=args.n, n_queries=args.requests, profile=args.profile,
@@ -70,15 +91,21 @@ def main() -> None:
         attr_cluster_corr=0.6, seed=0,
     )
     if args.index_dir:
+        if n_writes:
+            print("--writes needs a fresh build (holdout rows); ignoring")
+            n_writes = 0
         print(f"loading engine from {args.index_dir} "
               "(one engine reused for the whole stream)")
         eng = Engine.load(args.index_dir)
     else:
-        print(f"building index over {args.n} nodes ({args.profile} profile, "
-              f"quant={args.quant})")
+        n_build = args.n - n_writes
+        print(f"building index over {n_build} nodes ({args.profile} profile, "
+              f"quant={args.quant}"
+              + (f", {n_writes} rows held out for the write stream)"
+                 if n_writes else ")"))
         t0 = time.perf_counter()
         eng = Engine.build(
-            ds.features, ds.attrs,
+            ds.features[:n_build], ds.attrs[:n_build],
             HelpConfig(gamma=24, gamma_new=6, max_rounds=8),
             quant_cfg=QuantConfig(mode=args.quant,
                                   pq_subspaces=args.pq_subspaces),
@@ -103,33 +130,69 @@ def main() -> None:
         pioneer_size=max(4, args.pool // 8), rerank_size=args.rerank,
     )
     rate = args.rate if args.rate > 0 else math.inf
+    write_rate = args.write_rate if args.write_rate > 0 else math.inf
     reg = TenantRegistry()
     tenants = [f"tenant-{t}" for t in range(max(args.tenants, 1))]
     for t in tenants:
-        reg.register(t, TenantPolicy(params=params, rate=rate,
-                                     burst=args.burst))
-    reqs = [
+        reg.register(t, TenantPolicy(
+            params=params, rate=rate, burst=args.burst,
+            write_rate=write_rate,
+            write_burst=max(args.burst, 1.0),
+        ))
+    read_reqs = [
         Request(tenants[i % len(tenants)],
                 Query(ds.query_features[i],
-                      [MATCH(int(v)) for v in ds.query_attrs[i]]))
+                      [MATCH(int(v)) for v in ds.query_attrs[i]]),
+                request_id=i)
         for i in range(args.requests)
     ]
+    reqs = list(read_reqs)
+
+    deleted: list = []
+    if n_writes:
+        eng = MutableEngine(eng, CompactionPolicy(
+            max_delta_rows=args.max_delta_rows))
+        n_build = args.n - n_writes
+        rng = np.random.default_rng(7)
+        deleted = sorted(
+            int(i) for i in
+            rng.choice(n_build, size=min(n_writes // 4, n_build), replace=False)
+        )
+        writes = [
+            Upsert(tenants[i % len(tenants)], ds.features[n_build + i],
+                   ds.attrs[n_build + i], id=n_build + i)
+            for i in range(n_writes)
+        ] + [Delete(tenants[i % len(tenants)], d)
+             for i, d in enumerate(deleted)]
+        # interleave writes uniformly through the read stream
+        stride = max(len(reqs) // max(len(writes), 1), 1)
+        mixed: list = []
+        wi = 0
+        for i, r in enumerate(reqs):
+            mixed.append(r)
+            while wi * stride <= i and wi < len(writes):
+                mixed.append(writes[wi])
+                wi += 1
+        mixed.extend(writes[wi:])
+        reqs = mixed
 
     # warmup: compile the executables the stream will replay (deterministic
-    # driver, same buckets/params) so the timed run measures serving, not jit
-    warm = min(len(reqs), max(buckets))
-    serve_loop(eng, [(0.0, r) for r in reqs[:warm]],
+    # driver, same buckets/params) so the timed run measures serving, not
+    # jit. Reads only — warming must not mutate the engine.
+    warm = min(len(read_reqs), max(buckets))
+    serve_loop(eng, [(0.0, r) for r in read_reqs[:warm]],
                TenantRegistry(default_policy=TenantPolicy(params=params)),
                window_ms=args.window_ms, buckets=buckets)
 
-    print(f"serving {len(reqs)} requests from {len(tenants)} tenants "
-          f"(window={args.window_ms}ms, buckets={buckets})")
+    print(f"serving {len(reqs)} requests ({len(read_reqs)} queries, "
+          f"{len(reqs) - len(read_reqs)} writes) from {len(tenants)} "
+          f"tenants (window={args.window_ms}ms, buckets={buckets})")
     with ThreadedServer(eng, reg, window_ms=args.window_ms,
                         buckets=buckets) as srv:
         futs = [srv.submit(r) for r in reqs]
         results = [f.result() for f in futs]
 
-    done = [r for r in results if r.ok]
+    done = [r for r in results if r.ok and hasattr(r, "ids")]
     snap = srv.stats.snapshot()
     lat = snap["latency_ms"]
     print(f"[served] {snap['completed']}/{snap['submitted']} completed, "
@@ -148,16 +211,34 @@ def main() -> None:
     for t, c in snap["per_tenant"].items():
         print(f"    {t}: {c['completed']}/{c['submitted']} served "
               f"({c['qps']:.0f} qps, {c['rejected']} shed)")
+    if "writes" in snap:
+        w = snap["writes"]
+        print(f"  writes: {w['upserts']} upserts, {w['deletes']} deletes, "
+              f"{w['shed']} shed; {w['merges']} merges "
+              f"(p50={w['merge_ms_p50']:.0f}ms p95={w['merge_ms_p95']:.0f}ms)")
+    if "delta" in snap:
+        d = snap["delta"]
+        print(f"  delta: {d['delta_alive']} alive rows / "
+              f"{d['tombstones']} tombstones "
+              f"(logical n={d['logical_n']}, "
+              f"{d['delta_result_fraction']:.1%} of served ids from delta)")
 
     if done:
         take = [r.request_id for r in done]
         ids = np.stack([r.ids for r in done])
+        # the oracle scans the post-write corpus: held-out rows were
+        # upserted back with their original values, deleted ids are pushed
+        # out of range so they can never rank
+        feats = ds.features
+        if deleted:
+            feats = feats.copy()
+            feats[np.asarray(deleted)] = 1e6
         truth = brute_force_hybrid(
-            ds.features, ds.attrs, ds.query_features[take],
+            feats, ds.attrs, ds.query_features[take],
             ds.query_attrs[take], args.k,
         )
         print(f"  Recall@{args.k}={recall_at_k(ids, truth.ids, args.k):.3f} "
-              f"(vs exact oracle, completed requests)")
+              f"(vs exact post-write oracle, completed requests)")
 
 
 if __name__ == "__main__":

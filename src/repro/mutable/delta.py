@@ -1,0 +1,189 @@
+"""Append-only delta segment + tombstones (the LSM memtable of the index).
+
+``DeltaSegment`` holds every row written since the last merge in
+capacity-doubling host arrays: an upsert *appends* a new row and marks any
+previous row for the same logical id dead (rows are never edited in place,
+so a concurrent reader holding the old row view stays consistent), a delete
+just flips the alive bit. At query time the segment is served by an exact
+fused scan — the brute-force oracle semantics the cost model already knows
+are cheap at small N — and its top-k is federated with the frozen main
+index by ``repro.mutable.engine``.
+
+``Tombstones`` is the companion mask over the *main* index: deleting or
+overwriting a frozen row cannot touch the immutable arrays, so the id is
+recorded here and filtered out of main-side results host-side. Tombstones
+persist across merges for deleted ids (the merged index keeps a zombie row
+rather than renumbering — logical ids are stable forever).
+
+Capacity doubles (never shrinks) so the jitted scan sees log-many shapes;
+dead/padding columns are masked to +inf before the top-k.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import auto as auto_mod
+from repro.core.auto import MetricConfig
+from repro.core.graph_ops import INF, INVALID
+from repro.api.query import QueryBatch
+
+__all__ = ["DeltaSegment"]
+
+_MIN_CAPACITY = 256
+
+
+class DeltaSegment:
+    """Mutable rows awaiting merge, scanned exactly at query time.
+
+    Host arrays (capacity ``C`` ≥ ``size``):
+      features (C, M) f32 · attrs (C, L) i32 · ids (C,) i64 · alive (C,) bool
+
+    ``row_of`` maps each logical id to its *latest* row (alive or dead —
+    a dead latest row records a delete/overwrite whose last values the
+    merge may still need for zombie materialization).
+    """
+
+    def __init__(self, feat_dim: int, attr_dim: int):
+        self.feat_dim = int(feat_dim)
+        self.attr_dim = int(attr_dim)
+        self._cap = 0
+        self.size = 0
+        self.features = np.zeros((0, self.feat_dim), np.float32)
+        self.attrs = np.zeros((0, self.attr_dim), np.int32)
+        self.ids = np.zeros((0,), np.int64)
+        self.alive = np.zeros((0,), bool)
+        self.row_of: dict = {}
+
+    # -- writes ---------------------------------------------------------------
+
+    def _grow(self, need: int) -> None:
+        if need <= self._cap:
+            return
+        cap = max(_MIN_CAPACITY, self._cap or _MIN_CAPACITY)
+        while cap < need:
+            cap *= 2
+
+        def grown(a, fill=0):
+            out = np.full((cap,) + a.shape[1:], fill, a.dtype)
+            out[: a.shape[0]] = a
+            return out
+
+        self.features = grown(self.features)
+        self.attrs = grown(self.attrs)
+        self.ids = grown(self.ids, fill=-1)
+        self.alive = grown(self.alive, fill=False)
+        self._cap = cap
+
+    def append(self, logical_id: int, vector, attrs) -> int:
+        """Record an upsert: the new row becomes the id's latest (and only
+        alive) delta row. Returns the row index."""
+        self._grow(self.size + 1)
+        prev = self.row_of.get(logical_id)
+        if prev is not None:
+            self.alive[prev] = False
+        row = self.size
+        self.features[row] = np.asarray(vector, np.float32).reshape(-1)
+        self.attrs[row] = np.asarray(attrs, np.int32).reshape(-1)
+        self.ids[row] = logical_id
+        self.alive[row] = True
+        self.row_of[logical_id] = row
+        self.size += 1
+        return row
+
+    def kill(self, logical_id: int) -> bool:
+        """Mark the id's delta row (if any) dead; True when one existed."""
+        row = self.row_of.get(logical_id)
+        if row is None or not self.alive[row]:
+            return False
+        self.alive[row] = False
+        return True
+
+    # -- views ----------------------------------------------------------------
+
+    @property
+    def n_alive(self) -> int:
+        return int(self.alive[: self.size].sum())
+
+    @property
+    def n_rows(self) -> int:
+        return self.size
+
+    def latest(self) -> dict:
+        """logical id → (vector, attrs, alive) of its latest delta row."""
+        return {
+            int(i): (
+                self.features[r].copy(), self.attrs[r].copy(),
+                bool(self.alive[r]),
+            )
+            for i, r in self.row_of.items()
+        }
+
+    # -- exact scan ------------------------------------------------------------
+
+    def topk(
+        self,
+        queries: QueryBatch,
+        k: int,
+        metric_cfg: MetricConfig,
+        oracle: bool,
+        enforce: bool = False,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(B, k) logical ids + squared fused distances of the alive rows.
+
+        ``oracle=True`` mirrors a brute-planned main side: plain L2 ranking
+        with every predicate hard-filtered. ``oracle=False`` mirrors a
+        traversal plan: soft fused scoring under ``metric_cfg`` with the
+        query mask, plus exact ONE_OF membership always (the engine-level
+        guarantee every backend upholds) and full hard predicates under
+        ``enforce``. Scores are therefore always comparable with the main
+        side's, so the federated merge is a plain sort. INVALID-padded
+        when fewer than k rows qualify.
+        """
+        b = queries.batch_size
+        out_ids = np.full((b, k), INVALID, np.int32)
+        out_sq = np.full((b, k), INF, np.float32)
+        if self.size == 0:
+            return out_ids, out_sq
+        cap = self.features.shape[0]
+        qv = jnp.asarray(queries.vectors, jnp.float32)
+        if oracle:
+            d = auto_mod.brute_fused_sqdist(
+                qv, jnp.asarray(queries.attrs, jnp.int32),
+                jnp.asarray(self.features), jnp.asarray(self.attrs),
+                MetricConfig(mode="l2"),
+            )
+            ok = queries.admissible(self.attrs)  # (B, C) exact predicates
+        else:
+            d = auto_mod.brute_fused_sqdist(
+                qv, jnp.asarray(queries.targets, jnp.int32),
+                jnp.asarray(self.features), jnp.asarray(self.attrs),
+                metric_cfg,
+                mask=(None if queries.mask is None
+                      else jnp.asarray(queries.mask)),
+            )
+            if enforce:
+                ok = queries.admissible(self.attrs)
+            elif queries.has_one_of:  # exact membership on every backend
+                taken = np.broadcast_to(
+                    self.attrs[None], (b, cap, self.attr_dim)
+                )
+                ok = queries.admissible_rows(taken, one_of_only=True)
+            else:
+                ok = np.ones((b, cap), bool)
+        col_ok = np.zeros(cap, bool)
+        col_ok[: self.size] = self.alive[: self.size]
+        d = np.where(ok & col_ok[None, :], np.asarray(d), INF)
+        kk = min(k, cap)
+        part = np.argpartition(d, kk - 1, axis=1)[:, :kk]
+        part_d = np.take_along_axis(d, part, axis=1)
+        order = np.argsort(part_d, axis=1, kind="stable")
+        rows = np.take_along_axis(part, order, axis=1)
+        sq = np.take_along_axis(part_d, order, axis=1).astype(np.float32)
+        ids = self.ids[rows].astype(np.int32)
+        ids = np.where(sq < INF / 2, ids, INVALID)
+        out_ids[:, :kk] = ids
+        out_sq[:, :kk] = np.where(ids >= 0, sq, INF)
+        return out_ids, out_sq

@@ -10,6 +10,10 @@ built for:
 
 * ``Request`` / ``Completed`` / ``Rejected`` — typed request/response
   surface; load shedding is a result, not an exception.
+* ``Upsert`` / ``Delete`` / ``WriteAck`` — the write path (engine must be
+  a ``repro.mutable.MutableEngine``): separate per-tenant write token
+  buckets, writes applied before their ack resolves (read-your-writes),
+  background delta→main merges that never block serving.
 * ``TenantRegistry`` / ``TenantPolicy`` — per-tenant default
   ``SearchParams``, k/pool caps, deterministic token-bucket admission.
 * ``Microbatcher`` / ``RequestQueue`` — coalesce admitted requests by
@@ -40,13 +44,16 @@ Typical use::
 """
 from repro.serve.batcher import DEFAULT_BUCKETS, Microbatcher, RequestQueue
 from repro.serve.loop import ThreadedServer, serve_loop
-from repro.serve.request import Completed, Rejected, Request, Response
+from repro.serve.request import (
+    Completed, Delete, Rejected, Request, Response, Upsert, WriteAck,
+)
 from repro.serve.stats import ServerStats
 from repro.serve.tenants import TenantPolicy, TenantRegistry, TokenBucket
 
 __all__ = [
     "Completed",
     "DEFAULT_BUCKETS",
+    "Delete",
     "Microbatcher",
     "Rejected",
     "Request",
@@ -57,5 +64,7 @@ __all__ = [
     "TenantRegistry",
     "ThreadedServer",
     "TokenBucket",
+    "Upsert",
+    "WriteAck",
     "serve_loop",
 ]

@@ -24,13 +24,35 @@ from typing import Iterable, List, Optional, Tuple, Union
 from repro.api import Engine
 from repro.serve import request as request_mod
 from repro.serve.batcher import DEFAULT_BUCKETS, Microbatcher
-from repro.serve.request import Rejected, Request, Response
+from repro.serve.request import (
+    Delete, Rejected, Request, Response, Upsert, WriteAck,
+)
 from repro.serve.stats import ServerStats
 from repro.serve.tenants import TenantPolicy, TenantRegistry
 
 __all__ = ["ThreadedServer", "serve_loop"]
 
-TraceItem = Union[Request, Tuple[float, Request]]
+Submittable = Union[Request, Upsert, Delete]
+TraceItem = Union[Submittable, Tuple[float, Submittable]]
+
+_MERGE = object()  # inbox tag: a prepared merge ready for its fast apply
+
+
+def _apply_write(engine, write) -> WriteAck:
+    """Apply one admitted write to a mutable engine and build its ack.
+    The caller has already verified the engine is write-capable."""
+    if isinstance(write, Upsert):
+        wid = engine.upsert(write.vector, write.attrs, id=write.id)
+        applied = True
+        op = "upsert"
+    else:
+        wid = int(write.id)
+        applied = engine.delete(wid)
+        op = "delete"
+    return WriteAck(
+        request_id=write.request_id, tenant=write.tenant, id=int(wid),
+        op=op, applied=applied, delta_rows=engine.delta.n_rows,
+    )
 
 
 def serve_loop(
@@ -53,6 +75,14 @@ def serve_loop(
     refill from the same clock, so the whole run is reproducible. Batch
     *service* time is still measured wall time (it feeds latency stats, not
     decisions).
+
+    Trace items may also be ``Upsert``/``Delete`` writes (engine must be a
+    ``MutableEngine``): each is admitted against the tenant's write bucket,
+    applied *inline* at its arrival time — so every later query in the
+    trace reads the post-write state — and acked with a ``WriteAck``.
+    When the engine's compaction policy fires, the merge runs synchronously
+    at that trace position (deterministic; the threaded front-end instead
+    overlaps the expensive prepare with serving).
 
     Returns one response per submitted request, in submission order, plus
     the ``ServerStats`` for the run.
@@ -82,6 +112,30 @@ def serve_loop(
         next_id = max(next_id, req.request_id) + 1
         idx = len(out)
         out.append(None)
+        if isinstance(req, (Upsert, Delete)):
+            # write path: admit → apply inline (read-your-writes: every
+            # later trace item queries the post-write state) → merge when
+            # the compaction policy fires. The synchronous driver merges
+            # in-line; only the threaded front-end overlaps the prepare.
+            if not hasattr(engine, "upsert"):
+                reason = request_mod.REJECT_IMMUTABLE
+            else:
+                reason = registry.admit_write(req, now)
+            if reason is not None:
+                stats.record_write_reject(req.tenant, reason)
+                out[idx] = Rejected(
+                    request_id=req.request_id, tenant=req.tenant,
+                    reason=reason,
+                )
+                continue
+            ack = _apply_write(engine, req)
+            stats.record_write(req.tenant, ack.op)
+            out[idx] = ack
+            if engine.should_merge():
+                merged = engine.merge()
+                if merged is not None:
+                    stats.record_merge(merged["wall_ms"])
+            continue
         stats.record_submit(req.tenant)
         if req.request_id in slot:  # collides with an in-flight request
             reason: Optional[str] = request_mod.REJECT_DUPLICATE
@@ -113,7 +167,16 @@ class ThreadedServer:
     (rejections resolve the returned ``Future`` immediately — backpressure
     is instant); admitted requests are handed to one worker thread that
     owns the ``Microbatcher`` and flushes groups on window expiry or full
-    buckets. Use as a context manager::
+    buckets.
+
+    Writes (``Upsert``/``Delete``) are admitted against the tenant's write
+    bucket and *applied synchronously* on the caller's thread — the
+    returned Future is already resolved, so read-your-writes holds for any
+    request submitted afterwards. Merging never blocks serving: when the
+    compaction policy fires, a dedicated thread runs the expensive
+    ``merge_prepare`` off-lock while queries keep flowing, then posts the
+    prepared index to the worker, which performs the fast pointer-swap
+    ``merge_apply`` between batches. Use as a context manager::
 
         with ThreadedServer(engine, registry, window_ms=2.0) as srv:
             futs = [srv.submit(r) for r in reqs]
@@ -133,6 +196,7 @@ class ThreadedServer:
         self.registry = registry or TenantRegistry(
             default_policy=TenantPolicy()
         )
+        self._engine = engine
         self.stats = ServerStats(engine)
         self._mb = Microbatcher(
             engine, self.stats, window_s=window_ms * 1e-3, buckets=buckets
@@ -143,6 +207,8 @@ class ThreadedServer:
         self._lock = threading.Lock()  # admission + id assignment
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        self._merge_thread: Optional[threading.Thread] = None
+        self._merge_inflight = False
         self._t0 = time.monotonic()
         self._next_id = 0
 
@@ -161,13 +227,22 @@ class ThreadedServer:
         no Future is ever stranded."""
         if self._thread is not None:
             self._stop.set()
+            # in-flight merge first: its prepared result lands in the inbox
+            # and the worker applies it before its final emptiness check
+            if self._merge_thread is not None:
+                self._merge_thread.join()
+                self._merge_thread = None
             self._thread.join()
             self._thread = None
         while True:
             try:
-                req, _ = self._inbox.get_nowait()
+                item = self._inbox.get_nowait()
             except queue_mod.Empty:
                 break
+            if item[0] is _MERGE:  # defensive: worker normally applies it
+                self._finish_merge(item[1])
+                continue
+            req, _ = item
             with self._lock:
                 fut = self._futures.pop(req.request_id, None)
             if fut is not None and not fut.done():
@@ -191,9 +266,12 @@ class ThreadedServer:
     def _now(self) -> float:
         return time.monotonic() - self._t0
 
-    def submit(self, req: Request) -> "Future[Response]":
+    def submit(self, req: Submittable) -> "Future[Response]":
         """Admit (or shed) on the caller's thread; returns a Future that
-        resolves to this request's typed response."""
+        resolves to this request's typed response. Writes resolve before
+        returning (they are applied synchronously)."""
+        if isinstance(req, (Upsert, Delete)):
+            return self._submit_write(req)
         fut: "Future[Response]" = Future()
         with self._lock:
             if req.request_id is None:
@@ -221,6 +299,77 @@ class ThreadedServer:
         self._inbox.put((req, params))
         return fut
 
+    def _submit_write(self, write: Union[Upsert, Delete]) -> "Future[Response]":
+        """Admit + apply one write on the caller's thread. By the time the
+        (already-resolved) Future returns, the write is visible to every
+        subsequently submitted query — read-your-writes."""
+        fut: "Future[Response]" = Future()
+        with self._lock:
+            if write.request_id is None:
+                write = dataclasses.replace(write, request_id=self._next_id)
+            self._next_id = max(self._next_id, write.request_id) + 1
+            if self._stop.is_set():
+                reason: Optional[str] = request_mod.REJECT_STOPPED
+            elif not hasattr(self._engine, "upsert"):
+                reason = request_mod.REJECT_IMMUTABLE
+            else:
+                reason = self.registry.admit_write(write, self._now())
+            if reason is not None:
+                self.stats.record_write_reject(write.tenant, reason)
+                fut.set_result(Rejected(
+                    request_id=write.request_id, tenant=write.tenant,
+                    reason=reason,
+                ))
+                return fut
+            ack = _apply_write(self._engine, write)
+            self.stats.record_write(write.tenant, ack.op)
+            fut.set_result(ack)
+        self._maybe_schedule_merge()
+        return fut
+
+    # -- background merge ------------------------------------------------------
+
+    def _maybe_schedule_merge(self) -> None:
+        """Fire the compaction policy's decision: at most one merge in
+        flight, prepared off the serving path on its own thread."""
+        eng = self._engine
+        if not hasattr(eng, "should_merge"):
+            return
+        with self._lock:
+            if (self._merge_inflight or self._stop.is_set()
+                    or not eng.should_merge()):
+                return
+            self._merge_inflight = True
+            self._merge_thread = threading.Thread(
+                target=self._merge_prepare_worker, daemon=True
+            )
+            self._merge_thread.start()
+
+    def _merge_prepare_worker(self) -> None:
+        from repro.mutable import merge as merge_mod
+
+        try:
+            prepared = merge_mod.merge_prepare(self._engine)
+        except BaseException:
+            with self._lock:
+                self._merge_inflight = False
+            raise
+        if prepared is None:
+            with self._lock:
+                self._merge_inflight = False
+            return
+        self._inbox.put((_MERGE, prepared))  # worker applies between batches
+
+    def _finish_merge(self, prepared) -> None:
+        from repro.mutable import merge as merge_mod
+
+        merged = merge_mod.merge_apply(self._engine, prepared)
+        wall_ms = prepared.prepare_ms + merged["apply_ms"]
+        self._engine.merge_ms.append(wall_ms)
+        self.stats.record_merge(wall_ms)
+        with self._lock:
+            self._merge_inflight = False
+
     # -- worker ---------------------------------------------------------------
 
     def _resolve(self, completions) -> None:
@@ -239,8 +388,14 @@ class ThreadedServer:
                     min(deadline - self._now(), window), 1e-4
                 )
                 try:
-                    req, params = self._inbox.get(timeout=timeout)
-                    self._resolve(self._mb.enqueue(req, params, self._now()))
+                    item = self._inbox.get(timeout=timeout)
+                    if item[0] is _MERGE:  # fast swap between batches
+                        self._finish_merge(item[1])
+                    else:
+                        req, params = item
+                        self._resolve(
+                            self._mb.enqueue(req, params, self._now())
+                        )
                 except queue_mod.Empty:
                     pass
                 self._resolve(self._mb.flush_due(self._now()))

@@ -10,6 +10,12 @@ answers every submitted request with exactly one typed response:
   violated, unknown tenant). Rejection is a result, not an exception: under
   overload the serving loop keeps draining at its provisioned rate and the
   caller sees exactly which requests were shed and why.
+
+Writes are requests too: ``Upsert`` and ``Delete`` flow through the same
+submission surface, pass a *separate* per-tenant write token bucket, and
+are answered with a ``WriteAck`` (or ``Rejected``). A write is applied
+before its ack resolves, so read-your-writes holds: any query submitted
+after observing the ack sees the write.
 """
 from __future__ import annotations
 
@@ -20,7 +26,10 @@ import numpy as np
 
 from repro.api import Query, SearchParams
 
-__all__ = ["Completed", "Rejected", "Request", "Response"]
+__all__ = [
+    "Completed", "Delete", "Rejected", "Request", "Response", "Upsert",
+    "WriteAck",
+]
 
 #: Rejection reasons emitted by admission control (``TenantRegistry.admit``)
 #: and the bounded request queue.
@@ -31,6 +40,8 @@ REJECT_POOL_CAP = "pool_cap"  # per-request pool above the tenant's cap
 REJECT_UNKNOWN = "unknown_tenant"  # tenant not registered, no default policy
 REJECT_DUPLICATE = "duplicate_id"  # request_id collides with one in flight
 REJECT_STOPPED = "server_stopped"  # submitted to a stopped ThreadedServer
+REJECT_WRITE_RATE = "write_rate_limit"  # write token bucket empty
+REJECT_IMMUTABLE = "immutable_engine"  # write to an engine without upsert
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +90,46 @@ class Completed:
 
 
 @dataclasses.dataclass(frozen=True)
+class Upsert:
+    """One tenant-attributed write: insert (``id=None`` — the engine
+    assigns the next sequential id) or overwrite (``id`` given) a single
+    logical row. Answered with a ``WriteAck``."""
+
+    tenant: str
+    vector: np.ndarray
+    attrs: np.ndarray
+    id: Optional[int] = None
+    request_id: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Delete:
+    """Delete one logical row. ``applied=False`` in the ack when the id
+    was not visible (already deleted, or never existed)."""
+
+    tenant: str
+    id: int
+    request_id: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class WriteAck:
+    """A write's typed response. The write is durable in the engine's
+    delta (and visible to every later query) *before* this ack exists."""
+
+    request_id: int
+    tenant: str
+    id: int
+    op: str  # "upsert" | "delete"
+    applied: bool  # False only for a delete of a non-visible id
+    delta_rows: int  # delta occupancy right after this write
+
+    @property
+    def ok(self) -> bool:
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
 class Rejected:
     """Load-shedding response: the request never reached the device."""
 
@@ -91,4 +142,4 @@ class Rejected:
         return False
 
 
-Response = Union[Completed, Rejected]
+Response = Union[Completed, WriteAck, Rejected]

@@ -43,8 +43,15 @@ class ServerStats:
         self.rejected = 0
         self.rejected_by_reason: dict = defaultdict(int)
         self.per_tenant: dict = defaultdict(
-            lambda: {"submitted": 0, "completed": 0, "rejected": 0}
+            lambda: {
+                "submitted": 0, "completed": 0, "rejected": 0,
+                "upserts": 0, "deletes": 0, "writes_shed": 0,
+            }
         )
+        self.upserts = 0
+        self.deletes = 0
+        self.writes_rejected = 0
+        self.merge_ms: list = []
         self.queue_ms: list = []
         self.service_ms: list = []
         self.total_ms: list = []
@@ -66,6 +73,26 @@ class ServerStats:
         self.rejected += 1
         self.rejected_by_reason[reason] += 1
         self.per_tenant[tenant]["rejected"] += 1
+
+    def record_write(self, tenant: str, op: str) -> None:
+        """One accepted (applied) write. ``op`` is "upsert" or "delete"."""
+        if op == "upsert":
+            self.upserts += 1
+            self.per_tenant[tenant]["upserts"] += 1
+        else:
+            self.deletes += 1
+            self.per_tenant[tenant]["deletes"] += 1
+
+    def record_write_reject(self, tenant: str, reason: str) -> None:
+        """One shed write (kept separate from read rejections: ``rejected``
+        counts queries only, so read SLO math is unpolluted)."""
+        self.writes_rejected += 1
+        self.rejected_by_reason[reason] += 1
+        self.per_tenant[tenant]["writes_shed"] += 1
+
+    def record_merge(self, wall_ms: float) -> None:
+        """One completed delta→main merge (prepare + apply wall time)."""
+        self.merge_ms.append(float(wall_ms))
 
     def record_queue_depth(self, depth: int) -> None:
         self.queue_depth = depth
@@ -134,6 +161,19 @@ class ServerStats:
                 for t, c in sorted(self.per_tenant.items())
             },
         }
+        if self.upserts or self.deletes or self.writes_rejected:
+            out["writes"] = {
+                "upserts": self.upserts,
+                "deletes": self.deletes,
+                "shed": self.writes_rejected,
+                "merges": len(self.merge_ms),
+                "merge_ms_p50": round(self._pct(self.merge_ms, 50), 3),
+                "merge_ms_p95": round(self._pct(self.merge_ms, 95), 3),
+            }
+        # delta/tombstone occupancy gauges from a write-capable engine
+        write_stats = getattr(self._engine, "write_stats", None)
+        if write_stats is not None:
+            out["delta"] = write_stats()
         # cache/trace rates from host counters (deltas vs construction time)
         retraces = routing_mod.trace_count() - self._traces0
         out["retraces"] = retraces

@@ -34,7 +34,9 @@ class TenantPolicy:
     stream coalesces onto one plan signature). ``max_k``/``max_pool`` cap
     per-request overrides; ``rate``/``burst`` parameterize the token bucket
     (requests/second sustained, and the burst capacity — ``math.inf`` rate
-    disables rate limiting).
+    disables rate limiting). ``write_rate``/``write_burst`` are the same
+    contract for the write path (a *separate* bucket, so a write burst
+    cannot starve the tenant's reads or vice versa).
     """
 
     params: SearchParams = SearchParams()
@@ -42,12 +44,16 @@ class TenantPolicy:
     max_pool: int = 1024
     rate: float = math.inf  # sustained admitted requests/second
     burst: float = 32.0  # token-bucket capacity (peak burst size)
+    write_rate: float = math.inf  # sustained admitted writes/second
+    write_burst: float = 32.0  # write token-bucket capacity
 
     def __post_init__(self):
         if self.max_k <= 0 or self.max_pool <= 0:
             raise ValueError("caps must be positive")
         if self.rate <= 0 or self.burst <= 0:
             raise ValueError("rate and burst must be positive")
+        if self.write_rate <= 0 or self.write_burst <= 0:
+            raise ValueError("write_rate and write_burst must be positive")
         if self.params.k > self.max_k:
             raise ValueError("default params.k exceeds max_k")
         if self.params.effective_pool > self.max_pool:
@@ -92,11 +98,15 @@ class TenantRegistry:
     def __init__(self, default_policy: Optional[TenantPolicy] = None):
         self._policies: Dict[str, TenantPolicy] = {}
         self._buckets: Dict[str, TokenBucket] = {}
+        self._write_buckets: Dict[str, TokenBucket] = {}
         self.default_policy = default_policy
 
     def register(self, tenant: str, policy: TenantPolicy) -> None:
         self._policies[tenant] = policy
         self._buckets[tenant] = TokenBucket(policy.rate, policy.burst)
+        self._write_buckets[tenant] = TokenBucket(
+            policy.write_rate, policy.write_burst
+        )
 
     def policy(self, tenant: str) -> Optional[TenantPolicy]:
         got = self._policies.get(tenant)
@@ -131,4 +141,15 @@ class TenantRegistry:
                 return request_mod.REJECT_POOL_CAP
         if not self._buckets[req.tenant].try_take(now):
             return request_mod.REJECT_RATE
+        return None
+
+    def admit_write(self, write, now: float) -> Optional[str]:
+        """Admission for the write path (``Upsert``/``Delete``): tenant
+        existence, then the tenant's *write* token bucket. Reads and
+        writes draw from independent budgets."""
+        pol = self.policy(write.tenant)
+        if pol is None:
+            return request_mod.REJECT_UNKNOWN
+        if not self._write_buckets[write.tenant].try_take(now):
+            return request_mod.REJECT_WRITE_RATE
         return None

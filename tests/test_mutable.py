@@ -1,0 +1,517 @@
+"""Streaming mutability: LSM delta + tombstones + background merge.
+
+Covers the visibility invariants (a deleted id is never returned; an
+upserted id is served with its new vector/attrs) across codecs × backends
+× predicate kinds, both before and after the merge folds the delta into
+the main index; the no-write fast path's bit-exactness; the incremental
+HELP re-link; the compaction policy's cost gate; the serve-layer write
+path (write admission, read-your-writes, background merge scheduling);
+and the end-to-end freshness bar (Recall@10 ≥ 0.9 vs the post-write brute
+oracle, pre and post merge, through the serving stack).
+"""
+import dataclasses
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    ANY, BETWEEN, MATCH, ONE_OF, Engine, Query, QueryBatch, SearchParams,
+)
+from repro.api.planner import CostModel
+from repro.core import help_graph as help_mod
+from repro.core.baselines import brute_force_hybrid, recall_at_k
+from repro.core.graph_ops import INVALID
+from repro.core.help_graph import HelpConfig
+from repro.data.synthetic import make_hybrid_dataset
+from repro.mutable import CompactionPolicy, DeltaSegment, MutableEngine
+from repro.quant import QuantConfig
+from repro.quant.pq import pq_encode
+from repro.quant.sq import sq8_encode
+from repro.serve import (
+    Delete, Request, TenantPolicy, TenantRegistry, ThreadedServer, Upsert,
+    serve_loop,
+)
+
+N0 = 900  # rows in the frozen main build; 60 more stream in as writes
+CFG = HelpConfig(gamma=8, gamma_new=4, max_rounds=2,
+                 quality_sample=32, node_block=256)
+K, POOL = 10, 128
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_hybrid_dataset(
+        n=N0 + 60, n_queries=32, profile="sift", attr_dim=5,
+        labels_per_dim=3, n_clusters=8, attr_cluster_corr=0.6, seed=0,
+    )
+
+
+@pytest.fixture(scope="module")
+def base_indexes(ds):
+    """One frozen StableIndex per codec; engines are derived per test so
+    merges (which swap an engine's index pointer) never leak across."""
+    out = {}
+    for mode in ("none", "sq8", "pq"):
+        out[mode] = Engine.build(
+            ds.features[:N0], ds.attrs[:N0], CFG,
+            quant_cfg=QuantConfig(mode=mode, pq_subspaces=16),
+        ).index
+    return out
+
+
+def _engine(base_indexes, mode) -> Engine:
+    # shallow copy: merge replaces the .index reference, never its arrays
+    return Engine(dataclasses.replace(base_indexes[mode]))
+
+
+def _apply_script(m: MutableEngine, ds):
+    """The shared write script: 40 inserts, 10 attr+vector overwrites,
+    15 deletes. Returns (inserted ids, {id: (vec, attrs)} overwrites,
+    deleted ids)."""
+    inserted = list(range(N0, N0 + 40))
+    for i in inserted:
+        m.upsert(ds.features[i], ds.attrs[i], id=i)
+    rng = np.random.default_rng(3)
+    over = sorted(int(x) for x in rng.choice(N0, 10, replace=False))
+    overwrites = {}
+    for i in over:
+        v = (ds.features[i]
+             + 0.05 * rng.standard_normal(ds.features.shape[1])
+             ).astype(np.float32)
+        a = ((ds.attrs[i] + 1) % 3).astype(np.int32)
+        m.upsert(v, a, id=i)
+        overwrites[i] = (v, a)
+    candidates = np.setdiff1d(np.arange(N0), np.asarray(over))
+    deleted = sorted(int(x) for x in rng.choice(candidates, 15,
+                                                replace=False))
+    for i in deleted:
+        assert m.delete(i)
+    return inserted, overwrites, deleted
+
+
+def _current_attrs(ds, overwrites):
+    attrs = ds.attrs[:N0 + 60].copy()
+    for i, (_, a) in overwrites.items():
+        attrs[i] = a
+    return attrs
+
+
+@pytest.fixture(scope="module")
+def written(base_indexes, ds):
+    """Pre-merge state per codec (the delta holds every write)."""
+    out = {}
+    for mode in base_indexes:
+        m = MutableEngine(_engine(base_indexes, mode),
+                          CompactionPolicy(max_delta_rows=10 ** 9))
+        out[mode] = (m, _apply_script(m, ds))
+    return out
+
+
+@pytest.fixture(scope="module")
+def merged(base_indexes, ds):
+    """Post-merge state per codec (independent engines; the `written`
+    fixture's pre-merge state stays untouched)."""
+    out = {}
+    for mode in base_indexes:
+        m = MutableEngine(_engine(base_indexes, mode),
+                          CompactionPolicy(max_delta_rows=10 ** 9))
+        script = _apply_script(m, ds)
+        stats = m.merge()
+        assert stats is not None and stats["linked"] == 50
+        assert m.delta.n_rows == 0 and not m.oplog
+        out[mode] = (m, script)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# DeltaSegment
+# ---------------------------------------------------------------------------
+
+
+class TestDeltaSegment:
+    def test_append_overwrite_kill(self):
+        d = DeltaSegment(4, 2)
+        r0 = d.append(7, np.ones(4), np.zeros(2))
+        assert d.n_alive == 1 and d.row_of[7] == r0
+        r1 = d.append(7, 2 * np.ones(4), np.ones(2))  # overwrite: new row
+        assert r1 != r0 and d.n_alive == 1 and d.n_rows == 2
+        assert not d.alive[r0] and d.alive[r1]
+        latest = d.latest()
+        np.testing.assert_array_equal(latest[7][0], 2 * np.ones(4))
+        assert latest[7][2] is True
+        assert d.kill(7) and d.n_alive == 0
+        assert not d.kill(7)  # already dead
+        assert d.latest()[7][2] is False  # dead latest row kept for merge
+
+    def test_capacity_doubles(self):
+        d = DeltaSegment(2, 1)
+        for i in range(600):
+            d.append(i, np.zeros(2), np.zeros(1))
+        assert d.n_rows == 600 and d.features.shape[0] == 1024
+
+    def test_topk_padding_and_dead_masking(self, ds):
+        d = DeltaSegment(ds.features.shape[1], ds.attrs.shape[1])
+        d.append(1, ds.features[1], ds.attrs[1])
+        d.append(2, ds.features[2], ds.attrs[2])
+        d.kill(2)
+        qb = QueryBatch.match(ds.features[1:2], ds.attrs[1:2])
+        ids, sq = d.topk(qb, 5, None, oracle=True)
+        assert ids.shape == (1, 5)
+        assert ids[0, 0] == 1  # the only alive row
+        assert (ids[0, 1:] == INVALID).all()  # dead + padding masked out
+
+
+# ---------------------------------------------------------------------------
+# CompactionPolicy
+# ---------------------------------------------------------------------------
+
+
+class TestCompactionPolicy:
+    def test_size_trigger(self):
+        pol = CompactionPolicy(max_delta_rows=100)
+        assert not pol.should_merge(delta_rows=99, n_main=10_000)
+        assert pol.should_merge(delta_rows=100, n_main=10_000)
+        assert not pol.should_merge(delta_rows=0, n_main=10_000)
+
+    def test_cost_gate(self):
+        cm = CostModel(unit_evals=16.0, probe_pool=64, probe_n=10_000,
+                       brute_eval_cost=1.0, batch_overhead=4.0)
+        pol = CompactionPolicy(max_delta_rows=10 ** 9, min_delta_rows=64,
+                               max_cost_regression=0.25, probe_pool=64)
+        # below min_delta_rows the cost gate never fires
+        assert not pol.should_merge(delta_rows=63, n_main=10_000,
+                                    cost_model=cm)
+        # a tiny delta is cheaper than 25% of the main traversal
+        assert not pol.should_merge(delta_rows=64, n_main=10 ** 6,
+                                    cost_model=cm)
+        # a huge delta on a small main crosses the regression threshold
+        assert pol.should_merge(delta_rows=4000, n_main=5000, cost_model=cm)
+        # monotone: merging pressure only grows with delta size
+        fired = [pol.should_merge(delta_rows=r, n_main=20_000, cost_model=cm)
+                 for r in (64, 512, 4096, 32768)]
+        assert fired == sorted(fired)
+
+
+# ---------------------------------------------------------------------------
+# apply_rows + link_nodes (the incremental merge primitives)
+# ---------------------------------------------------------------------------
+
+
+class TestApplyRows:
+    @pytest.mark.parametrize("mode", ["none", "sq8", "pq"])
+    def test_grow_scatter_and_codes(self, base_indexes, ds, mode):
+        idx = base_indexes[mode]
+        ids = np.array([5, N0, N0 + 3])  # one overwrite + two new (one gap)
+        feats = ds.features[[5, N0, N0 + 3]] + 1.0
+        attrs = ds.attrs[[5, N0, N0 + 3]]
+        new = idx.apply_rows(ids, feats, attrs)
+        assert int(new.features.shape[0]) == N0 + 4
+        np.testing.assert_allclose(np.asarray(new.features[ids]), feats,
+                                   rtol=1e-6)
+        np.testing.assert_array_equal(np.asarray(new.attrs[ids]), attrs)
+        # untouched rows bit-identical, grown graph rows INVALID-padded
+        np.testing.assert_array_equal(np.asarray(new.features[:5]),
+                                      np.asarray(idx.features[:5]))
+        assert (np.asarray(new.graph[N0:]) == INVALID).all()
+        if mode == "none":
+            assert new.quant is None
+        else:
+            assert int(new.quant.codes.shape[0]) == N0 + 4
+            if mode == "sq8":
+                want = np.asarray(
+                    sq8_encode(feats, idx.quant.sq_params)[0]
+                )
+            else:
+                want = np.asarray(pq_encode(feats, idx.quant.codebook))
+            np.testing.assert_array_equal(
+                np.asarray(new.quant.codes[ids]), want
+            )
+
+    def test_link_nodes_links_and_bans(self, base_indexes, ds):
+        idx = base_indexes["none"]
+        ids = np.arange(N0, N0 + 8)
+        new = idx.apply_rows(ids, ds.features[N0:N0 + 8], ds.attrs[N0:N0 + 8])
+        banned = np.array([3, 11], np.int64)
+        graph, repaired = help_mod.link_nodes(
+            new.features, new.attrs, new.graph, ids, new.metric_cfg,
+            new.help_cfg, banned_ids=banned,
+        )
+        rows = np.asarray(graph[N0:N0 + 8])
+        assert (rows >= 0).any(axis=1).all()  # every new node got edges
+        assert not np.isin(rows, banned).any()  # tombstoned ids never linked
+        assert repaired > 0  # old nodes absorbed reverse edges
+        # repair only rewrites rows, never the graph's shape or id range
+        assert graph.shape == new.graph.shape
+        assert int(np.asarray(graph).max()) < N0 + 8
+
+
+# ---------------------------------------------------------------------------
+# Federated read: fast path + visibility invariants
+# ---------------------------------------------------------------------------
+
+
+class TestFastPath:
+    @pytest.mark.parametrize("mode", ["none", "sq8", "pq"])
+    def test_no_write_bit_exact(self, base_indexes, ds, mode):
+        eng = _engine(base_indexes, mode)
+        m = MutableEngine(eng)
+        qb = QueryBatch.match(ds.query_features, ds.query_attrs)
+        p = SearchParams(k=K, pool_size=64)
+        a, b = eng.search(qb, p), m.search(qb, p)
+        np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+        np.testing.assert_array_equal(np.asarray(a.sqdists),
+                                      np.asarray(b.sqdists))
+
+
+def _check_visibility(m, ds, script, backend):
+    inserted, overwrites, deleted = script
+    attrs_now = _current_attrs(ds, overwrites)
+    p = SearchParams(k=K, pool_size=POOL, backend=backend)
+
+    # a deleted id is never returned — probe with its own exact vector
+    probe = deleted[:8]
+    qb = QueryBatch.match(ds.features[probe], ds.attrs[probe])
+    ids = np.asarray(m.search(qb, p).ids)
+    assert not np.isin(ids, np.asarray(deleted)).any()
+
+    # an upserted id is served with its new vector: exact-vector queries
+    # must surface it in the top k (rank 0 pre-merge, where the delta scan
+    # is exact; membership suffices under quantized main-side scoring)
+    some_ins = inserted[:8]
+    qb = QueryBatch.match(ds.features[some_ins], ds.attrs[some_ins])
+    ids = np.asarray(m.search(qb, p).ids)
+    for r, i in enumerate(some_ins):
+        assert i in ids[r], (i, ids[r])
+
+    # an overwrite swaps vector AND attrs: the new attrs admit the row
+    ov_ids = sorted(overwrites)[:6]
+    qv = np.stack([overwrites[i][0] for i in ov_ids])
+    qa = np.stack([overwrites[i][1] for i in ov_ids])
+    ids = np.asarray(m.search(QueryBatch.match(qv, qa), p).ids)
+    for r, i in enumerate(ov_ids):
+        assert i in ids[r], (i, ids[r])
+
+    # ONE_OF membership is exact on every backend/codec
+    queries = [Query(ds.query_features[i],
+                     [MATCH(int(ds.query_attrs[i][0])), ANY,
+                      ONE_OF(0, 2), ANY, ANY])
+               for i in range(12)]
+    res = m.search(QueryBatch.from_queries(queries), p)
+    for row in np.asarray(res.ids):
+        got = row[row >= 0]
+        assert np.isin(attrs_now[got, 2], (0, 2)).all()
+
+    # BETWEEN under enforce_equality: every hit inside the interval
+    queries = [Query(ds.query_features[i],
+                     [BETWEEN(0, 1), ANY, ANY, ANY,
+                      MATCH(int(ds.query_attrs[i][4]))])
+               for i in range(12)]
+    res = m.search(QueryBatch.from_queries(queries),
+                   dataclasses.replace(p, enforce_equality=True))
+    for q, row in zip(queries, np.asarray(res.ids)):
+        got = row[row >= 0]
+        assert (attrs_now[got, 0] <= 1).all()
+        assert (attrs_now[got, 4] == q.predicates[4].values[0]).all()
+
+
+class TestVisibility:
+    @pytest.mark.parametrize("mode", ["none", "sq8", "pq"])
+    @pytest.mark.parametrize("backend", ["graph", "brute"])
+    def test_pre_merge(self, written, ds, mode, backend):
+        m, script = written[mode]
+        _check_visibility(m, ds, script, backend)
+
+    @pytest.mark.parametrize("mode", ["none", "sq8", "pq"])
+    @pytest.mark.parametrize("backend", ["graph", "brute"])
+    def test_post_merge(self, merged, ds, mode, backend):
+        m, script = merged[mode]
+        _check_visibility(m, ds, script, backend)
+
+    def test_logical_n_and_exists(self, written, ds):
+        m, (inserted, overwrites, deleted) = written["none"]
+        assert m.n_items == N0 + len(inserted) - len(deleted)
+        assert all(m.exists(i) for i in inserted)
+        assert all(m.exists(i) for i in overwrites)
+        assert not any(m.exists(i) for i in deleted)
+
+    def test_merge_preserves_logical_corpus(self, merged, ds):
+        m, (inserted, overwrites, deleted) = merged[("none")]
+        assert m.n_items == N0 + len(inserted) - len(deleted)
+        assert not any(m.exists(i) for i in deleted)  # tombstones persist
+        # merged rows hold the post-write values
+        i = sorted(overwrites)[0]
+        np.testing.assert_allclose(
+            np.asarray(m.index.features[i]), overwrites[i][0], rtol=1e-6
+        )
+
+    def test_graph_path_parity_with_rebuild(self, merged, written, ds):
+        """The incrementally linked graph serves within a whisker of the
+        pre-merge federated read (whose delta side is exact) on the same
+        logical corpus — the re-link is at parity, not a regression."""
+        p = SearchParams(k=K, pool_size=POOL, backend="graph")
+        qb = QueryBatch.match(ds.query_features, ds.query_attrs)
+        m_pre, (_, overwrites, deleted) = written["none"]
+        m_post, _ = merged["none"]
+        feats = ds.features[:N0 + 60].copy()
+        for i, (v, _) in overwrites.items():
+            feats[i] = v
+        feats[np.asarray(deleted)] = 1e6
+        truth = brute_force_hybrid(
+            feats, _current_attrs(ds, overwrites),
+            ds.query_features, ds.query_attrs, K,
+        )
+        r_pre = recall_at_k(np.asarray(m_pre.search(qb, p).ids),
+                            truth.ids, K)
+        r_post = recall_at_k(np.asarray(m_post.search(qb, p).ids),
+                             truth.ids, K)
+        assert r_post >= r_pre - 0.05, (r_pre, r_post)
+
+
+# ---------------------------------------------------------------------------
+# Serve-layer write path
+# ---------------------------------------------------------------------------
+
+
+class TestServeWrites:
+    def test_write_admission_separate_buckets(self, base_indexes, ds):
+        m = MutableEngine(_engine(base_indexes, "none"))
+        reg = TenantRegistry(default_policy=TenantPolicy(
+            params=SearchParams(k=K, pool_size=64),
+            write_rate=1e-9, write_burst=2.0,
+        ))
+        trace = [(0.0, Upsert("t", ds.features[N0 + i], ds.attrs[N0 + i]))
+                 for i in range(5)]
+        trace.append((0.0, Request(
+            "t", Query(ds.query_features[0],
+                       [MATCH(int(v)) for v in ds.query_attrs[0]]))))
+        out, stats = serve_loop(m, trace, reg)
+        acks = [r for r in out[:5] if r.ok]
+        shed = [r for r in out[:5] if not r.ok]
+        assert len(acks) == 2 and len(shed) == 3  # burst=2, no refill at t=0
+        assert all(r.reason == "write_rate_limit" for r in shed)
+        assert out[5].ok  # reads draw from their own (unlimited) bucket
+        snap = stats.snapshot()
+        assert snap["writes"] == {
+            "upserts": 2, "deletes": 0, "shed": 3, "merges": 0,
+            "merge_ms_p50": 0.0, "merge_ms_p95": 0.0,
+        }
+        assert snap["delta"]["delta_rows"] == 2
+        assert snap["rejected"] == 0  # write shedding is counted separately
+
+    def test_immutable_engine_rejects_writes(self, base_indexes, ds):
+        out, _ = serve_loop(
+            _engine(base_indexes, "none"),
+            [Upsert("t", ds.features[0], ds.attrs[0])],
+        )
+        assert not out[0].ok and out[0].reason == "immutable_engine"
+
+    def test_threaded_read_your_writes(self, base_indexes, ds):
+        m = MutableEngine(_engine(base_indexes, "none"))
+        reg = TenantRegistry(default_policy=TenantPolicy(
+            params=SearchParams(k=K, pool_size=POOL)))
+        with ThreadedServer(m, reg, window_ms=1.0) as srv:
+            i = N0 + 7
+            ack = srv.submit(Upsert("t", ds.features[i], ds.attrs[i],
+                                    id=i)).result(10)
+            assert ack.ok and ack.op == "upsert" and ack.id == i
+            q = Query(ds.features[i], [MATCH(int(v)) for v in ds.attrs[i]])
+            r = srv.submit(Request("t", q)).result(30)
+            assert r.ok and int(r.ids[0]) == i  # fresh row wins at rank 0
+            dack = srv.submit(Delete("t", i)).result(10)
+            assert dack.ok and dack.applied
+            r2 = srv.submit(Request("t", q)).result(30)
+            assert r2.ok and i not in np.asarray(r2.ids)
+            assert not srv.submit(Delete("t", i)).result(10).applied
+
+    def test_threaded_background_merge(self, base_indexes, ds):
+        m = MutableEngine(
+            _engine(base_indexes, "none"),
+            CompactionPolicy(max_delta_rows=20, min_delta_rows=10 ** 9),
+        )
+        reg = TenantRegistry(default_policy=TenantPolicy(
+            params=SearchParams(k=K, pool_size=64)))
+        q = Query(ds.query_features[0],
+                  [MATCH(int(v)) for v in ds.query_attrs[0]])
+        with ThreadedServer(m, reg, window_ms=1.0) as srv:
+            futs = []
+            for i in range(40):
+                srv.submit(Upsert("t", ds.features[N0 + i % 60],
+                                  ds.attrs[N0 + i % 60], id=N0 + i % 60))
+                # serving keeps flowing while the merge prepares
+                futs.append(srv.submit(Request("t", q)))
+            assert all(f.result(60).ok for f in futs)
+        assert m.merge_count >= 1  # stop() drains the in-flight merge
+        snap = srv.stats.snapshot()
+        assert snap["writes"]["merges"] == m.merge_count
+        assert snap["writes"]["merge_ms_p95"] > 0
+
+
+# ---------------------------------------------------------------------------
+# End-to-end freshness (the acceptance bar)
+# ---------------------------------------------------------------------------
+
+
+class TestFreshnessEndToEnd:
+    def test_recall_bar_through_serve(self):
+        ds = make_hybrid_dataset(
+            n=3300, n_queries=64, profile="sift", attr_dim=5,
+            labels_per_dim=3, n_clusters=16, attr_cluster_corr=0.6, seed=0,
+        )
+        eng = Engine.build(ds.features[:3000], ds.attrs[:3000],
+                           HelpConfig(gamma=24, gamma_new=6, max_rounds=8))
+        m = MutableEngine(eng, CompactionPolicy(max_delta_rows=10 ** 9))
+        reg = TenantRegistry(default_policy=TenantPolicy(
+            params=SearchParams(k=K, pool_size=POOL, pioneer_size=16)))
+
+        rng = np.random.default_rng(7)
+        deleted = sorted(int(x) for x in rng.choice(3000, 150,
+                                                    replace=False))
+        writes = [Upsert("t", ds.features[i], ds.attrs[i], id=i)
+                  for i in range(3000, 3300)]
+        writes += [Delete("t", i) for i in deleted]
+        reads = [Request("t", Query(ds.query_features[i],
+                                    [MATCH(int(v))
+                                     for v in ds.query_attrs[i]]),
+                         request_id=10_000 + i)
+                 for i in range(64)]
+
+        feats = ds.features.copy()
+        feats[np.asarray(deleted)] = 1e6
+        truth = brute_force_hybrid(feats, ds.attrs, ds.query_features,
+                                   ds.query_attrs, K)
+
+        def recall_of(responses):
+            done = sorted((r for r in responses if hasattr(r, "ids")),
+                          key=lambda r: r.request_id)
+            assert len(done) == 64
+            return recall_at_k(np.stack([r.ids for r in done]),
+                               truth.ids, K)
+
+        # writes then queries, all pre-merge (delta holds all 450 ops)
+        out, _ = serve_loop(m, [(0.0, w) for w in writes]
+                            + [(1.0, r) for r in reads], reg)
+        assert all(r.ok for r in out)
+        r_pre = recall_of(out)
+        assert m.merge_count == 0 and m.delta.n_alive == 300
+
+        # one more write trips the size trigger: the merge runs inside the
+        # serving loop, then the same queries replay post-merge
+        m.policy = CompactionPolicy(max_delta_rows=10)
+        poke = Upsert("t", ds.features[3299], ds.attrs[3299], id=3299)
+        out2, stats2 = serve_loop(
+            m, [(0.0, poke)] + [(1.0, r) for r in reads], reg)
+        assert all(r.ok for r in out2)
+        assert m.merge_count == 1 and m.delta.n_alive <= 1
+        r_post = recall_of(out2)
+        assert stats2.snapshot()["writes"]["merges"] == 1
+
+        assert r_pre >= 0.9, r_pre
+        assert r_post >= 0.9, r_post
+        # visibility stays exact post-merge
+        assert not any(m.exists(i) for i in deleted)
+        ids = np.asarray(m.search(
+            QueryBatch.match(ds.features[deleted[:8]],
+                             ds.attrs[deleted[:8]]),
+            SearchParams(k=K, pool_size=POOL)).ids)
+        assert not np.isin(ids, np.asarray(deleted)).any()
