@@ -852,6 +852,171 @@ def mutate_sweep(fast: bool = True, n: int = 0) -> None:
         }, f, indent=2)
 
 
+# ---------------------------------------------------------------------------
+# Scale sweep — out-of-core IVF partitions: recall/qps vs nprobe under a
+# bounded-residency segment store
+# ---------------------------------------------------------------------------
+
+
+def scale_sweep(fast: bool = True, n: int = 0, partitions: int = 0) -> None:
+    """Out-of-core scaling of the IVF-partitioned engine: Recall@10 / qps /
+    resident-row gauges vs ``nprobe``, with the partitions streamed from
+    their on-disk layout through a ``SegmentStore`` whose cap is a small
+    fraction of the corpus, plus the bit-exact full-probe (``nprobe = P``,
+    brute sub-backend) parity check against the flat brute oracle. Emits
+    ``BENCH_scale.json``. Pass ``--n``/``--partitions`` (benchmarks.run)
+    for the CI smoke; ``--full`` defaults to the paper's 1M-row regime.
+    """
+    import json
+    import math
+    import os
+    import shutil
+    import tempfile
+
+    from benchmarks.common import BENCH_DIR
+    from repro.api import Engine
+    from repro.core.help_graph import HelpConfig
+    from repro.partition.store import row_bucket
+
+    bench = "scale_sweep"
+    n = n or (200_000 if fast else 1_000_000)
+    k, n_queries, repeats = 10, 128, 2
+    p = partitions or max(8, 2 ** int(round(math.log2(max(n // 8000, 8)))))
+    sp = max(1, int(round(math.sqrt(p))))  # the classic IVF default probe
+
+    ds = dataset("sift", 5, 3, n, n_queries)
+    qb = QueryBatch.match(
+        ds.query_features, ds.query_attrs, active=[0]
+    )  # one hard MATCH dim — hybrid, ~1/labels selectivity
+    mask = np.zeros_like(ds.query_attrs)
+    mask[:, 0] = 1
+    truth = brute_force_hybrid(
+        ds.features, ds.attrs, ds.query_features, ds.query_attrs, k,
+        mask=jnp.asarray(mask),
+    )
+
+    t0 = time.time()
+    eng_build = Engine.build_partitioned(
+        ds.features, ds.attrs, n_partitions=p,
+        help_cfg=HelpConfig(gamma=12, gamma_new=4, max_rounds=4),
+    )
+    build_s = time.time() - t0
+    emit(bench, f"n{n}_p{p}", "build_s", round(build_s, 1))
+
+    # residency cap ≪ corpus: the largest partition must fit (documented
+    # SegmentStore bound), a √P-probe working set should mostly fit
+    buckets = [
+        row_bucket(int(r)) for r in eng_build.index.summaries.n_rows
+    ]
+    cap = max(buckets) * max(4, sp)
+    tmp = tempfile.mkdtemp(prefix="scale_sweep_")
+    try:
+        out_dir = os.path.join(tmp, "index")
+        eng_build.save(out_dir)
+        del eng_build
+        eng = Engine.load(out_dir, residency_rows=cap)
+        store = eng.index.store
+        emit(bench, f"n{n}_p{p}", "cap_rows", cap)
+        emit(bench, f"n{n}_p{p}", "cap_fraction", round(cap / n, 4))
+
+        def point(params):
+            res = eng.search(qb, params)  # compile + cold loads
+            jax.block_until_ready(res.ids)
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                res = eng.search(qb, params)
+                jax.block_until_ready(res.ids)
+            qps = n_queries / ((time.perf_counter() - t0) / repeats)
+            return res, qps
+
+        sweep = {}
+        for np_ in sorted({1, max(1, sp // 2), sp, min(2 * sp, p)}):
+            store.evict_all()
+            store.reset_counters()
+            res, qps = point(
+                SearchParams(k=k, nprobe=np_, sub_backend="brute")
+            )
+            r = recall_at_k(res.ids, truth.ids, k)
+            st = store.stats()
+            name = f"nprobe{np_}"
+            emit(bench, name, "recall", round(float(r), 4))
+            emit(bench, name, "qps", round(float(qps), 1))
+            emit(bench, name, "peak_resident_rows", st["peak_resident_rows"])
+            sweep[np_] = {
+                "recall_at_10": round(float(r), 4),
+                "qps": round(float(qps), 1),
+                "fp_evals_per_query": res.total_dist_evals // n_queries,
+                "store": st,
+                "cap_respected": st["peak_resident_rows"] <= cap,
+            }
+
+        # HELP-subgraph sub-backend at the default probe point (traversal
+        # inside each probed partition instead of a full scan)
+        store.evict_all()
+        store.reset_counters()
+        res_g, qps_g = point(
+            SearchParams(k=k, nprobe=sp, sub_backend="graph", pool_size=64,
+                         enforce_equality=True)
+        )
+        r_g = recall_at_k(res_g.ids, truth.ids, k)
+        emit(bench, f"graph_nprobe{sp}", "recall", round(float(r_g), 4))
+        emit(bench, f"graph_nprobe{sp}", "qps", round(float(qps_g), 1))
+        graph_point = {
+            "nprobe": sp,
+            "recall_at_10": round(float(r_g), 4),
+            "qps": round(float(qps_g), 1),
+            "fp_evals_per_query": res_g.total_dist_evals // n_queries,
+            "store": store.stats(),
+        }
+
+        # full probe (nprobe = P, brute sub-backend) must be bit-identical
+        # to the flat brute oracle — the partition layer's correctness
+        # anchor at full scale
+        store.evict_all()
+        store.reset_counters()
+        res_full = eng.search(
+            qb, SearchParams(k=k, nprobe=p, sub_backend="brute")
+        )
+        parity = bool(
+            np.array_equal(np.asarray(res_full.ids), np.asarray(truth.ids))
+            and np.array_equal(
+                np.asarray(res_full.sqdists), np.asarray(truth.sqdists)
+            )
+        )
+        emit(bench, f"full_probe_p{p}", "bit_exact_vs_oracle", parity)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    flush_csv(bench)
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    with open(os.path.join(BENCH_DIR, "BENCH_scale.json"), "w") as f:
+        json.dump(
+            {
+                "n": n,
+                "partitions": p,
+                "k": k,
+                "n_queries": n_queries,
+                "build_s": round(build_s, 1),
+                "residency_cap_rows": cap,
+                "residency_cap_fraction": round(cap / n, 4),
+                "nprobe_sweep": {str(np_): v for np_, v in sweep.items()},
+                "graph_sub_backend": graph_point,
+                "full_probe_parity": {
+                    "nprobe": p,
+                    "bit_exact_vs_brute_oracle": parity,
+                },
+                "recall_target": {
+                    "nprobe": sp,
+                    "recall_at_10": sweep[sp]["recall_at_10"],
+                    "target": 0.9,
+                    "met": sweep[sp]["recall_at_10"] >= 0.9,
+                },
+            },
+            f,
+            indent=2,
+        )
+
+
 ALL = [
     tab1_magnitude_stats,
     fig3_qps_recall,
@@ -868,4 +1033,5 @@ ALL = [
     planner_sweep,
     serve_sweep,
     mutate_sweep,
+    scale_sweep,
 ]

@@ -21,6 +21,9 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--n", type=int, default=0,
                     help="dataset-size override for benchmarks accepting n")
+    ap.add_argument("--partitions", type=int, default=0,
+                    help="partition-count override for benchmarks accepting "
+                         "partitions (scale_sweep; CI smoke uses 8)")
     args = ap.parse_args()
 
     from benchmarks import paper_benchmarks as pb
@@ -33,8 +36,11 @@ def main() -> None:
     t_start = time.time()
     for fn in fns:
         kw = {}
-        if args.n and "n" in inspect.signature(fn).parameters:
+        sig = inspect.signature(fn).parameters
+        if args.n and "n" in sig:
             kw["n"] = args.n
+        if args.partitions and "partitions" in sig:
+            kw["partitions"] = args.partitions
         print(f"=== {fn.__name__} ===", flush=True)
         t0 = time.time()
         fn(fast=not args.full, **kw)

@@ -66,6 +66,7 @@ from repro.core.graph_ops import INF, INVALID
 from repro.core.help_graph import HelpConfig
 from repro.core.index import StableIndex
 from repro.core.routing import RoutingConfig, SearchResult
+from repro.partition.index import PartitionedStableIndex
 from repro.quant import QuantConfig, QuantizedVectors, adc_lut, adc_scan
 from repro.api import executor as executor_mod
 from repro.api import planner as planner_mod
@@ -75,7 +76,7 @@ from repro.api.query import QueryBatch
 
 Array = jax.Array
 
-BACKENDS = ("auto", "graph", "sharded", "brute")
+BACKENDS = ("auto", "graph", "sharded", "brute", "partitioned")
 QUANT_PARAMS = ("auto", "none", "sq8", "pq")
 
 
@@ -92,6 +93,12 @@ class SearchParams:
     ``brute_threshold`` is deprecated: leave it at ``None`` and the planner
     picks brute vs graph from the calibrated cost model. An explicit value
     is still honored as a hard fixed-N override (with a DeprecationWarning).
+
+    ``nprobe`` applies to partitioned engines only: how many coarse
+    partitions each query probes after summary pruning. 0 → the planner's
+    default (≈√P, clamped to [1, P]); ``nprobe = P`` probes everything,
+    which makes the oracle sub-backend bit-identical to an unpartitioned
+    brute search.
     """
 
     k: int = 10
@@ -106,6 +113,12 @@ class SearchParams:
     coarse_max_iters: int = 64
     refine_max_iters: int = 256
     use_visited: bool = True
+    nprobe: int = 0  # partitioned backend: probes per query (0 → auto)
+    #: partitioned backend: per-partition execution mode. "auto" lets the
+    #: cost model pick; "brute" scans every probed partition (with
+    #: nprobe=P this is bit-identical to the unpartitioned brute oracle);
+    #: "graph" forces the HELP subgraph traversal. Ignored elsewhere.
+    sub_backend: str = "auto"
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -114,6 +127,13 @@ class SearchParams:
             raise ValueError(f"unknown quant {self.quant!r} ({QUANT_PARAMS})")
         if self.k <= 0:
             raise ValueError("k must be positive")
+        if self.nprobe < 0:
+            raise ValueError("nprobe must be nonnegative (0 → auto)")
+        if self.sub_backend not in ("auto", "graph", "brute"):
+            raise ValueError(
+                f"unknown sub_backend {self.sub_backend!r} "
+                "(auto | graph | brute)"
+            )
 
     @property
     def effective_pool(self) -> int:
@@ -359,6 +379,13 @@ class Engine:
                     "sharded index always plans onto the sharded backend, "
                     "so there is no brute/graph crossover to calibrate"
                 )
+            elif self.is_partitioned:
+                # no global arrays to probe; the model only prices the
+                # sub-backend/nprobe choice — defaults are fine, and a
+                # measured table can still be injected
+                self._cost_model = planner_mod.default_cost_model(
+                    self.index.n_items
+                )
             else:
                 self._cost_model = planner_mod.calibrate(self.index)
         return self._cost_model
@@ -371,6 +398,12 @@ class Engine:
         return self._executor
 
     def searcher(self, name: str) -> Searcher:
+        if name not in _SEARCHERS and name == "partitioned":
+            # lazy registration: partition.search imports this module, so
+            # it cannot be imported at engine module-import time
+            from repro.partition.search import PartitionedSearcher
+
+            _SEARCHERS[name] = PartitionedSearcher()
         return _SEARCHERS[name]
 
     def invalidate_caches(self) -> None:
@@ -405,6 +438,17 @@ class Engine:
         ))
 
     @classmethod
+    def build_partitioned(
+        cls, features, attrs, n_partitions: int, **kw
+    ) -> "Engine":
+        """Build an out-of-core engine: IVF coarse partitions over HELP
+        subgraphs with streaming residency (see ``repro.partition``).
+        Keywords forward to ``PartitionedStableIndex.build``."""
+        return cls(PartitionedStableIndex.build(
+            features, attrs, n_partitions, **kw
+        ))
+
+    @classmethod
     def from_parts(
         cls,
         features,
@@ -432,10 +476,18 @@ class Engine:
 
     @property
     def is_sharded(self) -> bool:
-        return not isinstance(self.index, StableIndex)
+        return not isinstance(
+            self.index, (StableIndex, PartitionedStableIndex)
+        )
+
+    @property
+    def is_partitioned(self) -> bool:
+        return isinstance(self.index, PartitionedStableIndex)
 
     @property
     def n_items(self) -> int:
+        if self.is_partitioned:
+            return self.index.n_items
         return int(self.index.features.shape[0])
 
     @property
@@ -445,12 +497,14 @@ class Engine:
     @property
     def quant_mode(self) -> str:
         """Codec attached to the index ("none" when unquantized)."""
-        if self.is_sharded:
+        if self.is_sharded or self.is_partitioned:
             return self.index.quant_mode
         return self.index.quant.cfg.mode if self.index.quant is not None else "none"
 
     @property
     def has_graph(self) -> bool:
+        if self.is_partitioned:
+            return self.index.has_graph
         return int(self.index.graphs.shape[1] if self.is_sharded
                    else self.index.graph.shape[1]) > 0
 
@@ -551,29 +605,56 @@ class Engine:
         self.index.save(path, extra_meta=extra)
 
     @classmethod
-    def load(cls, path: str, mesh=None) -> "Engine":
+    def load(
+        cls,
+        path: str,
+        mesh=None,
+        mmap: bool = False,
+        residency_rows: Optional[int] = None,
+    ) -> "Engine":
         """Load a saved engine, sniffing the on-disk format. Sharded
         layouts reshard onto ``mesh`` (or a freshly built local mesh with
         the saved model-shard count when ``mesh`` is None). A persisted
         cost model in the saved meta (written by ``save``) is restored as
-        ``cost_model_override`` — load performs zero probe traversals."""
+        ``cost_model_override`` — load performs zero probe traversals.
+
+        ``mmap`` memory-maps the single-host array files instead of
+        reading them into host RAM before the device transfer (partitioned
+        layouts always mmap — their arrays reach the device per partition,
+        on residency). ``residency_rows`` caps the partitioned layout's
+        resident rows (see ``partition.SegmentStore``)."""
         import json as json_mod
         import os as os_mod
 
         from repro.distributed.search import (
             SHARDED_META, ShardedStableIndex, is_sharded_dir,
         )
+        from repro.partition.index import is_partitioned_dir
 
         if is_sharded_dir(path):
             index = ShardedStableIndex.load(path, mesh=mesh)
             meta_file = os_mod.path.join(path, SHARDED_META)
+        elif is_partitioned_dir(path):
+            if mesh is not None:
+                raise ValueError(
+                    f"{path} holds a partitioned engine; mesh= only "
+                    "applies to sharded layouts"
+                )
+            index = PartitionedStableIndex.load(
+                path, residency_rows=residency_rows
+            )
+            meta_file = os_mod.path.join(path, "meta.json")
         else:
             if mesh is not None:
                 raise ValueError(
                     f"{path} holds a single-host engine; mesh= only applies "
                     "to sharded layouts"
                 )
-            index = StableIndex.load(path)
+            if residency_rows is not None:
+                raise ValueError(
+                    "residency_rows only applies to partitioned layouts"
+                )
+            index = StableIndex.load(path, mmap=mmap)
             meta_file = os_mod.path.join(path, "meta.json")
         with open(meta_file) as f:
             saved_cm = json_mod.load(f).get("cost_model")

@@ -72,6 +72,9 @@ class PlanSignature(NamedTuple):
     enforce: bool
     pool: int  # effective pool — the brute two-stage cut (None routing_cfg)
     rerank: int  # rerank_size — bounds the brute ADC exact rerank
+    # partitioned backend only (defaults keep legacy signatures equal):
+    nprobe: int = 0  # partitions probed per query
+    sub_backend: str = ""  # per-partition execution mode
 
 
 class Executor:
@@ -124,6 +127,8 @@ class Executor:
             enforce=params.enforce_equality,
             pool=params.effective_pool,
             rerank=params.rerank_size,
+            nprobe=plan.nprobe,
+            sub_backend=plan.sub_backend,
         )
 
     def run(
@@ -155,8 +160,14 @@ class Executor:
         needs_filter = sig.has_one_of or (
             sig.enforce and sig.targets_ndim == 3
         )
+        # A partitioned plan with a brute sub-backend scans every probed row
+        # exactly like the flat brute backend — same in-kernel predicate
+        # handling, so no cut-widening and no host post-filter pass.
+        acts_like_brute = plan.backend == "brute" or (
+            plan.backend == "partitioned" and plan.sub_backend == "brute"
+        )
         exec_params, exec_plan = params, plan
-        if needs_filter and plan.backend != "brute":
+        if needs_filter and not acts_like_brute:
             # Widen the traversal cut from k to the whole exactly-scored
             # head: the covering-interval penalty admits in-hull non-members
             # with zero gap, so the membership filter below needs surplus
@@ -186,7 +197,7 @@ class Executor:
                 exec_plan.routing_cfg.pool_size, sig.seed,
             )
         searcher = engine.searcher(exec_plan.backend)
-        do_filter = needs_filter and plan.backend != "brute"
+        do_filter = needs_filter and not acts_like_brute
         k = params.k
         enforce = params.enforce_equality
 

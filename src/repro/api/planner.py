@@ -51,6 +51,7 @@ __all__ = [
     "calibrate",
     "calibration_count",
     "cost_model_from_table",
+    "default_cost_model",
     "make_plan",
 ]
 
@@ -89,12 +90,15 @@ class Plan:
     graph) decided instead.
     """
 
-    backend: str  # graph | sharded | brute
+    backend: str  # graph | sharded | brute | partitioned
     quant_mode: str  # none | sq8 | pq (resolved from params × index)
     routing_cfg: Optional[RoutingConfig]  # None for the brute backend
     reason: str  # human-readable planner justification
     cost_brute: Optional[float] = None  # predicted brute cost (fp-eval units)
     cost_graph: Optional[float] = None  # predicted graph cost (fp-eval units)
+    #: partitioned backend only: per-partition execution mode + probe count
+    sub_backend: str = ""  # "graph" | "brute" (partitioned), else ""
+    nprobe: int = 0  # partitions probed per query (partitioned), else 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -194,6 +198,18 @@ def cost_model_from_table(table) -> CostModel:
         if k in d:
             kw[k] = d[k]
     return CostModel(**kw)
+
+
+def default_cost_model(n: int) -> CostModel:
+    """Uncalibrated prior for index kinds the probe cannot run on — the
+    partitioned index keeps its arrays off-device until a query probes
+    them, so there is nothing resident to traverse at load time. The model
+    only prices the partitioned sub-backend/nprobe choice (relative costs,
+    not wall clock), so generic constants are fine; deployments that want a
+    measured table inject one via ``Engine(cost_model_override=...)``."""
+    return CostModel(
+        unit_evals=4.0, probe_pool=PROBE_POOL, probe_n=max(int(n), 2)
+    )
 
 
 def calibrate(index, seed: int = 0, time_probe: bool = True) -> CostModel:
@@ -361,12 +377,17 @@ def make_plan(
     batch. Rules, first match wins:
 
       1. ``params.backend`` override (validated against the index kind)
-      2. sharded index → "sharded"
+      2. sharded index → "sharded"; partitioned index → "partitioned"
       3. no HELP graph (``build_graph=False``) → "brute"
       4. deprecated ``params.brute_threshold`` explicitly set → old fixed-N
          rule (hard override, DeprecationWarning)
       5. calibrated cost model: brute vs graph at the predicted per-query
          cost crossover for this (N, pool, predicate width, batch, codec)
+
+    A "partitioned" plan additionally resolves ``nprobe`` (explicit
+    ``params.nprobe`` or the classic ≈√P IVF default) and the per-partition
+    ``sub_backend`` — graph traversal vs scan inside each probed partition,
+    priced by the same cost model at the average partition size.
     """
     if queries.attr_dim != engine.attr_dim:
         raise ValueError(
@@ -381,9 +402,23 @@ def make_plan(
             raise ValueError(
                 f"backend={backend!r} unavailable on a sharded index"
             )
+        if backend == "partitioned" and not engine.is_partitioned:
+            raise ValueError(
+                "backend='partitioned' needs a partitioned index "
+                "(Engine.build_partitioned / a partitioned save dir)"
+            )
+        if backend != "partitioned" and engine.is_partitioned:
+            raise ValueError(
+                f"backend={backend!r} unavailable on a partitioned index — "
+                "use 'auto' or 'partitioned' (sub-backend is planned per "
+                "partition; nprobe=P reproduces the unpartitioned scan)"
+            )
         if backend == "graph" and not engine.has_graph:
             raise ValueError("backend='graph' but the index has no graph")
         reason = "explicit backend override"
+    elif engine.is_partitioned:
+        backend = "partitioned"
+        reason = "index is partitioned (IVF coarse quantizer)"
     elif engine.is_sharded:
         backend, reason = "sharded", "index is sharded over the mesh"
     elif not engine.has_graph:
@@ -441,9 +476,22 @@ def make_plan(
             f"fp-eval units/query → {backend}"
         )
 
-    quant_mode = engine._resolve_quant(params, backend)
+    sub_backend, nprobe = "", 0
+    if backend == "partitioned":
+        sub_backend, nprobe, cost_brute, cost_graph, sub_reason = (
+            _plan_partitioned(engine, queries, params)
+        )
+        reason = f"{reason}; {sub_reason}"
+
+    # Quant resolution follows the backend that actually scores rows — for
+    # the partitioned engine that is the per-partition sub-backend (a brute
+    # sub-scan has no sq8 path, exactly like the flat brute backend).
+    quant_mode = engine._resolve_quant(params, sub_backend or backend)
     routing_cfg = None
-    if backend != "brute":
+    runs_traversal = (
+        backend not in ("brute", "partitioned") or sub_backend == "graph"
+    )
+    if runs_traversal:
         # Traversal-level enforcement checks interval containment for wide
         # predicates, which never rejects an admissible value (ONE_OF
         # members all lie within the covering hull); the exact set-
@@ -454,4 +502,68 @@ def make_plan(
     return Plan(
         backend=backend, quant_mode=quant_mode, routing_cfg=routing_cfg,
         reason=reason, cost_brute=cost_brute, cost_graph=cost_graph,
+        sub_backend=sub_backend, nprobe=nprobe,
+    )
+
+
+def _plan_partitioned(
+    engine: "Engine", queries: QueryBatch, params: "SearchParams"
+) -> tuple[str, int, float, float, str]:
+    """Resolve (sub_backend, nprobe, cost_brute, cost_graph, reason) for a
+    partitioned plan.
+
+    nprobe: explicit ``params.nprobe`` wins; otherwise the classic IVF
+    default ≈√P (clamped to [1, P]). Sub-backend pricing reuses the flat
+    cost model at the *average* partition size: both alternatives pay P
+    centroid scorings up front, then either one fused scan over the
+    ~nprobe·N/P probed rows or nprobe independent traversals of ~N/P rows
+    each. "graph" is only on the table when the partitions were built with
+    HELP subgraphs.
+    """
+    p = engine.index.n_partitions
+    nprobe = params.nprobe or int(round(math.sqrt(p)))
+    nprobe = max(1, min(nprobe, p))
+    cm = engine.cost_model
+    n = engine.n_items
+    avg_rows = max(int(math.ceil(n / max(p, 1))), 1)
+    probe_rows = min(nprobe * avg_rows, n)
+    q = "none" if params.quant == "none" else engine.quant_mode
+    cost_brute = float(p) + cm.brute_cost(
+        n=probe_rows,
+        pool=min(params.effective_pool, probe_rows),
+        quant_mode="pq" if q == "pq" else "none",
+    )
+    if params.sub_backend == "graph" and not engine.has_graph:
+        raise ValueError(
+            "sub_backend='graph' but the partitions have no HELP subgraphs"
+        )
+    if params.sub_backend == "brute":
+        return (
+            "brute", nprobe, cost_brute, None,
+            f"nprobe={nprobe}/{p}, sub-backend brute (explicit override)",
+        )
+    if not engine.has_graph:
+        return (
+            "brute", nprobe, cost_brute, None,
+            f"nprobe={nprobe}/{p}, sub-backend brute (no HELP subgraphs)",
+        )
+    widens = queries.has_one_of or (
+        params.enforce_equality and queries.has_intervals
+    )
+    cost_graph = float(p) + nprobe * cm.graph_cost(
+        n=avg_rows,
+        pool=min(params.effective_pool, avg_rows),
+        batch=queries.batch_size,
+        width=predicate_width(queries) if widens else 0.0,
+        quant_mode=q,
+        rerank=params.rerank_size,
+    )
+    if params.sub_backend == "graph":
+        sub, why = "graph", "explicit override"
+    else:
+        sub = "brute" if cost_brute <= cost_graph else "graph"
+        why = f"brute≈{cost_brute:.0f} vs graph≈{cost_graph:.0f}/query"
+    return (
+        sub, nprobe, cost_brute, cost_graph,
+        f"nprobe={nprobe}/{p}, sub-backend {sub} ({why})",
     )

@@ -386,6 +386,24 @@ class QueryBatch:
             okl = okl | (self.mask[:, None, :] == 0)
         return okl.all(-1)
 
+    def take(self, idx) -> "QueryBatch":
+        """Row-gathered sub-batch (all per-query arrays sliced together).
+
+        ``idx`` may repeat rows — the partitioned searcher pads per-partition
+        query groups up to a bucket size by repeating a real query index, so
+        the padded rows share a compiled shape without perturbing results.
+        """
+        idx = np.asarray(idx, np.int64)
+
+        def sel(a):
+            return None if a is None else a[idx]
+
+        return QueryBatch(
+            self.vectors[idx], self.attrs[idx], mask=sel(self.mask),
+            allowed=sel(self.allowed), hard=sel(self.hard),
+            intervals=sel(self.intervals),
+        )
+
     def __repr__(self) -> str:
         kinds = "point" if self.intervals is None else "interval"
         if self.allowed is not None:

@@ -189,19 +189,31 @@ class StableIndex:
         os.replace(tmp, os.path.join(path, "meta.json"))
 
     @classmethod
-    def load(cls, path: str) -> "StableIndex":
+    def load(cls, path: str, mmap: bool = False) -> "StableIndex":
+        """``mmap=True`` opens the array files with ``mmap_mode="r"`` so
+        host RAM never holds a second full copy during the device
+        transfer — rows stream from the page cache straight into
+        ``jnp.asarray``. Large-corpus loaders (``partition``) rely on the
+        same idiom per partition."""
         with open(os.path.join(path, "meta.json")) as f:
             meta = json.load(f)
         quant_meta = meta.get("quant")
+        mode = "r" if mmap else None
+
+        def arr(name):
+            return jnp.asarray(
+                np.load(os.path.join(path, name), mmap_mode=mode)
+            )
+
         return cls(
-            features=jnp.asarray(np.load(os.path.join(path, "features.npy"))),
-            attrs=jnp.asarray(np.load(os.path.join(path, "attrs.npy"))),
-            graph=jnp.asarray(np.load(os.path.join(path, "graph.npy"))),
+            features=arr("features.npy"),
+            attrs=arr("attrs.npy"),
+            graph=arr("graph.npy"),
             metric_cfg=MetricConfig(**meta["metric_cfg"]),
             help_cfg=HelpConfig(**meta["help_cfg"]),
             stats=DatasetStats(**meta["stats"]),
             quant=(
-                QuantizedVectors.load(path, quant_meta)
+                QuantizedVectors.load(path, quant_meta, mmap=mmap)
                 if quant_meta is not None else None
             ),
         )

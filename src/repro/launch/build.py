@@ -361,7 +361,17 @@ def main() -> None:
                     help="build a mesh-sharded engine over this many model "
                          "shards and save the per-shard layout (0 = "
                          "single-host)")
+    ap.add_argument("--partitions", type=int, default=0,
+                    help="build an IVF-partitioned engine: coarse k-means "
+                         "over this many partitions, each with its own "
+                         "HELP subgraph, saved one-subdirectory-per-"
+                         "partition for streaming residency (0 = flat)")
+    ap.add_argument("--residency-rows", type=int, default=0,
+                    help="partitioned only: device-resident row cap of the "
+                         "built engine's segment store (0 = hold all)")
     args = ap.parse_args()
+    if args.partitions and args.shards:
+        raise SystemExit("--partitions and --shards are mutually exclusive")
 
     ds = make_hybrid_dataset(
         n=args.n, n_queries=1, profile=args.profile, attr_dim=args.attr_dim,
@@ -394,6 +404,21 @@ def main() -> None:
               f"engine in {time.time()-t0:.1f}s → {args.out} "
               f"(per-shard layout; Engine.load reshards onto the serving "
               f"mesh)")
+        return
+    if args.partitions:
+        eng = Engine.build_partitioned(
+            ds.features, ds.attrs, n_partitions=args.partitions,
+            help_cfg=help_cfg, quant_cfg=quant_cfg,
+            build_graph=not args.no_graph,
+            residency_rows=args.residency_rows or None,
+        )
+        eng.save(args.out)
+        pidx = eng.index
+        print(f"built {args.n}×{ds.features.shape[1]} index over "
+              f"{pidx.n_partitions} partitions in {time.time()-t0:.1f}s "
+              f"(α={pidx.metric_cfg.alpha:.3f}, quant={args.quant}) → "
+              f"{args.out} (per-partition layout; Engine.load streams "
+              f"partitions under --residency-rows)")
         return
     eng = Engine.build(
         ds.features, ds.attrs, help_cfg,

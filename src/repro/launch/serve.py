@@ -78,6 +78,10 @@ def main() -> None:
                          "interleaved with the queries")
     ap.add_argument("--write-rate", type=float, default=0.0,
                     help="per-tenant admitted writes/second; 0 = unlimited")
+    ap.add_argument("--residency-rows", type=int, default=0,
+                    help="partitioned --index-dir only: cap of device-"
+                         "resident rows in the streaming segment store "
+                         "(0 = hold every partition)")
     ap.add_argument("--max-delta-rows", type=int, default=1024,
                     help="compaction trigger: merge when the delta holds "
                          "this many rows")
@@ -96,7 +100,10 @@ def main() -> None:
             n_writes = 0
         print(f"loading engine from {args.index_dir} "
               "(one engine reused for the whole stream)")
-        eng = Engine.load(args.index_dir)
+        eng = Engine.load(
+            args.index_dir,
+            residency_rows=args.residency_rows or None,
+        )
     else:
         n_build = args.n - n_writes
         print(f"building index over {n_build} nodes ({args.profile} profile, "

@@ -20,16 +20,20 @@ no full rebuild, logical ids stable forever.
 * ``DeltaSegment`` — capacity-doubling mutable rows + latest-row map.
 * ``CompactionPolicy`` — size + predicted query-cost-regression trigger.
 * ``merge_prepare`` / ``merge_apply`` — the split background merge.
+* ``WriteAheadLog`` — on-disk oplog twin: log-before-apply durability,
+  replay on restart, checkpoint-time reset (``MutableEngine(wal_path=...)``).
 """
 from repro.mutable.delta import DeltaSegment
 from repro.mutable.engine import CompactionPolicy, MutableEngine, WriteOp
 from repro.mutable.merge import PreparedMerge, merge_apply, merge_prepare
+from repro.mutable.wal import WriteAheadLog
 
 __all__ = [
     "CompactionPolicy",
     "DeltaSegment",
     "MutableEngine",
     "PreparedMerge",
+    "WriteAheadLog",
     "WriteOp",
     "merge_apply",
     "merge_prepare",

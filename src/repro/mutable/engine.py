@@ -111,11 +111,25 @@ class MutableEngine:
         self,
         engine: Engine,
         policy: CompactionPolicy = CompactionPolicy(),
+        wal_path: Optional[str] = None,
+        wal_fsync: bool = False,
     ):
+        """``wal_path`` attaches a write-ahead log (``repro.mutable.wal``):
+        every write is logged to disk before it is applied, and an existing
+        log at that path is replayed here — so constructing over the last
+        checkpointed engine reconstructs the exact pre-crash logical state.
+        ``checkpoint`` folds + saves + resets the log."""
         if engine.is_sharded:
             raise ValueError(
                 "MutableEngine wraps single-host engines (the sharded "
                 "index has no incremental link path yet)"
+            )
+        if getattr(engine, "is_partitioned", False):
+            raise ValueError(
+                "MutableEngine wraps single-host flat engines — the "
+                "partitioned index's per-partition graphs have no "
+                "incremental link path; apply writes to the flat engine "
+                "and rebuild partitions, or shard the write stream"
             )
         self.engine = engine
         self.policy = policy
@@ -128,6 +142,21 @@ class MutableEngine:
         self.merge_ms: list = []
         self._served_ids = 0
         self._served_from_delta = 0
+        self.wal = None
+        if wal_path is not None:
+            from repro.mutable.wal import WriteAheadLog
+
+            self.wal = WriteAheadLog(
+                wal_path, self.feat_dim, self.attr_dim, fsync=wal_fsync
+            )
+            for kind, id, vector, attrs in self.wal.replay():
+                # already durable — apply without re-logging
+                self._apply_op(
+                    WriteOp(kind=kind, id=int(id), vector=vector,
+                            attrs=attrs),
+                    log=False,
+                )
+                self._next_id = max(self._next_id, int(id) + 1)
 
     # -- Engine duck-typing ----------------------------------------------------
 
@@ -209,9 +238,15 @@ class MutableEngine:
                 return bool(self.delta.alive[row])
             return 0 <= id < self.engine.n_items and id not in self.tombstones
 
-    def _apply_op(self, op: WriteOp) -> None:
+    def _apply_op(self, op: WriteOp, log: bool = True) -> None:
         """Log + apply one write to the live (delta, tombstones) state —
-        also the merge's replay entry point for post-snapshot ops."""
+        also the merge's replay entry point for post-snapshot ops.
+        ``log=False`` skips the WAL append for ops that are already
+        durable (WAL replay at construction, merge tail re-application)."""
+        if log and self.wal is not None:
+            # log-before-apply: an acknowledged write is on disk before it
+            # is visible, so a crash can lose at most unacknowledged ops
+            self.wal.append(op.kind, op.id, op.vector, op.attrs)
         self.oplog.append(op)
         if op.kind == "upsert":
             self.delta.append(op.id, op.vector, op.attrs)
@@ -326,6 +361,30 @@ class MutableEngine:
         self.merge_ms.append(out["wall_ms"])
         return out
 
+    def checkpoint(self, path: str) -> Optional[dict]:
+        """Fold the delta into the main index, persist the merged engine at
+        ``path`` and shrink the WAL to the persistent tombstone set plus
+        the (usually empty) unmerged tail — after this, restart recovery
+        is ``Engine.load(path)`` + ``MutableEngine(..., wal_path=...)``.
+        Returns the merge stats (None when there was nothing to fold — the
+        save/reset still run)."""
+        stats = self.merge()
+        with self._lock:
+            self.engine.save(path)
+            if self.wal is not None:
+                # the save holds tombstoned ids as physical zombie rows —
+                # the tombstone set itself lives only here, so the reset
+                # log re-states it as delete records, followed by any ops
+                # that raced the merge; replay over Engine.load(path)
+                # reconstructs the exact logical corpus
+                self.wal.reset(
+                    [("delete", t, None, None)
+                     for t in sorted(self.tombstones)]
+                    + [(op.kind, op.id, op.vector, op.attrs)
+                       for op in self.oplog]
+                )
+        return stats
+
     # -- observability ---------------------------------------------------------
 
     def write_stats(self) -> dict:
@@ -338,6 +397,9 @@ class MutableEngine:
                 "tombstones": len(self.tombstones),
                 "logical_n": self.n_items,
                 "oplog_len": len(self.oplog),
+                "wal_bytes": (
+                    self.wal.n_bytes if self.wal is not None else 0
+                ),
                 "merges": self.merge_count,
                 "delta_result_fraction": round(
                     self._served_from_delta / served, 4

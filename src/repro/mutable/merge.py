@@ -79,9 +79,13 @@ def merge_prepare(m: "MutableEngine") -> Optional[PreparedMerge]:
     # as zombies: real (stale) values behind a tombstone can never rank,
     # garbage-initialized rows could
     write_ids = np.asarray(sorted(data), np.int64)
-    feats = np.stack([data[i][0] for i in write_ids])
-    attrs = np.stack([data[i][1] for i in write_ids])
-    new_index = old_index.apply_rows(write_ids, feats, attrs)
+    if write_ids.size:
+        feats = np.stack([data[i][0] for i in write_ids])
+        attrs = np.stack([data[i][1] for i in write_ids])
+        new_index = old_index.apply_rows(write_ids, feats, attrs)
+    else:  # delete-only window (e.g. a replayed tombstone log): nothing
+        # to materialize or link — the swap just refreshes the tombstones
+        new_index = old_index
     n_new = int(new_index.features.shape[0])
 
     # persistent tombstones: ids deleted in this window, ids already
@@ -126,8 +130,10 @@ def merge_apply(m: "MutableEngine", prepared: PreparedMerge) -> dict:
         m.tombstones = set(prepared.tombstones)
         m.delta = DeltaSegment(m.feat_dim, m.attr_dim)
         m.oplog = []
-        for op in tail:  # writes that raced the prepare re-apply (re-log)
-            m._apply_op(op)
+        for op in tail:  # writes that raced the prepare re-apply into the
+            # fresh delta (log=False: they are already in the WAL — only
+            # the in-memory oplog was cleared)
+            m._apply_op(op, log=False)
         m.merge_count += 1
         stats = {
             "merged_ops": prepared.upto,

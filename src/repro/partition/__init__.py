@@ -1,0 +1,37 @@
+"""Out-of-core scale: IVF coarse partitions over HELP subgraphs.
+
+* ``kmeans``  — mini-batch k-means coarse quantizer (trained in JAX)
+* ``index``   — ``PartitionedStableIndex``: per-partition subgraphs, codes,
+  attribute summaries, save/load (one subdirectory per partition, mmap'd)
+* ``store``   — ``SegmentStore``: LRU streaming residency under a row cap
+* ``search``  — ``PartitionedSearcher`` (imported lazily by ``api.Engine``
+  to keep this package import-light; do not import it here — it imports the
+  engine back)
+"""
+from repro.partition.kmeans import CoarseQuantizer, assign_partitions, train_coarse
+from repro.partition.index import (
+    PARTITIONED_FORMAT,
+    PartitionSummaries,
+    PartitionedStableIndex,
+    is_partitioned_dir,
+)
+from repro.partition.store import (
+    PartitionData,
+    ResidentPartition,
+    SegmentStore,
+    row_bucket,
+)
+
+__all__ = [
+    "PARTITIONED_FORMAT",
+    "CoarseQuantizer",
+    "PartitionData",
+    "PartitionSummaries",
+    "PartitionedStableIndex",
+    "ResidentPartition",
+    "SegmentStore",
+    "assign_partitions",
+    "is_partitioned_dir",
+    "row_bucket",
+    "train_coarse",
+]

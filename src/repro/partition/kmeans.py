@@ -1,0 +1,135 @@
+"""Coarse quantizer: mini-batch k-means over the feature space (JAX).
+
+The IVF layer in front of HELP (``repro.partition.index``) routes queries by
+nearest coarse centroid, so the quantizer only has to carve the corpus into
+P geometrically coherent partitions — mini-batch k-means (Sculley-style
+per-center learning rates) gets there in a few dozen 4k-row batches without
+ever holding more than one mini-batch on device, which keeps the build path
+memmap-friendly for corpora beyond host RAM.
+
+Assignment is chunked for the same reason: ``assign`` walks the (possibly
+memory-mapped) feature array ``chunk_rows`` at a time, so the full (N, P)
+distance matrix never materializes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+__all__ = ["CoarseQuantizer", "assign_partitions", "train_coarse"]
+
+
+@jax.jit
+def _sqdist(x: Array, c: Array) -> Array:
+    """(B, M) × (P, M) → (B, P) squared L2."""
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=1)[None, :]
+    return jnp.maximum(x2 + c2 - 2.0 * (x @ c.T), 0.0)
+
+
+@jax.jit
+def _minibatch_step(
+    centroids: Array, counts: Array, batch: Array
+) -> tuple[Array, Array]:
+    """One mini-batch k-means update with per-center 1/count learning rates."""
+    a = jnp.argmin(_sqdist(batch, centroids), axis=1)  # (B,)
+    oh = jax.nn.one_hot(a, centroids.shape[0], dtype=jnp.float32)  # (B, P)
+    cnt_b = oh.sum(axis=0)  # (P,)
+    sum_b = oh.T @ batch  # (P, M)
+    counts_new = counts + cnt_b
+    mean_b = sum_b / jnp.maximum(cnt_b, 1.0)[:, None]
+    lr = (cnt_b / jnp.maximum(counts_new, 1.0))[:, None]
+    centroids_new = centroids + lr * (mean_b - centroids)
+    # centers that saw nothing this batch stay put exactly
+    centroids_new = jnp.where(cnt_b[:, None] > 0, centroids_new, centroids)
+    return centroids_new, counts_new
+
+
+@dataclasses.dataclass
+class CoarseQuantizer:
+    """Trained coarse centroids (host copy; device copy cached on demand)."""
+
+    centroids: np.ndarray  # (P, M) f32
+
+    _dev: Optional[Array] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+
+    @property
+    def n_partitions(self) -> int:
+        return int(self.centroids.shape[0])
+
+    @property
+    def device_centroids(self) -> Array:
+        if self._dev is None:
+            self._dev = jnp.asarray(self.centroids)
+        return self._dev
+
+    def scores(self, qv) -> Array:
+        """(B, P) squared centroid distances — the coarse routing signal."""
+        return _sqdist(jnp.asarray(qv, jnp.float32), self.device_centroids)
+
+    def assign(self, features, chunk_rows: int = 200_000) -> np.ndarray:
+        """(N,) nearest-centroid partition id, chunked over (memmap) rows."""
+        return assign_partitions(features, self.centroids, chunk_rows)
+
+    # -- persistence ---------------------------------------------------------
+
+    def save(self, path: str) -> None:
+        np.save(os.path.join(path, "coarse_centroids.npy"), self.centroids)
+
+    @classmethod
+    def load(cls, path: str) -> "CoarseQuantizer":
+        return cls(np.load(os.path.join(path, "coarse_centroids.npy")))
+
+
+def assign_partitions(
+    features, centroids: np.ndarray, chunk_rows: int = 200_000
+) -> np.ndarray:
+    """Nearest-centroid assignment without materializing (N, P)."""
+    c = jnp.asarray(centroids, jnp.float32)
+    n = features.shape[0]
+    out = np.empty(n, np.int32)
+    for i in range(0, n, chunk_rows):
+        x = jnp.asarray(np.asarray(features[i : i + chunk_rows]), jnp.float32)
+        out[i : i + x.shape[0]] = np.asarray(
+            jnp.argmin(_sqdist(x, c), axis=1).astype(jnp.int32)
+        )
+    return out
+
+
+def train_coarse(
+    features,
+    n_partitions: int,
+    n_iters: int = 50,
+    batch_size: int = 4096,
+    seed: int = 0,
+) -> CoarseQuantizer:
+    """Mini-batch k-means: init from random rows, ``n_iters`` sampled batches.
+
+    ``features`` may be any row-indexable host array (ndarray or np.memmap);
+    only one mini-batch is ever resident on device.
+    """
+    n = int(features.shape[0])
+    if n_partitions <= 0:
+        raise ValueError("n_partitions must be positive")
+    if n_partitions > n:
+        raise ValueError(f"n_partitions={n_partitions} exceeds corpus n={n}")
+    rng = np.random.default_rng(seed)
+    init_idx = np.sort(rng.choice(n, size=n_partitions, replace=False))
+    centroids = jnp.asarray(np.asarray(features[init_idx]), jnp.float32)
+    counts = jnp.zeros((n_partitions,), jnp.float32)
+    b = min(batch_size, n)
+    for _ in range(n_iters):
+        take = np.sort(rng.choice(n, size=b, replace=False))
+        batch = jnp.asarray(np.asarray(features[take]), jnp.float32)
+        centroids, counts = _minibatch_step(centroids, counts, batch)
+    return CoarseQuantizer(np.asarray(centroids))

@@ -1,0 +1,168 @@
+"""Streaming shard residency: LRU-bounded device cache over partitions.
+
+``SegmentStore`` is the out-of-core half of the IVF layer. Partitions live
+cold on disk (or as host memmaps) and are materialized on device only while
+they are being probed, under a hard **resident-row cap**: before a miss is
+loaded the store evicts least-recently-used partitions until the incoming
+rows fit, so ``peak_resident_rows`` never exceeds the cap (the one documented
+exception: a single partition larger than the whole cap still loads after
+evicting everything — size the cap above the largest partition bucket).
+
+Rows are accounted at their padded *bucket* size (next power of two, floor
+``bucket_min``) because that is what actually occupies device memory — the
+same bucketing lets the executor share jit traces across partitions of
+different true sizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph_ops import INVALID
+
+Array = jax.Array
+
+__all__ = ["PartitionData", "ResidentPartition", "SegmentStore", "row_bucket"]
+
+
+def row_bucket(n: int, bucket_min: int = 256) -> int:
+    """Next power-of-two row count ≥ max(n, bucket_min)."""
+    b = bucket_min
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass
+class PartitionData:
+    """Host-side (possibly memory-mapped) partition payload from a loader."""
+
+    features: np.ndarray  # (n, M) f32
+    attrs: np.ndarray  # (n, L) i32
+    graph: np.ndarray  # (n, Γ) i32 — Γ=0 when built scan-only
+    codes: Optional[np.ndarray]  # (n, ...) quantized codes or None
+    row_ids: np.ndarray  # (n,) global row ids
+
+
+@dataclasses.dataclass
+class ResidentPartition:
+    """Device-resident partition, padded up to its row bucket.
+
+    Pad rows carry zero features/attrs/codes, all-INVALID adjacency and
+    ``row_ids == -1``; every consumer masks on ``local < n_real``.
+    """
+
+    features: Array  # (b, M)
+    attrs: Array  # (b, L)
+    graph: Array  # (b, Γ)
+    codes: Optional[Array]
+    row_ids: Array  # (b,) i32, -1 beyond n_real
+    n_real: int
+    n_pad: int  # the bucket b — rows charged against the residency cap
+
+
+def _pad_rows(a: np.ndarray, b: int, fill=0) -> np.ndarray:
+    pad = [(0, b - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+    return np.pad(a, pad, constant_values=fill)
+
+
+class SegmentStore:
+    """LRU residency manager keyed by partition id.
+
+    ``loader(pid)`` produces host ``PartitionData``; the store pads it to its
+    row bucket, device-puts, and tracks rows against ``cap_rows`` with an
+    evict-before-load policy. Counters (``hits``/``loads``/``evictions``) and
+    gauges (``resident_rows``/``peak_resident_rows``) back both the scale
+    benchmark and the residency tests.
+    """
+
+    def __init__(
+        self,
+        loader: Callable[[int], PartitionData],
+        cap_rows: int,
+        bucket_min: int = 256,
+    ):
+        if cap_rows <= 0:
+            raise ValueError("cap_rows must be positive")
+        self.loader = loader
+        self.cap_rows = int(cap_rows)
+        self.bucket_min = int(bucket_min)
+        self._resident: "OrderedDict[int, ResidentPartition]" = OrderedDict()
+        self.hits = 0
+        self.loads = 0
+        self.evictions = 0
+        self.resident_rows = 0
+        self.peak_resident_rows = 0
+
+    # -- residency -------------------------------------------------------
+
+    def get(self, pid: int) -> ResidentPartition:
+        hit = self._resident.get(pid)
+        if hit is not None:
+            self._resident.move_to_end(pid)
+            self.hits += 1
+            return hit
+        part = self._materialize(pid)
+        # evict-before-load keeps the peak gauge under the cap
+        while self._resident and self.resident_rows + part.n_pad > self.cap_rows:
+            self._evict_lru()
+        self._resident[pid] = part
+        self.loads += 1
+        self.resident_rows += part.n_pad
+        self.peak_resident_rows = max(self.peak_resident_rows, self.resident_rows)
+        return part
+
+    def _materialize(self, pid: int) -> ResidentPartition:
+        data = self.loader(pid)
+        n = int(data.features.shape[0])
+        b = row_bucket(n, self.bucket_min)
+        dev = jax.device_put
+        return ResidentPartition(
+            features=dev(_pad_rows(np.asarray(data.features, np.float32), b)),
+            attrs=dev(_pad_rows(np.asarray(data.attrs, np.int32), b)),
+            graph=dev(
+                _pad_rows(np.asarray(data.graph, np.int32), b, fill=INVALID)
+            ),
+            codes=(
+                None
+                if data.codes is None
+                else dev(_pad_rows(np.asarray(data.codes), b))
+            ),
+            row_ids=dev(_pad_rows(np.asarray(data.row_ids, np.int32), b, fill=-1)),
+            n_real=n,
+            n_pad=b,
+        )
+
+    def _evict_lru(self) -> None:
+        _, part = self._resident.popitem(last=False)
+        self.resident_rows -= part.n_pad
+        self.evictions += 1
+
+    def evict_all(self) -> None:
+        while self._resident:
+            self._evict_lru()
+
+    # -- introspection -----------------------------------------------------
+
+    def resident_ids(self) -> list[int]:
+        return list(self._resident.keys())
+
+    def stats(self) -> dict:
+        return {
+            "hits": self.hits,
+            "loads": self.loads,
+            "evictions": self.evictions,
+            "resident_partitions": len(self._resident),
+            "resident_rows": self.resident_rows,
+            "peak_resident_rows": self.peak_resident_rows,
+            "cap_rows": self.cap_rows,
+        }
+
+    def reset_counters(self) -> None:
+        self.hits = self.loads = self.evictions = 0
+        self.peak_resident_rows = self.resident_rows

@@ -96,9 +96,12 @@ class QuantizedVectors:
                 "dim": self.codebook.dim if self.codebook else None}
 
     @classmethod
-    def load(cls, path: str, meta: dict) -> "QuantizedVectors":
+    def load(cls, path: str, meta: dict, mmap: bool = False) -> "QuantizedVectors":
         cfg = QuantConfig(**meta["cfg"])
-        codes = jnp.asarray(np.load(os.path.join(path, "quant_codes.npy")))
+        codes = jnp.asarray(np.load(
+            os.path.join(path, "quant_codes.npy"),
+            mmap_mode="r" if mmap else None,
+        ))
         sq_params = None
         codebook = None
         if cfg.mode == "sq8":

@@ -515,3 +515,175 @@ class TestFreshnessEndToEnd:
                              ds.attrs[deleted[:8]]),
             SearchParams(k=K, pool_size=POOL)).ids)
         assert not np.isin(ids, np.asarray(deleted)).any()
+
+
+# ---------------------------------------------------------------------------
+# Write-ahead log
+# ---------------------------------------------------------------------------
+
+
+class TestWriteAheadLog:
+    """repro.mutable.wal: record encoding, torn-tail recovery, and the
+    MutableEngine replay / checkpoint lifecycle."""
+
+    def _wal(self, tmp_path, feat_dim=4, attr_dim=2):
+        from repro.mutable.wal import WriteAheadLog
+
+        return WriteAheadLog(str(tmp_path / "wal.log"), feat_dim, attr_dim)
+
+    def test_append_replay_roundtrip(self, tmp_path):
+        w = self._wal(tmp_path)
+        v0 = np.arange(4, dtype=np.float32)
+        a0 = np.array([1, 2], np.int32)
+        w.append("upsert", 7, v0, a0)
+        w.append("delete", 3)
+        w.append("upsert", 8, v0 * 2, a0 + 1)
+        ops = w.replay()
+        assert [(k, i) for k, i, _, _ in ops] == [
+            ("upsert", 7), ("delete", 3), ("upsert", 8)]
+        np.testing.assert_array_equal(ops[0][2], v0)
+        np.testing.assert_array_equal(ops[0][3], a0)
+        assert ops[1][2] is None and ops[1][3] is None
+        np.testing.assert_array_equal(ops[2][2], v0 * 2)
+        w.close()
+
+    def test_reopen_validates_header(self, tmp_path):
+        from repro.mutable.wal import WriteAheadLog
+
+        w = self._wal(tmp_path)
+        w.append("delete", 1)
+        w.close()
+        # same dims reopen fine and see the record
+        w2 = WriteAheadLog(str(tmp_path / "wal.log"), 4, 2)
+        assert len(w2.replay()) == 1
+        w2.close()
+        with pytest.raises(ValueError, match="dims"):
+            WriteAheadLog(str(tmp_path / "wal.log"), 5, 2)
+        (tmp_path / "junk.log").write_bytes(b"not json\n")
+        with pytest.raises(ValueError, match="bad header"):
+            WriteAheadLog(str(tmp_path / "junk.log"), 4, 2)
+
+    def test_torn_tail_truncated(self, tmp_path):
+        w = self._wal(tmp_path)
+        v = np.zeros(4, np.float32)
+        a = np.zeros(2, np.int32)
+        w.append("upsert", 1, v, a)
+        w.append("upsert", 2, v, a)
+        w.close()
+        path = str(tmp_path / "wal.log")
+        import os
+
+        full = os.path.getsize(path)
+        with open(path, "r+b") as f:
+            f.truncate(full - 5)  # crash mid-record
+        w2 = self._wal(tmp_path)
+        ops = w2.replay()
+        assert [i for _, i, _, _ in ops] == [1]  # torn record dropped
+        # the tail was truncated at a record boundary: appends resume clean
+        w2.append("delete", 9)
+        assert [(k, i) for k, i, _, _ in w2.replay()] == [
+            ("upsert", 1), ("delete", 9)]
+        w2.close()
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        w = self._wal(tmp_path)
+        with pytest.raises(ValueError, match="WAL dims"):
+            w.append("upsert", 1, np.zeros(3, np.float32),
+                     np.zeros(2, np.int32))
+        with pytest.raises(ValueError, match="unknown op kind"):
+            w.append("compact", 1)
+        w.close()
+
+    def test_reset_shrinks_to_tail(self, tmp_path):
+        w = self._wal(tmp_path)
+        v = np.ones(4, np.float32)
+        a = np.ones(2, np.int32)
+        for i in range(5):
+            w.append("upsert", i, v, a)
+        w.reset([("delete", 42, None, None)])
+        ops = w.replay()
+        assert [(k, i) for k, i, _, _ in ops] == [("delete", 42)]
+        w.append("upsert", 43, v, a)
+        assert len(w.replay()) == 2
+        w.close()
+
+
+class TestWalEngineLifecycle:
+    def test_replay_reconstructs_state(self, base_indexes, ds, tmp_path):
+        wal = str(tmp_path / "m.wal")
+        m = MutableEngine(_engine(base_indexes, "none"),
+                          CompactionPolicy(max_delta_rows=10 ** 9),
+                          wal_path=wal)
+        inserted, overwrites, deleted = _apply_script(m, ds)
+        assert m.write_stats()["wal_bytes"] > 0
+        # brute is fully deterministic — the measured cost model can
+        # legitimately plan m and m2 differently under wall-clock noise
+        sp = SearchParams(k=K, pool_size=POOL, backend="brute")
+        ref = m.search(
+            QueryBatch.match(ds.features[:16], ds.attrs[:16]), sp)
+
+        # "crash": rebuild over the same frozen base + WAL, no merge ran
+        m2 = MutableEngine(_engine(base_indexes, "none"),
+                           CompactionPolicy(max_delta_rows=10 ** 9),
+                           wal_path=wal)
+        assert m2.n_items == m.n_items
+        assert m2.tombstones == m.tombstones
+        assert not any(m2.exists(i) for i in deleted)
+        assert m2._next_id == m._next_id
+        res = m2.search(
+            QueryBatch.match(ds.features[:16], ds.attrs[:16]), sp)
+        np.testing.assert_array_equal(np.asarray(res.ids),
+                                      np.asarray(ref.ids))
+        np.testing.assert_array_equal(np.asarray(res.sqdists),
+                                      np.asarray(ref.sqdists))
+        m.wal.close()
+        m2.wal.close()
+
+    def test_checkpoint_folds_and_resets(self, base_indexes, ds, tmp_path):
+        wal = str(tmp_path / "c.wal")
+        m = MutableEngine(_engine(base_indexes, "none"),
+                          CompactionPolicy(max_delta_rows=10 ** 9),
+                          wal_path=wal)
+        inserted, overwrites, deleted = _apply_script(m, ds)
+        grown = m.write_stats()["wal_bytes"]
+        out = str(tmp_path / "ckpt")
+        stats = m.checkpoint(out)
+        assert stats is not None and stats["linked"] == 50
+        assert m.delta.n_rows == 0 and not m.oplog
+        # log shrank to the tombstone restatement (15 deletes ≪ 50 upserts)
+        assert m.write_stats()["wal_bytes"] < grown
+        sp = SearchParams(k=K, pool_size=POOL, backend="brute")
+        ref = m.search(
+            QueryBatch.match(ds.features[:16], ds.attrs[:16]), sp)
+
+        # restart recovery = load checkpoint + replay the tombstone log
+        m2 = MutableEngine(Engine.load(out), wal_path=wal)
+        assert m2.n_items == m.n_items
+        assert m2.tombstones == m.tombstones
+        assert not any(m2.exists(i) for i in deleted)
+        assert m2.delta.n_rows == 0
+        res = m2.search(
+            QueryBatch.match(ds.features[:16], ds.attrs[:16]), sp)
+        np.testing.assert_array_equal(np.asarray(res.ids),
+                                      np.asarray(ref.ids))
+        m.wal.close()
+        m2.wal.close()
+
+    def test_merge_keeps_wal_replayable(self, base_indexes, ds, tmp_path):
+        """merge() alone is an in-memory optimization — the WAL still
+        holds every op, so replay over the *original* base reconstructs
+        the same logical corpus."""
+        wal = str(tmp_path / "g.wal")
+        m = MutableEngine(_engine(base_indexes, "none"),
+                          CompactionPolicy(max_delta_rows=10 ** 9),
+                          wal_path=wal)
+        _, _, deleted = _apply_script(m, ds)
+        m.merge()
+        logical = m.n_items
+        m2 = MutableEngine(_engine(base_indexes, "none"),
+                           CompactionPolicy(max_delta_rows=10 ** 9),
+                           wal_path=wal)
+        assert m2.n_items == logical
+        assert not any(m2.exists(i) for i in deleted)
+        m.wal.close()
+        m2.wal.close()

@@ -1,0 +1,453 @@
+"""Out-of-core IVF partition layer (repro.partition).
+
+The load-bearing property: a partitioned engine probing every partition
+with the brute sub-backend is **bit-identical** to the flat brute oracle —
+per-partition top-k under lexicographic (score, global-id) order merges to
+exactly the global top-k, across every codec and predicate kind. On top of
+that: coarse-quantizer invariants, SegmentStore LRU residency under the row
+cap, conservative summary pruning, planner/executor wiring, the
+per-partition save/load layout, and the MutableEngine guard.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    ANY, BETWEEN, MATCH, ONE_OF, Engine, Query, QueryBatch, SearchParams,
+)
+from repro.api import planner as planner_mod
+from repro.core.help_graph import HelpConfig
+from repro.data.synthetic import make_hybrid_dataset
+from repro.mutable import MutableEngine
+from repro.partition import (
+    PartitionData, PartitionedStableIndex, SegmentStore, assign_partitions,
+    is_partitioned_dir, row_bucket, train_coarse,
+)
+from repro.quant import QuantConfig
+
+N, P, NQ, K = 900, 5, 10, 10
+CFG = HelpConfig(gamma=6, gamma_new=3, max_rounds=4)
+MODES = ("none", "sq8", "pq")
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_hybrid_dataset(
+        n=N, n_queries=NQ, profile="deep", attr_dim=3, labels_per_dim=3,
+        n_clusters=8, attr_cluster_corr=0.6, seed=0,
+    )
+
+
+@pytest.fixture(scope="module")
+def engines(ds):
+    """(flat, partitioned) engine pair per codec over the same corpus."""
+    out = {}
+    for mode in MODES:
+        qc = QuantConfig(mode=mode, pq_subspaces=8)
+        out[mode] = (
+            Engine.build(ds.features, ds.attrs, CFG, quant_cfg=qc),
+            Engine.build_partitioned(
+                ds.features, ds.attrs, n_partitions=P, help_cfg=CFG,
+                quant_cfg=qc,
+            ),
+        )
+    return out
+
+
+def _batches(ds) -> dict:
+    """One QueryBatch per predicate kind (shared across parity cases)."""
+    qv, qa = ds.query_features, ds.query_attrs
+    lab = int(ds.attrs.max()) + 1
+    one_of = [
+        Query(qv[i], [
+            ONE_OF(int(qa[i, 0]), int(qa[i, 0] + 1) % lab),
+            MATCH(int(qa[i, 1])), ANY,
+        ])
+        for i in range(qv.shape[0])
+    ]
+    between = [
+        Query(qv[i], [
+            BETWEEN(int(qa[i, 0]), min(int(qa[i, 0]) + 1, lab - 1)),
+            ANY, MATCH(int(qa[i, 2])),
+        ])
+        for i in range(qv.shape[0])
+    ]
+    return {
+        "match": QueryBatch.match(qv, qa),
+        "match_subset": QueryBatch.match(qv, qa, active=[0]),
+        "one_of": QueryBatch.from_queries(one_of),
+        "between": QueryBatch.from_queries(between),
+    }
+
+
+def _assert_bit_equal(res, ref, ctx=""):
+    np.testing.assert_array_equal(
+        np.asarray(res.ids), np.asarray(ref.ids), err_msg=f"{ctx}: ids"
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.dists), np.asarray(ref.dists), err_msg=f"{ctx}: dists"
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.sqdists), np.asarray(ref.sqdists),
+        err_msg=f"{ctx}: sqdists",
+    )
+
+
+# ---------------------------------------------------------------------------
+# coarse quantizer
+# ---------------------------------------------------------------------------
+
+
+class TestCoarseQuantizer:
+    def test_train_and_assign_cover_all_rows(self, ds):
+        cq = train_coarse(ds.features, P, n_iters=8, seed=0)
+        assert cq.centroids.shape == (P, ds.features.shape[1])
+        assert np.isfinite(cq.centroids).all()
+        assign = assign_partitions(ds.features, cq.centroids)
+        assert assign.shape == (N,)
+        assert assign.min() >= 0 and assign.max() < P
+        # chunked assignment ≡ the one-shot scorer's argmin
+        scores = np.asarray(cq.scores(ds.features))
+        np.testing.assert_array_equal(assign, scores.argmin(axis=1))
+
+    def test_scores_are_sq_centroid_dists(self, ds):
+        cq = train_coarse(ds.features, P, n_iters=4, seed=1)
+        got = np.asarray(cq.scores(ds.features[:7]))
+        want = (
+            (ds.features[:7, None, :] - cq.centroids[None, :, :]) ** 2
+        ).sum(-1)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# SegmentStore residency
+# ---------------------------------------------------------------------------
+
+
+def _fake_loader(sizes: dict):
+    def load(pid: int) -> PartitionData:
+        n = sizes[pid]
+        return PartitionData(
+            features=np.zeros((n, 4), np.float32),
+            attrs=np.zeros((n, 2), np.int32),
+            graph=np.zeros((n, 0), np.int32),
+            codes=None,
+            row_ids=np.arange(n, dtype=np.int32),
+        )
+
+    return load
+
+
+class TestSegmentStore:
+    def test_row_bucket(self):
+        assert row_bucket(0) == 256
+        assert row_bucket(256) == 256
+        assert row_bucket(257) == 512
+        assert row_bucket(5000) == 8192
+        assert row_bucket(10, bucket_min=8) == 16
+
+    def test_lru_eviction_respects_cap(self):
+        sizes = {i: 100 for i in range(4)}  # bucket 256 each
+        store = SegmentStore(_fake_loader(sizes), cap_rows=512)
+        store.get(0)
+        store.get(1)
+        assert store.resident_ids() == [0, 1]
+        store.get(2)  # evicts 0 (LRU)
+        assert store.resident_ids() == [1, 2]
+        store.get(1)  # hit refreshes recency
+        store.get(3)  # now 2 is LRU
+        assert store.resident_ids() == [1, 3]
+        st = store.stats()
+        assert st["hits"] == 1 and st["loads"] == 4 and st["evictions"] == 2
+        assert st["peak_resident_rows"] <= 512
+        assert st["resident_rows"] == 512
+
+    def test_evict_before_load_bounds_peak(self):
+        sizes = {i: 200 for i in range(6)}
+        store = SegmentStore(_fake_loader(sizes), cap_rows=768)
+        for pid in range(6):
+            store.get(pid)
+        assert store.peak_resident_rows <= 768
+
+    def test_oversized_partition_still_loads(self):
+        store = SegmentStore(_fake_loader({0: 100, 1: 3000}), cap_rows=512)
+        store.get(0)
+        part = store.get(1)  # bucket 4096 > cap: evicts all, loads anyway
+        assert part.n_real == 3000 and part.n_pad == 4096
+        assert store.resident_ids() == [1]
+
+    def test_padding_and_masks(self):
+        store = SegmentStore(_fake_loader({0: 10}), cap_rows=4096)
+        part = store.get(0)
+        assert part.n_real == 10 and part.n_pad == 256
+        rid = np.asarray(part.row_ids)
+        assert (rid[:10] >= 0).all() and (rid[10:] == -1).all()
+
+    def test_reset_counters_keeps_residency(self):
+        store = SegmentStore(_fake_loader({0: 100, 1: 100}), cap_rows=1024)
+        store.get(0)
+        store.get(1)
+        store.reset_counters()
+        st = store.stats()
+        assert st["loads"] == 0 and st["peak_resident_rows"] == 512
+        assert st["resident_rows"] == 512
+
+
+# ---------------------------------------------------------------------------
+# full-probe bit parity vs the flat brute oracle
+# ---------------------------------------------------------------------------
+
+
+class TestFullProbeParity:
+    @pytest.mark.parametrize("mode", MODES)
+    @pytest.mark.parametrize(
+        "kind", ["match", "match_subset", "one_of", "between"]
+    )
+    def test_nprobe_p_bit_exact(self, engines, ds, mode, kind):
+        flat, part = engines[mode]
+        qb = _batches(ds)[kind]
+        ref = flat.search(qb, SearchParams(k=K, backend="brute"))
+        res = part.search(
+            qb, SearchParams(k=K, nprobe=P, sub_backend="brute")
+        )
+        _assert_bit_equal(res, ref, f"{mode}/{kind}")
+
+    def test_exact_eval_counters_match_full_scan(self, engines, ds):
+        _, part = engines["none"]
+        qb = _batches(ds)["match"]
+        res = part.search(
+            qb, SearchParams(k=K, nprobe=P, sub_backend="brute")
+        )
+        assert (np.asarray(res.n_dist_evals) == N).all()
+
+    def test_pq_counter_conventions(self, engines, ds):
+        flat, part = engines["pq"]
+        qb = _batches(ds)["match"]
+        ref = flat.search(qb, SearchParams(k=K, backend="brute"))
+        res = part.search(
+            qb, SearchParams(k=K, nprobe=P, sub_backend="brute")
+        )
+        # same pool-sized exact rerank, same full code scan
+        np.testing.assert_array_equal(
+            np.asarray(res.n_dist_evals), np.asarray(ref.n_dist_evals)
+        )
+        assert (np.asarray(res.n_code_evals) == N).all()
+
+
+# ---------------------------------------------------------------------------
+# pruning: conservative, never drops a survivor partition
+# ---------------------------------------------------------------------------
+
+
+class TestPruning:
+    @pytest.mark.parametrize(
+        "kind", ["match", "match_subset", "one_of", "between"]
+    )
+    def test_survivor_mask_covers_admissible_rows(self, engines, ds, kind):
+        pidx = engines["none"][1].index
+        qb = _batches(ds)[kind]
+        ok = pidx.survivor_mask(qb, hard_all=True)  # (B, P)
+        adm = np.asarray(qb.admissible(ds.attrs))  # (B, N) hard semantics
+        assign = assign_partitions(ds.features, pidx.quantizer.centroids)
+        for b in range(qb.batch_size):
+            rows = np.where(adm[b])[0]
+            needed = np.unique(assign[rows])
+            assert ok[b, needed].all(), (
+                f"query {b} pruned a partition holding admissible rows"
+            )
+
+    def test_soft_dims_not_pruned_under_traversal(self, engines, ds):
+        pidx = engines["none"][1].index
+        qb = _batches(ds)["match"]  # all-MATCH, soft unless hard_all
+        ok = pidx.survivor_mask(qb, hard_all=False)
+        assert ok.all()  # only empty partitions may drop, none here
+
+    def test_probe_orders_by_centroid_score(self, engines, ds):
+        pidx = engines["none"][1].index
+        qb = _batches(ds)["match"]
+        probes = pidx.probe(qb, nprobe=P, hard_all=False)
+        scores = np.asarray(pidx.quantizer.scores(qb.vectors))
+        np.testing.assert_array_equal(
+            probes, np.argsort(scores, axis=1, kind="stable")
+        )
+
+
+# ---------------------------------------------------------------------------
+# planner / executor wiring
+# ---------------------------------------------------------------------------
+
+
+class TestPlannerExecutor:
+    def test_auto_plans_partitioned_with_sqrt_p_nprobe(self, engines, ds):
+        _, part = engines["none"]
+        plan = part.plan(_batches(ds)["match"], SearchParams(k=K))
+        assert plan.backend == "partitioned"
+        assert plan.nprobe == round(P ** 0.5)
+        assert plan.sub_backend in ("graph", "brute")
+
+    def test_explicit_nprobe_clamped(self, engines, ds):
+        _, part = engines["none"]
+        qb = _batches(ds)["match"]
+        assert part.plan(qb, SearchParams(nprobe=3)).nprobe == 3
+        assert part.plan(qb, SearchParams(nprobe=99)).nprobe == P
+
+    def test_sub_backend_override(self, engines, ds):
+        _, part = engines["none"]
+        qb = _batches(ds)["match"]
+        assert part.plan(
+            qb, SearchParams(sub_backend="graph")
+        ).sub_backend == "graph"
+        plan = part.plan(qb, SearchParams(sub_backend="brute"))
+        assert plan.sub_backend == "brute" and plan.routing_cfg is None
+
+    def test_backend_validation(self, engines, ds):
+        flat, part = engines["none"]
+        qb = _batches(ds)["match"]
+        with pytest.raises(ValueError, match="unavailable on a partitioned"):
+            part.plan(qb, SearchParams(backend="graph"))
+        with pytest.raises(ValueError, match="needs a partitioned index"):
+            flat.plan(qb, SearchParams(backend="partitioned"))
+        with pytest.raises(ValueError, match="unknown sub_backend"):
+            SearchParams(sub_backend="bogus")
+
+    def test_no_calibration_probe_on_partitioned(self, engines):
+        _, part = engines["none"]
+        before = planner_mod.calibration_count()
+        part.cost_model  # default model, no traversal probe possible
+        assert planner_mod.calibration_count() == before
+
+    def test_signatures_keyed_by_nprobe_and_sub_backend(self, engines, ds):
+        _, part = engines["none"]
+        qb = _batches(ds)["match"]
+        ex = part.executor
+        base = ex.stats()["misses"]
+        part.search(qb, SearchParams(k=K, nprobe=2, sub_backend="brute"))
+        part.search(qb, SearchParams(k=K, nprobe=3, sub_backend="brute"))
+        assert ex.stats()["misses"] == base + 2  # distinct signatures
+        hits = ex.stats()["hits"]
+        part.search(qb, SearchParams(k=K, nprobe=3, sub_backend="brute"))
+        assert ex.stats()["hits"] == hits + 1  # repeat is a cache hit
+
+    def test_graph_sub_backend_runs_with_residency(self, engines, ds):
+        _, part = engines["none"]
+        qb = _batches(ds)["match"]
+        cap = max(
+            row_bucket(int(r)) for r in part.index.summaries.n_rows
+        ) * 2
+        part.index.set_residency(cap)
+        store = part.index.store
+        res = part.search(
+            qb, SearchParams(k=K, nprobe=P, sub_backend="graph",
+                             pool_size=32)
+        )
+        assert np.asarray(res.ids).shape == (NQ, K)
+        assert (np.asarray(res.ids)[:, 0] >= 0).all()
+        assert store.peak_resident_rows <= cap
+        part.index.set_residency(None)
+
+
+# ---------------------------------------------------------------------------
+# persistence: per-partition layout, mmap, residency plumb-through
+# ---------------------------------------------------------------------------
+
+
+class TestSaveLoad:
+    @pytest.mark.parametrize("mode", MODES)
+    def test_roundtrip_bit_exact(self, engines, ds, tmp_path, mode):
+        _, part = engines[mode]
+        path = str(tmp_path / f"pidx_{mode}")
+        part.save(path)
+        assert is_partitioned_dir(path)
+        loaded = Engine.load(path)
+        assert loaded.is_partitioned
+        assert loaded.n_items == N
+        assert loaded.index.n_partitions == P
+        np.testing.assert_array_equal(
+            loaded.index.summaries.n_rows, part.index.summaries.n_rows
+        )
+        qb = _batches(ds)["one_of"]
+        for sub in ("brute", "graph"):
+            ref = part.search(
+                qb, SearchParams(k=K, nprobe=P, sub_backend=sub)
+            )
+            res = loaded.search(
+                qb, SearchParams(k=K, nprobe=P, sub_backend=sub)
+            )
+            _assert_bit_equal(res, ref, f"load/{mode}/{sub}")
+
+    def test_load_residency_cap_applies(self, engines, tmp_path):
+        _, part = engines["none"]
+        path = str(tmp_path / "pidx_cap")
+        part.save(path)
+        cap = max(
+            row_bucket(int(r)) for r in part.index.summaries.n_rows
+        )
+        loaded = Engine.load(path, residency_rows=cap)
+        assert loaded.index.store.cap_rows == cap
+
+    def test_residency_rows_rejected_on_flat(self, engines, tmp_path):
+        flat, _ = engines["none"]
+        path = str(tmp_path / "flat")
+        flat.save(path)
+        with pytest.raises(ValueError, match="residency_rows"):
+            Engine.load(path, residency_rows=1024)
+
+    def test_flat_mmap_load_matches(self, engines, ds, tmp_path):
+        flat, _ = engines["pq"]
+        path = str(tmp_path / "flat_mmap")
+        flat.save(path)
+        a = Engine.load(path)
+        b = Engine.load(path, mmap=True)
+        np.testing.assert_array_equal(
+            np.asarray(a.index.features), np.asarray(b.index.features)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(a.index.quant.codes), np.asarray(b.index.quant.codes)
+        )
+        qb = _batches(ds)["match"]
+        _assert_bit_equal(
+            b.search(qb, SearchParams(k=K)),
+            a.search(qb, SearchParams(k=K)),
+            "mmap",
+        )
+
+
+# ---------------------------------------------------------------------------
+# residency bound during partial probes
+# ---------------------------------------------------------------------------
+
+
+class TestResidencyBound:
+    def test_peak_bounded_across_probe_stream(self, ds):
+        eng = Engine.build_partitioned(
+            ds.features, ds.attrs, n_partitions=P, help_cfg=CFG,
+        )
+        buckets = [
+            row_bucket(int(r)) for r in eng.index.summaries.n_rows
+        ]
+        cap = max(buckets) * 2
+        eng.index.set_residency(cap)
+        store = eng.index.store
+        qb = _batches(ds)["match"]
+        for np_ in (1, 2, 3, 2, 1):
+            eng.search(
+                qb, SearchParams(k=K, nprobe=np_, sub_backend="brute")
+            )
+        st = store.stats()
+        assert st["peak_resident_rows"] <= cap
+        assert st["evictions"] > 0  # the cap actually forced streaming
+
+
+# ---------------------------------------------------------------------------
+# mutability guard
+# ---------------------------------------------------------------------------
+
+
+class TestMutableGuard:
+    def test_mutable_engine_rejects_partitioned(self, engines):
+        _, part = engines["none"]
+        with pytest.raises(ValueError, match="partitioned"):
+            MutableEngine(part)
