@@ -67,7 +67,9 @@ from repro.core.help_graph import HelpConfig
 from repro.core.index import StableIndex
 from repro.core.routing import RoutingConfig, SearchResult
 from repro.partition.index import PartitionedStableIndex
-from repro.quant import QuantConfig, QuantizedVectors, adc_lut, adc_scan
+from repro.quant import (
+    QUANT_MODES, QuantConfig, QuantizedVectors, adc_scan, is_pq_mode,
+)
 from repro.api import executor as executor_mod
 from repro.api import planner as planner_mod
 from repro.api.executor import Executor
@@ -77,7 +79,7 @@ from repro.api.query import QueryBatch
 Array = jax.Array
 
 BACKENDS = ("auto", "graph", "sharded", "brute", "partitioned")
-QUANT_PARAMS = ("auto", "none", "sq8", "pq")
+QUANT_PARAMS = ("auto",) + QUANT_MODES
 
 
 @dataclasses.dataclass(frozen=True)
@@ -236,7 +238,7 @@ class BruteForceSearcher:
     def search(self, engine, queries, params, plan, entry_ids=None):
         idx = engine.index
         qv = jnp.asarray(queries.vectors, jnp.float32)
-        if plan.quant_mode == "pq" and idx.quant is not None:
+        if is_pq_mode(plan.quant_mode) and idx.quant is not None:
             return self._adc_two_stage(engine, queries, qv, params)
         if not (queries.has_one_of or queries.has_intervals):
             return baselines_mod.brute_force_hybrid(
@@ -256,10 +258,10 @@ class BruteForceSearcher:
         ``rerank_size`` bounds the full-precision stage exactly as in the
         traversal path (0 → whole pool)."""
         idx = engine.index
-        lut = adc_lut(qv, idx.quant.codebook)
+        lut = idx.quant.lut(qv)  # OPQ rotation (if any) folds in here
         scores = adc_scan(
             lut, idx.quant.codes, jnp.asarray(queries.attrs, jnp.int32),
-            jnp.asarray(idx.attrs), mode="l2"
+            jnp.asarray(idx.attrs), mode="l2", packed=idx.quant.packed,
         )  # (B, N) approximate squared L2 from codes only
         ok = _ok_matrix(engine, queries)
         pool = min(params.effective_pool, scores.shape[1])

@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.core import routing as routing_mod
 from repro.core.routing import RoutingConfig
+from repro.quant.store import is_packed_mode, is_pq_mode
 from repro.api.query import QueryBatch
 
 if TYPE_CHECKING:  # engine imports planner; never the reverse at runtime
@@ -91,7 +92,7 @@ class Plan:
     """
 
     backend: str  # graph | sharded | brute | partitioned
-    quant_mode: str  # none | sq8 | pq (resolved from params × index)
+    quant_mode: str  # none | sq8 | pq-family (resolved from params × index)
     routing_cfg: Optional[RoutingConfig]  # None for the brute backend
     reason: str  # human-readable planner justification
     cost_brute: Optional[float] = None  # predicted brute cost (fp-eval units)
@@ -145,6 +146,15 @@ class CostModel:
         per_query = self.pool_intercept + self.unit_evals * pool
         return per_query * self._scale(n) * (1.0 + width)
 
+    def code_cost(self, quant_mode: str) -> float:
+        """Relative cost of one compressed-code scoring under ``quant_mode``.
+        Packed 4-bit codes read half the bytes and contract a 16× narrower
+        one-hot LUT than 8-bit PQ, so they get a flat 2× discount on the
+        measured code-eval constant."""
+        if is_packed_mode(quant_mode):
+            return 0.5 * self.code_eval_cost
+        return self.code_eval_cost
+
     def graph_cost(
         self,
         *,
@@ -161,7 +171,7 @@ class CostModel:
         if quant_mode == "none":
             cost = evals
         else:
-            cost = self.code_eval_cost * evals + float(
+            cost = self.code_cost(quant_mode) * evals + float(
                 min(rerank or pool, pool)
             )
         return cost + self.batch_overhead / max(batch, 1)
@@ -172,9 +182,9 @@ class CostModel:
         """Per-query scan cost: N exact scorings (at the measured scan
         discount), or — through the fused ADC kernel — N code scorings plus
         a pool-head exact rerank."""
-        if quant_mode == "pq":
+        if is_pq_mode(quant_mode):
             return (
-                self.brute_eval_cost * self.code_eval_cost * n
+                self.brute_eval_cost * self.code_cost(quant_mode) * n
                 + float(min(pool, n))
             )
         return self.brute_eval_cost * float(n)
@@ -453,7 +463,7 @@ def make_plan(
         # oracle only has a code-scan path for pq
         q = "none" if params.quant == "none" else engine.quant_mode
         cost_brute = cm.brute_cost(
-            n=n, pool=pool, quant_mode="pq" if q == "pq" else "none"
+            n=n, pool=pool, quant_mode=q if is_pq_mode(q) else "none"
         )
         # the width surcharge models the executor's cut-widening for the
         # exact-membership backfill — charged only when that widening will
@@ -531,7 +541,7 @@ def _plan_partitioned(
     cost_brute = float(p) + cm.brute_cost(
         n=probe_rows,
         pool=min(params.effective_pool, probe_rows),
-        quant_mode="pq" if q == "pq" else "none",
+        quant_mode=q if is_pq_mode(q) else "none",
     )
     if params.sub_backend == "graph" and not engine.has_graph:
         raise ValueError(

@@ -22,8 +22,6 @@ from repro.core.auto import DatasetStats, MetricConfig
 from repro.core.help_graph import BuildReport, HelpConfig
 from repro.core.routing import RoutingConfig, SearchResult
 from repro.quant import QuantConfig, QuantizedVectors
-from repro.quant.pq import pq_encode
-from repro.quant.sq import sq8_encode
 
 Array = jax.Array
 
@@ -124,8 +122,8 @@ class StableIndex:
         vectors — the caller tombstones them). New/updated graph rows are NOT
         linked here: the merge path calls ``help_graph.link_nodes`` next, so
         appended rows start with all-INVALID adjacency. Codes are extended
-        with the *frozen* codec state (SQ8 params / PQ codebook trained at
-        build) — codebooks are never retrained online.
+        with the *frozen* codec state (SQ8 params / PQ codebooks / OPQ
+        rotation trained at build) — codec state is never retrained online.
         """
         ids = np.asarray(ids, np.int64)
         if ids.size == 0:
@@ -152,10 +150,10 @@ class StableIndex:
         # start all-INVALID until the merge links them
         quant = self.quant
         if quant is not None:
-            if quant.cfg.mode == "sq8":
-                rows, _ = sq8_encode(feats_new, quant.sq_params)
-            else:
-                rows = pq_encode(feats_new, quant.codebook)
+            # frozen codec state: SQ8 params / PQ codebooks / OPQ rotation
+            # trained at build — encode_rows applies rotation + nibble
+            # packing so the new rows match the stored code layout exactly
+            rows = quant.encode_rows(feats_new)
             pad = [(0, n_new - n_old)] + [(0, 0)] * (quant.codes.ndim - 1)
             codes = jnp.pad(quant.codes, pad).at[idx].set(rows)
             quant = dataclasses.replace(quant, codes=codes)

@@ -14,9 +14,11 @@ replaced by a dedup-merge + `top_k`; an optional (B, N) visited map suppresses
 re-scoring. Distance evaluations are counted exactly so efficiency comparisons
 against baselines are architecture-neutral.
 
-Quantized two-stage mode (``RoutingConfig.quant_mode`` ∈ {sq8, pq}): the
-traversal scores candidates from compressed codes only — SQ8 codes decode
-in-register, PQ codes go through the per-query ADC tables — filling the
+Quantized two-stage mode (``RoutingConfig.quant_mode`` ∈ {sq8, pq, pq4,
+opq-pq, opq-pq4}): the traversal scores candidates from compressed codes
+only — SQ8 codes decode in-register, PQ-family codes go through the
+per-query ADC tables (4-bit codes unpack nibble-wise after the gather; the
+OPQ rotation lives inside the LUT and the encode, never here) — filling the
 (oversized) pool without touching f32 vectors; the final ``rerank_size``
 pool entries are then re-scored with exact fused distances before emitting
 top-k. ``n_dist_evals`` counts *only* full-precision evaluations (the rerank);
@@ -53,6 +55,7 @@ from repro.core.auto import MetricConfig
 from repro.core.graph_ops import INF, INVALID
 from repro.quant import pq as pq_mod
 from repro.quant import sq as sq_mod
+from repro.quant.store import QUANT_MODES, is_packed_mode
 
 Array = jax.Array
 
@@ -87,7 +90,7 @@ class RoutingConfig:
             raise ValueError("k must be ≤ pool_size")
         if self.pioneer_size > self.pool_size:
             raise ValueError("pioneer_size must be ≤ pool_size")
-        if self.quant_mode not in ("none", "sq8", "pq"):
+        if self.quant_mode not in QUANT_MODES:
             raise ValueError(f"unknown quant_mode {self.quant_mode!r}")
         if self.rerank_size:
             if not (self.k <= self.rerank_size <= self.pool_size):
@@ -158,9 +161,14 @@ def _score_candidates(
             gops.gather_rows(codes, cand), sq_mod.SQParams(scale, zero)
         )
         return auto_mod.fused_sqdist(qv[:, None, :], qae, cv, ca, metric_cfg, m)
-    # pq: ADC — Σ_s lut[b, s, code] replaces the f32 squared feature term
+    # pq family: ADC — Σ_s lut[b, s, code] replaces the f32 squared feature
+    # term. OPQ rotation never appears here: it is already folded into the
+    # LUT (and the codes were encoded in rotated space). 4-bit modes gather
+    # packed bytes and unpack nibbles in-register after the gather.
     codes, lut = quant
-    cc = gops.gather_rows(codes, cand)  # (B, C, S)
+    cc = gops.gather_rows(codes, cand)  # (B, C, S) — or (B, C, ⌈S/2⌉) packed
+    if is_packed_mode(quant_mode):
+        cc = pq_mod.unpack_nibbles(cc, lut.shape[1])
     sv2 = jnp.maximum(pq_mod.adc_gathered_sqdist(lut, cc), 0.0)
     return auto_mod.fused_sqdist_from_sv2(sv2, qae, ca, metric_cfg, m)
 

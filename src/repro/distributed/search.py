@@ -8,7 +8,8 @@ are offset to global ids and the per-shard top-k results are all-gathered
 over `model` and reduced with one global top-k — an EXACT merge (top-k of a
 union equals top-k of per-shard top-k's).
 
-Quantized serving (``quant_cfg.mode`` ∈ {sq8, pq}): codes are sharded over
+Quantized serving (``quant_cfg.mode`` ∈ {sq8, pq, pq4, opq-pq, opq-pq4}):
+codes are sharded over
 `model` alongside the graph; codec state (SQ8 affine params / PQ codebooks)
 is replicated, and PQ ADC tables are computed per data-shard inside the
 shard_map body. The rerank is *pooled across shards*: every shard traverses
@@ -52,7 +53,10 @@ from repro.distributed import sharding as sharding_mod
 from repro.core.graph_ops import INF, INVALID
 from repro.core.help_graph import HelpConfig, build_help_graph
 from repro.core.routing import RoutingConfig
-from repro.quant import PQCodebook, QuantConfig, QuantizedVectors, adc_lut
+from repro.quant import (
+    PQCodebook, QuantConfig, QuantizedVectors, adc_lut, has_rotation,
+    is_pq_mode, rotate,
+)
 
 Array = jax.Array
 
@@ -84,7 +88,8 @@ class ShardedStableIndex:
     sq_scale: Optional[Array] = None  # (M,) replicated
     sq_zero: Optional[Array] = None  # (M,) replicated
     pq_centroids: Optional[Array] = None  # (S, K, D_sub) replicated
-    pq_dim: int = 0  # original feature dim (PQ codebook metadata)
+    pq_dim: int = 0  # codebook-native feature dim (padded/rotated space)
+    pq_rotation: Optional[Array] = None  # (Mp, Mp) OPQ rotation, replicated
     # per-instance executable/entry caches (see search): keyed on the static
     # search signature so serving batches reuse one jitted mesh program;
     # LRU-bounded at CACHE_SIZE
@@ -133,6 +138,8 @@ class ShardedStableIndex:
             if store.codebook is not None:
                 kw["pq_centroids"] = jax.device_put(store.codebook.centroids, rep)
                 kw["pq_dim"] = store.codebook.dim
+            if store.rotation is not None:
+                kw["pq_rotation"] = jax.device_put(store.rotation, rep)
         return cls(
             mesh=mesh,
             features=jax.device_put(jnp.asarray(features, jnp.float32), fsh),
@@ -172,10 +179,19 @@ class ShardedStableIndex:
             if qmode == "sq8":
                 codes, scale, zero = qops
                 operand = (codes, scale, zero)
-            elif qmode == "pq":
-                codes, centroids = qops
-                # per data-shard ADC tables from the replicated codebook
-                operand = (codes, adc_lut(qv, PQCodebook(centroids, pq_dim)))
+            elif is_pq_mode(qmode):
+                # per data-shard ADC tables from the replicated codebook;
+                # the OPQ rotation (replicated) folds into the query here,
+                # so codes/LUT shapes are rotation-oblivious downstream
+                if has_rotation(qmode):
+                    codes, centroids, rot = qops
+                    qv_lut = rotate(qv, rot)
+                else:
+                    codes, centroids = qops
+                    qv_lut = qv
+                operand = (
+                    codes, adc_lut(qv_lut, PQCodebook(centroids, pq_dim))
+                )
             else:
                 operand = ()
             shard_id = jax.lax.axis_index("model")
@@ -256,8 +272,10 @@ class ShardedStableIndex:
             extra_specs = (P("data", None),)
         if qmode == "sq8":
             extra_specs += (P("model", None), P(None), P(None))
-        elif qmode == "pq":
+        elif is_pq_mode(qmode):
             extra_specs += (P("model", None), P(None, None, None))
+            if has_rotation(qmode):
+                extra_specs += (P(None, None),)
         # interval targets carry a trailing replicated [lo, hi] axis
         qa_spec = P("data", None, None) if qa_ndim == 3 else P("data", None)
         fn = sharding_mod.shard_map(
@@ -320,8 +338,10 @@ class ShardedStableIndex:
             extra_args = (jnp.asarray(mask, jnp.int32),)
         if cfg.quant_mode == "sq8":
             extra_args += (self.codes, self.sq_scale, self.sq_zero)
-        elif cfg.quant_mode == "pq":
+        elif is_pq_mode(cfg.quant_mode):
             extra_args += (self.codes, self.pq_centroids)
+            if self.pq_rotation is not None:
+                extra_args += (self.pq_rotation,)
 
         ids, sqd, evals, code_evals, hops = fn(
             self.features, self.attrs, self.graphs, qv, qa, entry, *extra_args
@@ -369,6 +389,9 @@ class ShardedStableIndex:
         if self.pq_centroids is not None:
             np.save(os.path.join(path, "pq_centroids.npy"),
                     np.asarray(self.pq_centroids))
+        if self.pq_rotation is not None:
+            np.save(os.path.join(path, "pq_rotation.npy"),
+                    np.asarray(self.pq_rotation))
         meta = {
             "format": SHARDED_FORMAT,
             "n_shards": n_shards,
@@ -441,6 +464,10 @@ class ShardedStableIndex:
                 kw["pq_centroids"] = jax.device_put(
                     jnp.asarray(np.load(pq_c)), rep)
                 kw["pq_dim"] = int(meta["pq_dim"])
+            pq_r = os.path.join(path, "pq_rotation.npy")
+            if os.path.exists(pq_r):
+                kw["pq_rotation"] = jax.device_put(
+                    jnp.asarray(np.load(pq_r)), rep)
         return cls(
             mesh=mesh,
             features=jax.device_put(

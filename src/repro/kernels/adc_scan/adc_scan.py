@@ -20,6 +20,15 @@ per-dimension penalty is the interval gap max(lo − a, a − hi, 0).
 Blocking: grid = (B/bb, N/bn). Defaults (bb, bn) = (8, 256) with S·K = 2048:
 LUT tile 64 KiB + one-hot tile 2 MiB + codes/attr tiles ≲ 20 KiB ≪ VMEM,
 and the contraction dim S·K is a multiple of the 128-lane MXU tile.
+
+4-bit variant (``adc_scan4_scores``): codes arrive packed two-per-byte
+(K=16, one nibble each); the kernel body unpacks them **in-register**
+(`lo = c & 0xF`, `hi = c >> 4`, interleave) and contracts the same one-hot
+matmul against an S×16 LUT — the contraction dim shrinks 16× vs the 8-bit
+path (S·16 lanes), and HBM code traffic halves. Odd S pads one zero-LUT
+subspace so the pad nibble contributes nothing. The unpacked one-hot tile is
+identical to what the 8-bit kernel builds from pre-unpacked codes, so the
+two paths are bit-exact against each other (asserted in tests).
 """
 from __future__ import annotations
 
@@ -40,10 +49,15 @@ DEFAULT_BLOCK_N = 256
 
 def _kernel(lut_ref, codes_ref, qlo_ref, qhi_ref, xa_ref, mask_ref, o_ref, *,
             n_subspaces: int, n_centroids: int, alpha: float, mode: str,
-            attr_dim: int):
+            attr_dim: int, packed: bool = False):
     lut = lut_ref[...].astype(jnp.float32)  # (bb, S·K)
-    codes = codes_ref[...]  # (bn, S) int32
+    codes = codes_ref[...]  # (bn, S) int32 — or (bn, S/2) packed nibbles
     bn = codes.shape[0]
+    if packed:
+        # in-register nibble unpack: byte i holds subspaces (2i, 2i+1)
+        lo = codes & 0xF
+        hi = (codes >> 4) & 0xF
+        codes = jnp.stack([lo, hi], axis=-1).reshape(bn, n_subspaces)
     col = jax.lax.broadcasted_iota(
         jnp.int32, (bn, n_subspaces, n_centroids), 2
     )
@@ -125,6 +139,75 @@ def adc_scan_scores(
         in_specs=[
             pl.BlockSpec((block_b, s_dim * k_dim), lambda i, j: (i, 0)),
             pl.BlockSpec((block_n, s_dim), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_b, l_dim), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, l_dim), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, l_dim), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_b, l_dim), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(
+            (lut_p.shape[0], codes_p.shape[0]), jnp.float32
+        ),
+        interpret=interpret,
+    )(lut_p, codes_p, qlo_p, qhi_p, xa_p, mask_p)
+    return out[:b, :n]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("alpha", "mode", "block_b", "block_n", "interpret"),
+)
+def adc_scan4_scores(
+    lut: Array,  # (B, S, 16) f32 per-query ADC tables
+    codes: Array,  # (N, ⌈S/2⌉) uint8 packed nibble codes
+    qa: Array,  # (B, L) int
+    xa: Array,  # (N, L) int
+    alpha: float = 1.0,
+    mode: str = "auto",
+    mask: Optional[Array] = None,
+    block_b: int = DEFAULT_BLOCK_B,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = True,
+) -> Array:
+    """4-bit packed variant of ``adc_scan_scores``: same fused output, codes
+    arrive two-per-byte and unpack in-register inside the kernel. Odd S is
+    handled by padding the LUT with one all-zero subspace (the pad nibble is
+    always 0, so it contributes 0 to every ADC sum)."""
+    if mode not in ("auto", "l2"):
+        raise ValueError(f"adc_scan supports modes ('auto', 'l2'), got {mode!r}")
+    b, s_dim, k_dim = lut.shape
+    if k_dim != 16:
+        raise ValueError(f"packed ADC requires K=16 LUTs, got K={k_dim}")
+    n, s_packed = codes.shape
+    s_eff = 2 * s_packed
+    if s_dim not in (s_eff, s_eff - 1):
+        raise ValueError(
+            f"LUT has S={s_dim} subspaces but packed codes carry {s_eff}"
+        )
+    if s_dim < s_eff:  # odd S: zero-LUT pad subspace absorbs the pad nibble
+        lut = jnp.pad(lut, ((0, 0), (0, s_eff - s_dim), (0, 0)))
+    l_dim = qa.shape[1]
+    if mask is None:
+        mask = jnp.ones((b, l_dim), jnp.int32)
+    qlo, qhi = split_targets(qa)
+
+    lut_p = _pad_to(lut.reshape(b, s_eff * k_dim), 0, block_b)
+    codes_p = _pad_to(codes.astype(jnp.int32), 0, block_n)
+    qlo_p = _pad_to(qlo, 0, block_b)
+    qhi_p = _pad_to(qhi, 0, block_b)
+    xa_p = _pad_to(xa, 0, block_n)
+    mask_p = _pad_to(mask, 0, block_b)
+
+    grid = (lut_p.shape[0] // block_b, codes_p.shape[0] // block_n)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, n_subspaces=s_eff, n_centroids=k_dim,
+            alpha=float(alpha), mode=mode, attr_dim=l_dim, packed=True,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, s_eff * k_dim), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, s_packed), lambda i, j: (j, 0)),
             pl.BlockSpec((block_b, l_dim), lambda i, j: (i, 0)),
             pl.BlockSpec((block_b, l_dim), lambda i, j: (i, 0)),
             pl.BlockSpec((block_n, l_dim), lambda i, j: (j, 0)),

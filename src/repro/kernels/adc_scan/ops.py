@@ -2,6 +2,7 @@
 
 Selects Pallas compiled mode on TPU, interpret mode elsewhere (this container
 is CPU-only; interpret executes the kernel body in Python for correctness).
+``packed=True`` routes to the 4-bit variant (codes two-per-byte, S×16 LUT).
 Also exposes a top-k convenience used by the quantized serving path.
 """
 from __future__ import annotations
@@ -11,8 +12,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.adc_scan.adc_scan import adc_scan_scores
-from repro.kernels.adc_scan.ref import adc_scan_ref
+from repro.kernels.adc_scan.adc_scan import adc_scan4_scores, adc_scan_scores
+from repro.kernels.adc_scan.ref import adc_scan4_ref, adc_scan_ref
 
 Array = jax.Array
 
@@ -31,10 +32,13 @@ def adc_scan(
     mask: Optional[Array] = None,
     block_b: int = 8,
     block_n: int = 256,
+    packed: bool = False,
 ) -> Array:
     """(B, N) squared fused ADC distances (Pallas on TPU, interpret on CPU).
-    ``qa`` is (B, L) point targets or (B, L, 2) [lo, hi] interval targets."""
-    return adc_scan_scores(
+    ``qa`` is (B, L) point targets or (B, L, 2) [lo, hi] interval targets.
+    ``packed`` selects the 4-bit nibble-packed kernel variant."""
+    fn = adc_scan4_scores if packed else adc_scan_scores
+    return fn(
         lut, codes, qa, xa, alpha=alpha, mode=mode, mask=mask,
         block_b=block_b, block_n=block_n,
         interpret=not _on_tpu(),
@@ -50,11 +54,14 @@ def adc_scan_topk(
     alpha: float = 1.0,
     mode: str = "auto",
     mask: Optional[Array] = None,
+    packed: bool = False,
 ) -> tuple[Array, Array]:
     """Approximate hybrid top-k over PQ codes via the fused ADC kernel."""
-    scores = adc_scan(lut, codes, qa, xa, alpha=alpha, mode=mode, mask=mask)
+    scores = adc_scan(
+        lut, codes, qa, xa, alpha=alpha, mode=mode, mask=mask, packed=packed
+    )
     neg, idx = jax.lax.top_k(-scores, k)
     return -neg, idx
 
 
-__all__ = ["adc_scan", "adc_scan_topk", "adc_scan_ref"]
+__all__ = ["adc_scan", "adc_scan_topk", "adc_scan_ref", "adc_scan4_ref"]

@@ -50,3 +50,21 @@ def adc_scan_ref(
     sa = diff.sum(-1)
     pen = 1.0 + sa / alpha
     return sv2 * pen * pen
+
+
+def adc_scan4_ref(
+    lut: Array,  # (B, S, 16) f32
+    codes: Array,  # (N, ⌈S/2⌉) uint8 packed nibbles
+    qa: Array,
+    xa: Array,
+    alpha: float,
+    mode: str = "auto",
+    mask: Optional[Array] = None,
+) -> Array:
+    """Oracle for the packed 4-bit scanner: unpack on the host, then the
+    plain per-subspace gather-sum reference."""
+    from repro.quant.pq import unpack_nibbles
+
+    return adc_scan_ref(
+        lut, unpack_nibbles(codes, lut.shape[1]), qa, xa, alpha, mode, mask
+    )

@@ -52,7 +52,9 @@ from repro.core import help_graph as help_mod
 from repro.core.auto import DatasetStats, MetricConfig
 from repro.core.help_graph import HelpConfig
 from repro.quant import QuantConfig, QuantizedVectors
-from repro.quant.pq import PQCodebook
+from repro.quant.pq import PQCodebook, adc_lut
+from repro.quant.opq import rotate as opq_rotate
+from repro.quant.store import check_codec_spec, codec_spec, is_pq_mode
 from repro.quant.sq import SQParams
 from repro.partition.kmeans import CoarseQuantizer, train_coarse
 from repro.partition.store import PartitionData, SegmentStore, row_bucket
@@ -107,6 +109,7 @@ class PartitionedStableIndex:
     attrs: np.ndarray  # (N, L) global host attrs (memmap when disk-backed)
     sq_params: Optional[SQParams] = None
     codebook: Optional[PQCodebook] = None
+    rotation: Optional["jax.Array"] = None  # (Mp, Mp) OPQ rotation (opq-*)
     path: Optional[str] = None  # disk-backed partitions (mmap loaders)
     graph_built: bool = True  # subgraph traversal requested at build
     #: in-memory partition payloads (build mode; ``path`` is None)
@@ -158,7 +161,16 @@ class PartitionedStableIndex:
         return QuantizedVectors(
             cfg=self.quant_cfg, codes=codes,
             sq_params=self.sq_params, codebook=self.codebook,
+            rotation=self.rotation,
         )
+
+    def query_lut(self, qv) -> "jax.Array":
+        """Per-query ADC tables against the global codebook, with the OPQ
+        rotation (if any) folded into the query — shared by every partition
+        probe (codes are slices of one globally-encoded array)."""
+        if self.rotation is not None:
+            qv = opq_rotate(qv, self.rotation)
+        return adc_lut(qv, self.codebook)
 
     # -- residency -------------------------------------------------------
 
@@ -323,6 +335,7 @@ class PartitionedStableIndex:
             attrs=attrs_np,
             sq_params=None if quant is None else quant.sq_params,
             codebook=None if quant is None else quant.codebook,
+            rotation=None if quant is None else quant.rotation,
             _parts=parts,
             graph_built=build_graph,
             residency_rows=residency_rows,
@@ -343,6 +356,9 @@ class PartitionedStableIndex:
         if self.codebook is not None:
             np.save(os.path.join(path, "quant_centroids.npy"),
                     np.asarray(self.codebook.centroids))
+        if self.rotation is not None:
+            np.save(os.path.join(path, "quant_rotation.npy"),
+                    np.asarray(self.rotation))
         for pid in range(self.n_partitions):
             d = _part_dir(path, pid)
             os.makedirs(d, exist_ok=True)
@@ -367,6 +383,8 @@ class PartitionedStableIndex:
             "stats": dataclasses.asdict(self.stats),
             "quant_cfg": dataclasses.asdict(self.quant_cfg),
             "quant_dim": self.codebook.dim if self.codebook else None,
+            "quant_codec": (codec_spec(self.quant_cfg)
+                            if self.quant_cfg.mode != "none" else None),
             "summaries": self.summaries.to_json(),
             **(extra_meta or {}),
         }
@@ -384,7 +402,9 @@ class PartitionedStableIndex:
         if meta.get("format") != PARTITIONED_FORMAT:
             raise ValueError(f"{path} is not a {PARTITIONED_FORMAT} layout")
         quant_cfg = QuantConfig(**meta["quant_cfg"])
-        sq_params = codebook = None
+        if quant_cfg.mode != "none":
+            check_codec_spec(meta.get("quant_codec"), quant_cfg)
+        sq_params = codebook = rotation = None
         if quant_cfg.mode == "sq8":
             sq_params = SQParams(
                 scale=jnp.asarray(
@@ -394,13 +414,16 @@ class PartitionedStableIndex:
                     np.load(os.path.join(path, "quant_sq_zero.npy"))
                 ),
             )
-        elif quant_cfg.mode == "pq":
+        elif is_pq_mode(quant_cfg.mode):
             codebook = PQCodebook(
                 centroids=jnp.asarray(
                     np.load(os.path.join(path, "quant_centroids.npy"))
                 ),
                 dim=int(meta["quant_dim"]),
             )
+            rot_file = os.path.join(path, "quant_rotation.npy")
+            if os.path.exists(rot_file):
+                rotation = jnp.asarray(np.load(rot_file))
         out = cls(
             quantizer=CoarseQuantizer.load(path),
             summaries=PartitionSummaries.from_json(meta["summaries"]),
@@ -409,7 +432,7 @@ class PartitionedStableIndex:
             stats=DatasetStats(**meta["stats"]),
             quant_cfg=quant_cfg,
             attrs=np.load(os.path.join(path, "attrs.npy"), mmap_mode="r"),
-            sq_params=sq_params, codebook=codebook,
+            sq_params=sq_params, codebook=codebook, rotation=rotation,
             path=path,
             graph_built=bool(meta.get("has_graph", True)),
             residency_rows=residency_rows,

@@ -41,7 +41,8 @@ from repro.core import routing as routing_mod
 from repro.core.auto import MetricConfig
 from repro.core.graph_ops import INF, INVALID
 from repro.core.routing import SearchResult
-from repro.quant import adc_lut, adc_scan
+from repro.quant import adc_scan
+from repro.quant.store import is_packed_mode, is_pq_mode
 
 Array = jax.Array
 
@@ -57,6 +58,17 @@ def _batch_bucket(b: int, cap: int) -> int:
     while s < b:
         s *= 2
     return min(s, cap)
+
+
+def _iter_groups(store, groups: dict[int, np.ndarray]):
+    """Yield (pid, qidx) while double-buffering: stage pid[i+1] on the
+    store's background worker before pid[i] is scored, so the next
+    partition's disk read + device put overlaps the current probe."""
+    order = list(groups.items())
+    for i, (pid, qidx) in enumerate(order):
+        if i + 1 < len(order):
+            store.prefetch(order[i + 1][0])
+        yield pid, qidx
 
 
 def _groups(probes: np.ndarray) -> dict[int, np.ndarray]:
@@ -164,7 +176,7 @@ class PartitionedSearcher:
         hard_all = plan.sub_backend == "brute" or params.enforce_equality
         probes = pidx.probe(queries, plan.nprobe, hard_all)  # (B, nprobe)
         if plan.sub_backend == "brute":
-            if plan.quant_mode == "pq":
+            if is_pq_mode(plan.quant_mode):
                 return self._probe_pq(engine, queries, params, plan, probes)
             return self._probe_exact(engine, queries, params, plan, probes)
         return self._probe_graph(engine, queries, params, plan, probes)
@@ -175,7 +187,7 @@ class PartitionedSearcher:
         pidx = engine.index
         b, k = queries.batch_size, params.k
         buf = _PoolBuffer(b, probes.shape[1] * k)
-        for pid, qidx in _groups(probes).items():
+        for pid, qidx in _iter_groups(pidx.store, _groups(probes)):
             part = pidx.store.get(pid)
             pad = _pad_idx(qidx, _batch_bucket(qidx.size, b))
             sub = queries.take(pad)
@@ -205,15 +217,16 @@ class PartitionedSearcher:
         pool = min(max(params.rerank_size or pool, k), pool)
         m = pidx.feat_dim
         buf = _PoolBuffer(b, probes.shape[1] * pool, with_feats=m)
-        for pid, qidx in _groups(probes).items():
+        for pid, qidx in _iter_groups(pidx.store, _groups(probes)):
             part = pidx.store.get(pid)
             pad = _pad_idx(qidx, _batch_bucket(qidx.size, b))
             sub = queries.take(pad)
             qv = jnp.asarray(sub.vectors, jnp.float32)
-            lut = adc_lut(qv, pidx.codebook)
+            lut = pidx.query_lut(qv)
             scores = adc_scan(
                 lut, part.codes, jnp.asarray(sub.attrs, jnp.int32),
                 part.attrs, mode="l2",
+                packed=is_packed_mode(plan.quant_mode),
             )
             ok = _ok_local(part, sub)
             scores = jnp.where(ok, scores, INF)
@@ -267,7 +280,7 @@ class PartitionedSearcher:
         code_evals = np.zeros(b, np.int64)
         hops = 0
         quant_on = plan.quant_mode != "none"
-        for pid, qidx in _groups(probes).items():
+        for pid, qidx in _iter_groups(pidx.store, _groups(probes)):
             part = pidx.store.get(pid)
             bucket = _batch_bucket(qidx.size, b)
             pad = _pad_idx(qidx, bucket)

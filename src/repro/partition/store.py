@@ -12,11 +12,22 @@ Rows are accounted at their padded *bucket* size (next power of two, floor
 ``bucket_min``) because that is what actually occupies device memory — the
 same bucketing lets the executor share jit traces across partitions of
 different true sizes.
+
+``prefetch(pid)`` overlaps the next probe's disk read + device transfer with
+the current probe's compute: a single background worker stages the padded
+``ResidentPartition`` in a one-deep slot, and the next ``get`` for that pid
+claims it without blocking on I/O (double buffering — one partition in
+flight while one is being scored). The slot is *staging only*: a prefetched
+partition is charged against ``cap_rows`` only when ``get`` installs it, so
+the residency invariant is untouched; a slot that is replaced or never
+claimed counts as ``prefetch_wasted``.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Callable, Optional
 
 import jax
@@ -98,6 +109,13 @@ class SegmentStore:
         self.evictions = 0
         self.resident_rows = 0
         self.peak_resident_rows = 0
+        # double-buffer prefetch: ≤ 2 staged loads (one being claimed by the
+        # current probe, one in flight for the next) + lazy worker thread
+        self._prefetch_lock = threading.Lock()
+        self._staged: "OrderedDict[int, Future[ResidentPartition]]" = OrderedDict()
+        self._prefetch_pool: Optional[ThreadPoolExecutor] = None
+        self.prefetch_hits = 0
+        self.prefetch_wasted = 0
 
     # -- residency -------------------------------------------------------
 
@@ -107,7 +125,9 @@ class SegmentStore:
             self._resident.move_to_end(pid)
             self.hits += 1
             return hit
-        part = self._materialize(pid)
+        part = self._claim_prefetch(pid)
+        if part is None:
+            part = self._materialize(pid)
         # evict-before-load keeps the peak gauge under the cap
         while self._resident and self.resident_rows + part.n_pad > self.cap_rows:
             self._evict_lru()
@@ -116,6 +136,46 @@ class SegmentStore:
         self.resident_rows += part.n_pad
         self.peak_resident_rows = max(self.peak_resident_rows, self.resident_rows)
         return part
+
+    # -- prefetch ----------------------------------------------------------
+
+    def prefetch(self, pid: int) -> None:
+        """Stage ``pid`` in the background (no-op if resident or already
+        staged). At most two loads are staged at once — the one the current
+        probe is about to claim plus the one in flight behind it; an older
+        entry that falls off the buffer was never claimed and counts as
+        ``prefetch_wasted``."""
+        with self._prefetch_lock:
+            if pid in self._resident or pid in self._staged:
+                return
+            if self._prefetch_pool is None:
+                self._prefetch_pool = ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="segment-prefetch"
+                )
+            self._staged[pid] = self._prefetch_pool.submit(
+                self._materialize, pid
+            )
+            while len(self._staged) > 2:
+                self._staged.popitem(last=False)
+                self.prefetch_wasted += 1
+
+    def _claim_prefetch(self, pid: int) -> Optional[ResidentPartition]:
+        """Take ``pid``'s staged load if one exists (blocking on the
+        in-flight transfer — still overlapped with the compute that ran
+        since ``prefetch``). Non-matching entries stay staged."""
+        with self._prefetch_lock:
+            fut = self._staged.pop(pid, None)
+        if fut is None:
+            return None
+        part = fut.result()
+        self.prefetch_hits += 1
+        return part
+
+    def drop_prefetch(self) -> None:
+        """Discard staged loads that were never claimed (counted wasted)."""
+        with self._prefetch_lock:
+            self.prefetch_wasted += len(self._staged)
+            self._staged.clear()
 
     def _materialize(self, pid: int) -> ResidentPartition:
         data = self.loader(pid)
@@ -144,6 +204,7 @@ class SegmentStore:
         self.evictions += 1
 
     def evict_all(self) -> None:
+        self.drop_prefetch()
         while self._resident:
             self._evict_lru()
 
@@ -161,8 +222,11 @@ class SegmentStore:
             "resident_rows": self.resident_rows,
             "peak_resident_rows": self.peak_resident_rows,
             "cap_rows": self.cap_rows,
+            "prefetch_hits": self.prefetch_hits,
+            "prefetch_wasted": self.prefetch_wasted,
         }
 
     def reset_counters(self) -> None:
         self.hits = self.loads = self.evictions = 0
+        self.prefetch_hits = self.prefetch_wasted = 0
         self.peak_resident_rows = self.resident_rows

@@ -18,6 +18,18 @@ Codecs
            (e.g. 64× at M=128, S=8). Distances use asymmetric distance
            computation (ADC): a per-query (S, 256) LUT of partial squared
            distances, S lookups+adds per candidate — never touching f32.
+``pq4``  — 4-bit PQ: K=16 centroids per subspace, two codes packed per byte
+           (⌈S/2⌉ bytes/vector — half of pq at equal S); the packed
+           ``adc_scan`` variant unpacks nibbles in-register and contracts an
+           S×16 one-hot LUT on the MXU.
+``opq-pq`` / ``opq-pq4`` — OPQ: a learned orthogonal rotation before the
+           subspace split (``opq.opq_train``, alternating minimization with
+           a Procrustes update) cuts codebook error on correlated
+           dimensions. The rotation is frozen codec state, applied at
+           encode time and inside the query-LUT build only — scan and
+           traversal code paths never see it. Optional ``anisotropic``
+           weighting biases training loss toward high-magnitude
+           (score-dominant) rows.
 
 Layers
 ------
@@ -44,17 +56,22 @@ Typical use::
     res = eng.search(QueryBatch.match(qv, qa), SearchParams(k=10))
     res.n_dist_evals                         # (B,) rerank evals only
 
-Follow-ons tracked in ROADMAP.md: OPQ rotation, 4-bit PQ, quantized
-sharded rerank.
 """
 from repro.kernels.adc_scan.ops import adc_scan, adc_scan_topk
+from repro.quant.opq import opq_reconstruct, opq_train, rotate
 from repro.quant.pq import (
-    PQCodebook, adc_gathered_sqdist, adc_lut, pq_decode, pq_encode, pq_train,
+    PQCodebook, adc_gathered_sqdist, adc_lut, pack_nibbles, pq_decode,
+    pq_encode, pq_train, unpack_nibbles,
 )
 from repro.quant.sq import SQParams, sq8_decode, sq8_encode, sq8_train
-from repro.quant.store import QUANT_MODES, QuantConfig, QuantizedVectors
+from repro.quant.store import (
+    CODEC_VERSION, PQ_MODES, QUANT_MODES, QuantConfig, QuantizedVectors,
+    codec_spec, has_rotation, is_packed_mode, is_pq_mode, pq_bits,
+)
 
 __all__ = [
+    "CODEC_VERSION",
+    "PQ_MODES",
     "QUANT_MODES",
     "QuantConfig",
     "QuantizedVectors",
@@ -64,10 +81,20 @@ __all__ = [
     "adc_lut",
     "adc_scan",
     "adc_scan_topk",
+    "codec_spec",
+    "has_rotation",
+    "is_packed_mode",
+    "is_pq_mode",
+    "opq_reconstruct",
+    "opq_train",
+    "pack_nibbles",
+    "pq_bits",
     "pq_decode",
     "pq_encode",
     "pq_train",
+    "rotate",
     "sq8_decode",
     "sq8_encode",
     "sq8_train",
+    "unpack_nibbles",
 ]

@@ -1,0 +1,155 @@
+"""Optimized Product Quantization: a learned orthogonal rotation before PQ.
+
+Plain PQ splits dimensions into fixed contiguous subspaces, so correlated
+dimensions that straddle a subspace boundary waste codebook capacity. OPQ
+(Ge et al., CVPR'13, non-parametric variant) learns an orthogonal rotation R
+minimizing the quantization error ‖XR − Q(XR)‖² by alternating minimization:
+
+    repeat:  rotate X → XR;  re-train the S codebooks on XR (warm-started
+             Lloyd);  encode/decode to get the reconstruction Y;  update
+             R ← UVᵀ from the SVD of XᵀY  (orthogonal Procrustes).
+
+Because R is orthogonal, distances are preserved exactly
+(‖Rx − Ry‖ ≡ ‖x − y‖), so the rotation can hide entirely inside the codec:
+database vectors rotate once at encode time and each query rotates once
+inside the ADC-LUT build — traversal and scan code paths never see it.
+
+R acts on the zero-padded space of S·D_sub dims (the same padding
+``_split_subspaces`` applies), so ``rotate`` pads then multiplies; padded
+query/centroid coordinates start at zero but may rotate into use, which is
+fine — the objective only ever measures reconstruction of (padded) data.
+
+Anisotropic option (``anisotropic > 0``): STABLE's fused metric multiplies
+the feature distance by the attribute penalty, so quantization error on
+high-magnitude rows distorts fused scores the most (the paper's
+magnitude-uniformity analysis; FusedANN's fusion analysis reaches the same
+conclusion for attribute-fused vectors). We therefore weight each training
+row by 1 + anisotropic · (‖x‖/mean‖x‖ − 1), clamped ≥ 0.1 — a per-sample
+weighted Lloyd step and weighted Procrustes — which biases codebook
+capacity toward the score-relevant (large-magnitude) direction without
+changing any search-time code path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.pq import (
+    PQCodebook,
+    _kmeans_one_subspace,
+    _pairwise_sqdist,
+    _split_subspaces,
+)
+
+Array = jax.Array
+
+__all__ = ["opq_train", "rotate", "opq_reconstruct"]
+
+
+def rotate(x: Array, rotation: Array) -> Array:
+    """(N, M) × (Mp, Mp) → (N, Mp): zero-pad to the rotated space, multiply."""
+    x = jnp.asarray(x, jnp.float32)
+    mp = rotation.shape[0]
+    pad = mp - x.shape[1]
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    return x @ rotation
+
+
+@jax.jit
+def _weighted_kmeans_step(x: Array, w: Array, cents: Array) -> Array:
+    """One weighted Lloyd step for one subspace: x (N, D), w (N,), cents (K, D)."""
+    k = cents.shape[0]
+    d2 = _pairwise_sqdist(x, cents)
+    assign = jnp.argmin(d2, axis=1)
+    onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32) * w[:, None]  # (N, K)
+    counts = onehot.sum(0)
+    sums = onehot.T @ x
+    new = sums / jnp.maximum(counts, 1e-6)[:, None]
+    return jnp.where((counts > 1e-6)[:, None], new, cents)
+
+
+@jax.jit
+def _encode_decode(xs: Array, centroids: Array) -> Array:
+    """xs (N, S, D), centroids (S, K, D) → (N, S, D) nearest-centroid recon."""
+
+    def one(s_x, s_c):  # (N, D), (K, D)
+        return s_c[jnp.argmin(_pairwise_sqdist(s_x, s_c), axis=1)]
+
+    return jax.vmap(one, in_axes=(1, 0), out_axes=1)(xs, centroids)
+
+
+def opq_train(
+    x: Array,
+    n_subspaces: int = 8,
+    n_centroids: int = 256,
+    n_iters: int = 15,
+    opq_iters: int = 6,
+    n_samples: int = 16384,
+    seed: int = 0,
+    anisotropic: float = 0.0,
+) -> tuple[Array, PQCodebook]:
+    """Alternating-minimization OPQ → (rotation (Mp, Mp), trained codebook).
+
+    The codebook lives in the *rotated* padded space (``dim == Mp``); encode
+    with ``pq_encode(rotate(x, R), codebook)`` and build query LUTs from
+    ``rotate(q, R)``. ``n_iters`` Lloyd iterations seed round 0; later rounds
+    warm-start from the previous centroids with a short refinement.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    n, m = x.shape
+    rng = np.random.default_rng(seed)
+    take = min(n, n_samples)
+    sample_idx = rng.choice(n, size=take, replace=False)
+    xs3 = _split_subspaces(x[jnp.asarray(sample_idx)], n_subspaces)  # (take, S, D)
+    sub = xs3.shape[2]
+    mp = n_subspaces * sub
+    xflat = xs3.reshape(take, mp)
+
+    if anisotropic > 0.0:
+        norms = jnp.linalg.norm(xflat, axis=1)
+        w = 1.0 + anisotropic * (norms / jnp.maximum(norms.mean(), 1e-6) - 1.0)
+        w = jnp.maximum(w, 0.1)
+    else:
+        w = jnp.ones((take,), jnp.float32)
+
+    rotation = jnp.eye(mp, dtype=jnp.float32)
+
+    # round 0: plain Lloyd from data-point inits (identity rotation)
+    cents = []
+    for s in range(n_subspaces):
+        init_idx = rng.choice(take, size=n_centroids, replace=take < n_centroids)
+        init = xs3[jnp.asarray(init_idx), s, :]
+        cents.append(_kmeans_one_subspace(xs3[:, s, :], init, n_iters))
+    centroids = jnp.stack(cents)  # (S, K, D)
+
+    for _ in range(max(opq_iters, 0)):
+        xr = (xflat @ rotation).reshape(take, n_subspaces, sub)
+        # warm-started weighted refinement of every subspace codebook
+        for _ in range(2):
+            centroids = jax.vmap(
+                _weighted_kmeans_step, in_axes=(1, None, 0), out_axes=0
+            )(xr, w, centroids)
+        y = _encode_decode(xr, centroids).reshape(take, mp)
+        # weighted orthogonal Procrustes: R ← UVᵀ of Xᵀ diag(w) Y
+        u, _, vt = jnp.linalg.svd(xflat.T @ (y * w[:, None]), full_matrices=False)
+        rotation = u @ vt
+
+    # final codebook refit against the final rotation
+    xr = (xflat @ rotation).reshape(take, n_subspaces, sub)
+    for _ in range(2):
+        centroids = jax.vmap(
+            _weighted_kmeans_step, in_axes=(1, None, 0), out_axes=0
+        )(xr, w, centroids)
+
+    return rotation, PQCodebook(centroids=centroids, dim=mp)
+
+
+def opq_reconstruct(codes: Array, codebook: PQCodebook, rotation: Array,
+                    dim: int) -> Array:
+    """Decode codes from the rotated space back to the original M dims."""
+    from repro.quant.pq import pq_decode
+
+    recon_rot = pq_decode(codes, codebook)  # (N, Mp) rotated-space recon
+    return (recon_rot @ rotation.T)[:, :dim]

@@ -1,9 +1,10 @@
 """Product quantization codec: per-subspace K-means codebooks, trained in JAX.
 
 The M-dim feature space is split into S subspaces of D_sub = ceil(M/S) dims
-(zero-padded to a multiple of S); each subspace gets its own 256-centroid
-codebook via Lloyd's K-means, so a vector compresses to S bytes. Asymmetric
-distance computation (ADC) precomputes, per query, a (S, 256) look-up table of
+(zero-padded to a multiple of S); each subspace gets its own K-centroid
+codebook via Lloyd's K-means (K=256 → one byte per subspace, K=16 → one
+*nibble*: two codes pack into a byte, see ``pack_nibbles``). Asymmetric
+distance computation (ADC) precomputes, per query, a (S, K) look-up table of
 partial squared distances ‖q_s − c_{s,j}‖²; the squared distance to any code
 is then S table lookups and adds — never touching the f32 vector. Padding
 dims are zero in both query and centroids, so they contribute nothing.
@@ -113,16 +114,16 @@ def pq_train(
 
 @jax.jit
 def _encode_block(xs: Array, centroids: Array) -> Array:
-    """xs (N, S, D), centroids (S, K, D) → (N, S) int32 nearest-centroid ids."""
+    """xs (N, S, D), centroids (S, K, D) → (N, S) uint8 nearest-centroid ids."""
 
     def one(s_x, s_c):  # (N, D), (K, D)
-        return jnp.argmin(_pairwise_sqdist(s_x, s_c), axis=1).astype(jnp.int32)
+        return jnp.argmin(_pairwise_sqdist(s_x, s_c), axis=1).astype(jnp.uint8)
 
     return jax.vmap(one, in_axes=(1, 0), out_axes=1)(xs, centroids)
 
 
 def pq_encode(x: Array, codebook: PQCodebook, block: int = 8192) -> Array:
-    """Encode (N, M) f32 → (N, S) int32 codes (values < 256), blocked over N."""
+    """Encode (N, M) f32 → (N, S) uint8 codes (values < K ≤ 256), blocked over N."""
     x = jnp.asarray(x, jnp.float32)
     n = x.shape[0]
     xs = _split_subspaces(x, codebook.n_subspaces)
@@ -130,6 +131,37 @@ def pq_encode(x: Array, codebook: PQCodebook, block: int = 8192) -> Array:
     for i in range(0, n, block):
         out.append(_encode_block(xs[i : i + block], codebook.centroids))
     return jnp.concatenate(out, axis=0) if len(out) > 1 else out[0]
+
+
+# ---------------------------------------------------------------------------
+# 4-bit packing: two codes (values < 16) per byte
+# ---------------------------------------------------------------------------
+
+
+def pack_nibbles(codes: Array) -> Array:
+    """(..., S) codes (values < 16) → (..., ceil(S/2)) uint8.
+
+    Even subspace s=2i lands in the low nibble, odd s=2i+1 in the high one;
+    odd S pads a zero high nibble (consumers pad the LUT with a zero
+    subspace, so the pad nibble contributes nothing to ADC sums).
+    """
+    codes = jnp.asarray(codes)
+    s = codes.shape[-1]
+    if s % 2:
+        pad = [(0, 0)] * (codes.ndim - 1) + [(0, 1)]
+        codes = jnp.pad(codes, pad)
+    lo = codes[..., 0::2].astype(jnp.uint8)
+    hi = codes[..., 1::2].astype(jnp.uint8)
+    return lo | (hi << 4)
+
+
+def unpack_nibbles(packed: Array, n_subspaces: int) -> Array:
+    """(..., ceil(S/2)) uint8 → (..., S) int32 codes (inverse of pack_nibbles)."""
+    packed = jnp.asarray(packed).astype(jnp.int32)
+    lo = packed & 0xF
+    hi = (packed >> 4) & 0xF
+    inter = jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
+    return inter[..., :n_subspaces]
 
 
 def pq_decode(codes: Array, codebook: PQCodebook) -> Array:
@@ -163,7 +195,7 @@ def adc_gathered_sqdist(lut: Array, codes: Array) -> Array:
     """
 
     def one(lut_b, codes_b):  # (S, K), (C, S)
-        g = jnp.take_along_axis(lut_b, codes_b.T, axis=1)  # (S, C)
+        g = jnp.take_along_axis(lut_b, codes_b.T.astype(jnp.int32), axis=1)  # (S, C)
         return g.sum(axis=0)
 
     return jax.vmap(one)(lut, codes)

@@ -228,6 +228,40 @@ class TestApplyRows:
                 np.asarray(new.quant.codes[ids]), want
             )
 
+    @pytest.mark.parametrize("mode", ["pq4", "opq-pq4"])
+    def test_packed_and_rotated_codecs_frozen_through_merge(self, ds, mode):
+        """apply_rows / merge must extend packed + rotated codes with the
+        *frozen* codec (rotation, codebooks, nibble layout) bit-exactly."""
+        eng = Engine.build(
+            ds.features[:N0], ds.attrs[:N0], CFG,
+            quant_cfg=QuantConfig(mode=mode, pq_subspaces=16,
+                                  pq_train_iters=5, opq_iters=2),
+        )
+        idx = eng.index
+        rot_before = (None if idx.quant.rotation is None
+                      else np.asarray(idx.quant.rotation).copy())
+        m = MutableEngine(eng)
+        vec, at = ds.features[N0] + 0.5, ds.attrs[N0]
+        nid = m.upsert(vec, at)
+        m.merge()
+        new = m.engine.index
+        # codec state untouched by the merge
+        np.testing.assert_array_equal(
+            np.asarray(new.quant.codebook.centroids),
+            np.asarray(idx.quant.codebook.centroids),
+        )
+        if rot_before is not None:
+            np.testing.assert_array_equal(
+                np.asarray(new.quant.rotation), rot_before
+            )
+        # merged row encoded exactly as the frozen codec encodes it
+        want = np.asarray(
+            new.quant.encode_rows(vec[None]).astype(new.quant.codes.dtype)
+        )[0]
+        np.testing.assert_array_equal(np.asarray(new.quant.codes[nid]), want)
+        res = m.search((vec[None], at[None]), SearchParams(k=5, quant=mode))
+        assert nid in np.asarray(res.ids)[0]
+
     def test_link_nodes_links_and_bans(self, base_indexes, ds):
         idx = base_indexes["none"]
         ids = np.arange(N0, N0 + 8)

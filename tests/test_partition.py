@@ -30,7 +30,7 @@ from repro.quant import QuantConfig
 
 N, P, NQ, K = 900, 5, 10, 10
 CFG = HelpConfig(gamma=6, gamma_new=3, max_rounds=4)
-MODES = ("none", "sq8", "pq")
+MODES = ("none", "sq8", "pq", "pq4", "opq-pq4")
 
 
 @pytest.fixture(scope="module")
@@ -185,6 +185,39 @@ class TestSegmentStore:
         assert part.n_real == 10 and part.n_pad == 256
         rid = np.asarray(part.row_ids)
         assert (rid[:10] >= 0).all() and (rid[10:] == -1).all()
+
+    def test_prefetch_double_buffer(self):
+        """Staged loads are claimed by get (prefetch_hits); stale entries
+        falling off the two-deep buffer count as wasted; residency/caps are
+        charged only at install time."""
+        sizes = {i: 100 for i in range(5)}
+        store = SegmentStore(_fake_loader(sizes), cap_rows=4096)
+        order = list(range(4))
+        for i, pid in enumerate(order):
+            if i + 1 < len(order):
+                store.prefetch(order[i + 1])
+            store.get(pid)
+        st = store.stats()
+        assert st["prefetch_hits"] == 3 and st["prefetch_wasted"] == 0
+        assert st["loads"] == 4
+        # never-claimed staging counts as wasted on drop/evict_all
+        store.prefetch(4)
+        store.evict_all()
+        assert store.stats()["prefetch_wasted"] == 1
+        # prefetch of a resident pid is a no-op
+        store.get(0)
+        store.prefetch(0)
+        assert store.stats()["prefetch_hits"] == 3
+
+    def test_prefetch_buffer_depth_two(self):
+        store = SegmentStore(_fake_loader({i: 100 for i in range(4)}),
+                             cap_rows=4096)
+        for pid in range(4):  # no interleaved gets: oldest entries fall off
+            store.prefetch(pid)
+        st = store.stats()
+        assert st["prefetch_wasted"] == 2
+        assert store.get(3) is not None
+        assert store.stats()["prefetch_hits"] == 1
 
     def test_reset_counters_keeps_residency(self):
         store = SegmentStore(_fake_loader({0: 100, 1: 100}), cap_rows=1024)

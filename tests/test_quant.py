@@ -1,5 +1,7 @@
-"""Quantized search subsystem: codec roundtrips, ADC kernel parity
-(interpret mode), quantized index persistence, end-to-end recall."""
+"""Quantized search subsystem: codec roundtrips (SQ8 / PQ / packed 4-bit
+PQ / OPQ rotation), codec meta versioning, quantized index persistence,
+end-to-end recall. Kernel parity lives in tests/test_adc_scan.py (the CI
+kernel-parity gate)."""
 import dataclasses
 import os
 
@@ -8,26 +10,34 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import auto as auto_mod
-from repro.core.auto import MetricConfig
 from repro.core.baselines import brute_force_hybrid, recall_at_k
 from repro.core.help_graph import HelpConfig
 from repro.core.index import StableIndex
 from repro.core.routing import RoutingConfig
 from repro.data.synthetic import make_hybrid_dataset
-from repro.kernels.adc_scan.adc_scan import adc_scan_scores
-from repro.kernels.adc_scan.ref import adc_scan_ref
 from repro.quant import (
+    CODEC_VERSION,
     QuantConfig,
     QuantizedVectors,
     adc_gathered_sqdist,
     adc_lut,
+    opq_reconstruct,
+    opq_train,
+    pack_nibbles,
     pq_decode,
     pq_encode,
     pq_train,
+    rotate,
     sq8_decode,
     sq8_encode,
+    unpack_nibbles,
 )
+from repro.quant.store import check_codec_spec, codec_spec
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis — deterministic fallback
+    from _hypothesis_compat import given, settings, st
 
 
 @pytest.fixture(scope="module")
@@ -97,93 +107,15 @@ class TestPQCodec:
         np.testing.assert_allclose(d_adc, d_exact, rtol=1e-4, atol=1e-3)
 
 
-class TestADCScanKernel:
-    @pytest.mark.parametrize("b,n,s,l", [
-        (4, 300, 8, 5),          # ragged N, everything padded
-        (8, 256, 16, 7),         # exact blocks
-        (1, 1, 4, 1),            # degenerate
-        (9, 513, 8, 3),          # ragged in B and N
-    ])
-    def test_matches_ref(self, b, n, s, l):
-        rng = np.random.default_rng(n + s)
-        lut = jnp.asarray(rng.uniform(0, 4, size=(b, s, 256)), jnp.float32)
-        codes = jnp.asarray(rng.integers(0, 256, size=(n, s)), jnp.int32)
-        qa = jnp.asarray(rng.integers(0, 4, size=(b, l)), jnp.int32)
-        xa = jnp.asarray(rng.integers(0, 4, size=(n, l)), jnp.int32)
-        got = adc_scan_scores(lut, codes, qa, xa, alpha=0.8, interpret=True)
-        want = adc_scan_ref(lut, codes, qa, xa, alpha=0.8)
-        np.testing.assert_allclose(
-            np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-5
-        )
-
-    def test_l2_mode_and_mask(self):
-        rng = np.random.default_rng(3)
-        lut = jnp.asarray(rng.uniform(0, 2, size=(5, 8, 256)), jnp.float32)
-        codes = jnp.asarray(rng.integers(0, 256, size=(100, 8)), jnp.int32)
-        qa = jnp.asarray(rng.integers(0, 3, size=(5, 4)), jnp.int32)
-        xa = jnp.asarray(rng.integers(0, 3, size=(100, 4)), jnp.int32)
-        mask = jnp.asarray(rng.integers(0, 2, size=(5, 4)), jnp.int32)
-        for mode, m in (("l2", None), ("auto", mask)):
-            got = adc_scan_scores(
-                lut, codes, qa, xa, alpha=1.3, mode=mode, mask=m, interpret=True
-            )
-            want = adc_scan_ref(lut, codes, qa, xa, alpha=1.3, mode=mode, mask=m)
-            np.testing.assert_allclose(
-                np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-5
-            )
-
-    def test_interval_targets_match_ref(self):
-        """[lo, hi] interval targets through the fused ADC penalty: kernel
-        == ref, degenerate intervals bit-exact to the point path."""
-        rng = np.random.default_rng(7)
-        b, n, s, l = 5, 300, 8, 4
-        lut = jnp.asarray(rng.uniform(0, 4, size=(b, s, 256)), jnp.float32)
-        codes = jnp.asarray(rng.integers(0, 256, size=(n, s)), jnp.int32)
-        lo = jnp.asarray(rng.integers(0, 3, size=(b, l)), jnp.int32)
-        iv = jnp.stack([lo, lo + 2], -1)
-        xa = jnp.asarray(rng.integers(0, 5, size=(n, l)), jnp.int32)
-        got = adc_scan_scores(lut, codes, iv, xa, alpha=0.8, interpret=True)
-        want = adc_scan_ref(lut, codes, iv, xa, alpha=0.8)
-        np.testing.assert_allclose(
-            np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-5
-        )
-        qa = jnp.asarray(rng.integers(0, 5, size=(b, l)), jnp.int32)
-        deg = jnp.stack([qa, qa], -1)
-        np.testing.assert_array_equal(
-            np.asarray(adc_scan_scores(lut, codes, deg, xa, alpha=0.8,
-                                       interpret=True)),
-            np.asarray(adc_scan_scores(lut, codes, qa, xa, alpha=0.8,
-                                       interpret=True)),
-        )
-
-    def test_consistent_with_exact_on_decoded_vectors(self):
-        """ADC fused scores == exact fused scores of the reconstruction."""
-        rng = np.random.default_rng(4)
-        x = rng.normal(size=(400, 32)).astype(np.float32)
-        cb = pq_train(x, n_subspaces=8, n_iters=8, n_samples=400, seed=0)
-        codes = pq_encode(x, cb)
-        dec = pq_decode(codes, cb)
-        q = rng.normal(size=(6, 32)).astype(np.float32)
-        qa = jnp.asarray(rng.integers(0, 3, size=(6, 5)), jnp.int32)
-        xa = jnp.asarray(rng.integers(0, 3, size=(400, 5)), jnp.int32)
-        lut = adc_lut(q, cb)
-        got = adc_scan_scores(lut, codes, qa, xa, alpha=0.9, interpret=True)
-        want = auto_mod.brute_fused_sqdist(
-            jnp.asarray(q), qa, dec, xa, MetricConfig(mode="auto", alpha=0.9)
-        )
-        np.testing.assert_allclose(
-            np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-2
-        )
-
-
 class TestQuantizedIndex:
-    @pytest.mark.parametrize("mode", ["sq8", "pq"])
+    @pytest.mark.parametrize("mode", ["sq8", "pq", "pq4", "opq-pq4"])
     def test_save_load_roundtrip(self, small_ds, tmp_path, mode):
         idx = StableIndex.build(
             small_ds.features[:1000], small_ds.attrs[:1000],
             HelpConfig(gamma=12, gamma_new=4, max_rounds=2,
                        quality_sample=64, node_block=512),
-            quant_cfg=QuantConfig(mode=mode, pq_subspaces=8, pq_train_iters=5),
+            quant_cfg=QuantConfig(mode=mode, pq_subspaces=8, pq_train_iters=5,
+                                  opq_iters=2),
         )
         path = os.path.join(tmp_path, f"idx_{mode}")
         idx.save(path)
@@ -202,6 +134,10 @@ class TestQuantizedIndex:
                 np.asarray(idx.quant.codebook.centroids),
                 np.asarray(idx2.quant.codebook.centroids),
             )
+        if idx.quant.rotation is not None:
+            np.testing.assert_array_equal(
+                np.asarray(idx.quant.rotation), np.asarray(idx2.quant.rotation)
+            )
         # loaded index must search identically to the in-memory one
         r1 = idx.search(small_ds.query_features, small_ds.query_attrs, 10)
         r2 = idx2.search(small_ds.query_features, small_ds.query_attrs, 10)
@@ -213,7 +149,7 @@ class TestQuantizedIndex:
         idx2 = StableIndex.load(path)
         assert idx2.quant is None
 
-    @pytest.mark.parametrize("mode", ["sq8", "pq"])
+    @pytest.mark.parametrize("mode", ["sq8", "pq", "pq4", "opq-pq"])
     def test_recall_within_3_points_and_fewer_fp_evals(self, small_ds,
                                                        small_index, mode):
         ds = small_ds
@@ -255,3 +191,120 @@ class TestQuantizedIndex:
             RoutingConfig(k=10, pool_size=64, rerank_size=4)  # < k
         with pytest.raises(ValueError):
             QuantConfig(mode="int2")
+
+
+class TestNibblePacking:
+    @given(st.integers(1, 40), st.integers(1, 33), st.integers(0, 10**6))
+    @settings(max_examples=25, deadline=None)
+    def test_pack_unpack_roundtrip(self, n, s, seed):
+        """Property: unpack(pack(c)) == c for any S, including odd S where
+        the last byte carries a zero pad nibble."""
+        rng = np.random.default_rng(seed)
+        codes = rng.integers(0, 16, size=(n, s))
+        packed = pack_nibbles(jnp.asarray(codes, jnp.int32))
+        assert packed.dtype == jnp.uint8
+        assert packed.shape == (n, (s + 1) // 2)
+        np.testing.assert_array_equal(
+            np.asarray(unpack_nibbles(packed, s)), codes
+        )
+        if s % 2:  # pad nibble must be zero so a zero-padded LUT ignores it
+            assert (np.asarray(packed)[:, -1] >> 4 == 0).all()
+
+    def test_packed_halves_code_bytes(self):
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(600, 32)).astype(np.float32)
+        q8 = QuantizedVectors.build(x, QuantConfig(mode="pq", pq_subspaces=8,
+                                                   pq_train_iters=3))
+        q4 = QuantizedVectors.build(x, QuantConfig(mode="pq4", pq_subspaces=8,
+                                                   pq_train_iters=3))
+        assert q8.codes.dtype == jnp.uint8 and q4.codes.dtype == jnp.uint8
+        assert q4.code_bytes * 2 == q8.code_bytes
+
+
+class TestOPQ:
+    @pytest.fixture(scope="class")
+    def correlated(self):
+        """Low-rank + noise: the regime where a learned rotation pays."""
+        rng = np.random.default_rng(5)
+        lat = rng.normal(size=(2000, 16)).astype(np.float32)
+        mix = rng.normal(size=(16, 64)).astype(np.float32)
+        return lat @ mix + 0.05 * rng.normal(size=(2000, 64)).astype(np.float32)
+
+    @pytest.fixture(scope="class")
+    def trained(self, correlated):
+        return opq_train(correlated, n_subspaces=8, n_centroids=16,
+                         n_iters=5, opq_iters=3, n_samples=2000, seed=0)
+
+    def test_rotation_orthogonal(self, trained):
+        rot, _ = trained
+        r = np.asarray(rot)
+        np.testing.assert_allclose(r.T @ r, np.eye(r.shape[0]), atol=1e-4)
+
+    def test_rotation_preserves_distances(self, correlated, trained):
+        rot, _ = trained
+        x, y = correlated[:64], correlated[64:128]
+        d0 = np.linalg.norm(x - y, axis=1)
+        d1 = np.linalg.norm(
+            np.asarray(rotate(x, rot)) - np.asarray(rotate(y, rot)), axis=1
+        )
+        np.testing.assert_allclose(d0, d1, rtol=1e-4, atol=1e-3)
+
+    def test_opq_reconstruction_beats_plain_pq(self, correlated, trained):
+        x = correlated
+        rot, cb = trained
+        codes = pq_encode(rotate(x, rot), cb)
+        rec = np.asarray(opq_reconstruct(codes, cb, rot, x.shape[1]))
+        mse_opq = float(np.mean((rec - x) ** 2))
+        cb0 = pq_train(x, n_subspaces=8, n_centroids=16, n_iters=5,
+                       n_samples=2000, seed=0)
+        dec0 = np.asarray(pq_decode(pq_encode(x, cb0), cb0))[:, : x.shape[1]]
+        mse_pq = float(np.mean((dec0 - x) ** 2))
+        assert mse_opq <= mse_pq, (mse_opq, mse_pq)
+
+
+class TestCodecMeta:
+    def _spec(self, mode):
+        return codec_spec(QuantConfig(mode=mode, pq_subspaces=8))
+
+    def test_spec_versions(self):
+        assert self._spec("pq")["version"] == 1
+        for mode in ("pq4", "opq-pq", "opq-pq4"):
+            assert self._spec(mode)["version"] == CODEC_VERSION
+
+    def test_future_version_rejected(self):
+        spec = dict(self._spec("pq4"), version=CODEC_VERSION + 1)
+        with pytest.raises(ValueError, match="version"):
+            check_codec_spec(spec, QuantConfig(mode="pq4"))
+
+    def test_v2_store_without_spec_rejected(self):
+        """An old writer can't have produced packed/rotated codes — a v2
+        mode with no codec block means a corrupt or hand-edited store."""
+        with pytest.raises(ValueError, match="codec"):
+            check_codec_spec(None, QuantConfig(mode="opq-pq4"))
+
+    def test_mismatched_spec_rejected(self):
+        with pytest.raises(ValueError):
+            check_codec_spec(self._spec("pq"), QuantConfig(mode="pq4"))
+
+    def test_old_reader_rejects_unknown_mode_string(self):
+        # an old QuantConfig (this one) fails loudly on future mode names
+        with pytest.raises(ValueError):
+            QuantConfig(mode="opq-pq2")
+
+    def test_saved_store_roundtrips_spec(self, tmp_path):
+        rng = np.random.default_rng(9)
+        x = rng.normal(size=(400, 32)).astype(np.float32)
+        qv = QuantizedVectors.build(
+            x, QuantConfig(mode="opq-pq4", pq_subspaces=8, pq_train_iters=3,
+                           opq_iters=2)
+        )
+        meta = qv.save(str(tmp_path))
+        assert meta["codec"] == codec_spec(qv.cfg)
+        q2 = QuantizedVectors.load(str(tmp_path), meta)
+        np.testing.assert_array_equal(np.asarray(qv.codes), np.asarray(q2.codes))
+        np.testing.assert_array_equal(
+            np.asarray(qv.rotation), np.asarray(q2.rotation)
+        )
+        meta_bad = dict(meta, codec=dict(meta["codec"], version=99))
+        with pytest.raises(ValueError, match="version"):
+            QuantizedVectors.load(str(tmp_path), meta_bad)
