@@ -670,25 +670,27 @@ def planner_sweep(fast: bool = True, n: int = 0) -> None:
 # ---------------------------------------------------------------------------
 
 
-def serve_sweep(fast: bool = True, n: int = 0) -> None:
+def serve_sweep(fast: bool = True, n: int = 0, skew: float = 0.0) -> None:
     """Throughput + end-to-end p99 of the serving loop across micro-batch
     window × bucket ladder × tenant count, against the unbatched per-query
     baseline on the same engine.
 
-    Requests arrive on a deterministic virtual clock (fixed inter-arrival
-    spacing), so coalescing decisions are reproducible; throughput is
-    measured as completed requests per second of *wall* batch-execution
-    time (``service_qps`` — padding overhead is charged), and p99 is the
-    end-to-end request latency (virtual queueing + wall service). Emits
-    ``BENCH_serve.json``. Pass ``--n`` (benchmarks.run) for the CI smoke.
+    Requests arrive on a deterministic virtual clock via the shared
+    ``benchmarks.trace`` generator (``skew`` > 0 draws queries Zipfian from
+    the distinct pool — ``--skew`` in benchmarks.run), so coalescing
+    decisions are reproducible; throughput is measured as completed
+    requests per second of *wall* batch-execution time (``service_qps`` —
+    padding overhead is charged), and p99 is the end-to-end request latency
+    (virtual queueing + wall service). Emits ``BENCH_serve.json``. Pass
+    ``--n`` (benchmarks.run) for the CI smoke.
     """
     import json
     import os
 
     from benchmarks.common import BENCH_DIR
-    from repro.api import Engine, Query, MATCH
+    from benchmarks.trace import zipf_query_trace
     from repro.serve import (
-        Request, ServerStats, TenantPolicy, TenantRegistry, serve_loop,
+        ServerStats, TenantPolicy, TenantRegistry, serve_loop,
     )
 
     bench = "serve_sweep"
@@ -705,14 +707,15 @@ def serve_sweep(fast: bool = True, n: int = 0) -> None:
     params = SearchParams(k=k, pool_size=pool,
                           pioneer_size=max(4, pool // 8))
 
+    trace_info = {}
+
     def requests_for(n_tenants: int):
-        return [
-            (i * arrival_spacing_s,
-             Request(f"t{i % n_tenants}",
-                     Query(ds.query_features[i],
-                           [MATCH(int(v)) for v in ds.query_attrs[i]])))
-            for i in range(n_requests)
-        ]
+        trace, info = zipf_query_trace(
+            ds, n_requests, skew=skew, n_tenants=n_tenants,
+            spacing_s=arrival_spacing_s, seed=0,
+        )
+        trace_info.update(info)
+        return trace
 
     # -- unbatched baseline: one Engine.search per request, no coalescing --
     singles = [QueryBatch.match(ds.query_features[i:i + 1],
@@ -774,7 +777,213 @@ def serve_sweep(fast: bool = True, n: int = 0) -> None:
         json.dump({
             "n": n, "n_requests": n_requests, "k": k, "pool": pool,
             "arrival_spacing_s": arrival_spacing_s,
+            "trace": trace_info,
             "unbatched": unbatched,
+            "points": points,
+        }, f, indent=2)
+
+
+# ---------------------------------------------------------------------------
+# Cache sweep — hot/cold tiering + result cache under Zipfian traffic
+# ---------------------------------------------------------------------------
+
+
+def cache_sweep(fast: bool = True, n: int = 0) -> None:
+    """Hot/cold tiering + serve-layer result cache vs Zipf skew × hot-row
+    budget, against the PR 5 serving baselines.
+
+    The engine serves PQ codes with a full-precision rerank. The *tiered*
+    variants hold only ``hot_rows`` f32 rows on device (the frequency-
+    tracked head) and gather the cold tail from host — ``hot=0`` is the
+    equal-device-memory baseline (codes only, every rerank row crosses the
+    bus). The untiered engine (full f32 matrix resident, PR 5 behavior) is
+    the memory-unconstrained reference, measured unbatched and batched.
+    Traffic comes from the shared ``benchmarks.trace`` generator at
+    s ∈ {0, 0.8, 1.2}; the result cache variant answers verbatim repeats
+    without device work. Self-asserts: tiering is bit-identical to the
+    untiered engine, the hot tier actually absorbs gathers on skewed
+    traffic, and the result cache never slows serving on a repeat-heavy
+    trace. Emits ``BENCH_cache.json``. Pass ``--n`` (benchmarks.run) for
+    the CI smoke.
+    """
+    import json
+    import os
+
+    from benchmarks.common import BENCH_DIR
+    from benchmarks.trace import zipf_query_trace
+    from repro.cache import ResultCache, TieredEngine
+    from repro.quant import QuantConfig, QuantizedVectors
+    from repro.serve import (
+        ServerStats, TenantPolicy, TenantRegistry, serve_loop,
+    )
+
+    bench = "cache_sweep"
+    n = n or (10_000 if fast else 20_000)
+    n_requests = 512 if fast else 2048
+    n_distinct = 64 if fast else 128  # query pool — repeats appear at skew>0
+    skews = [0.0, 0.8, 1.2]
+    hot_budgets = [0, n // 8] if fast else [0, n // 8, n // 2]
+    k, pool = 10, 64
+    window_ms, ladder = 2.0, (1, 8, 32)
+    spacing_s = 5e-5
+
+    ds = dataset("sift", 5, 3, n, n_distinct)
+    quant = QuantizedVectors.build(
+        ds.features,
+        QuantConfig(mode="pq", pq_subspaces=32,
+                    pq_train_iters=8 if fast else 15),
+    )
+    eng = built_engine(ds, "auto", quant=quant)  # untiered PR 5 reference
+    params = SearchParams(k=k, pool_size=pool,
+                          pioneer_size=max(4, pool // 8))
+    reg_proto = TenantPolicy(params=params)
+    m = ds.features.shape[1]
+    mem = {
+        "f32_bytes": int(n * m * 4),
+        "code_bytes": int(quant.code_bytes),
+        "code_bytes_per_row": int(quant.code_bytes_per_row),
+    }
+
+    # -- bit-exactness self-check: tiered == untiered, ids AND distances --
+    qb = QueryBatch.match(ds.query_features, ds.query_attrs)
+    tiered_chk = TieredEngine(eng, hot_rows=max(hot_budgets) or n // 8,
+                              epoch_queries=n_distinct)
+    ref = eng.search(qb, params)
+    for _ in range(2):  # cold pass, then a promoted-hot-set pass
+        got = tiered_chk.search(qb, params)
+        assert np.array_equal(np.asarray(got.ids), np.asarray(ref.ids)), \
+            "tiered ids diverge from untiered engine"
+        assert np.array_equal(np.asarray(got.dists), np.asarray(ref.dists)), \
+            "tiered distances diverge from untiered engine"
+    emit(bench, "invariant", "bit_identical", 1)
+
+    # -- PR 5 baselines: unbatched per-query + batched serve (full f32) --
+    singles = [QueryBatch.match(ds.query_features[i:i + 1],
+                                ds.query_attrs[i:i + 1])
+               for i in range(n_distinct)]
+    jax.block_until_ready(eng.search(singles[0], params).ids)
+    lat = []
+    for qb1 in singles:
+        t0 = time.perf_counter()
+        jax.block_until_ready(eng.search(qb1, params).ids)
+        lat.append(time.perf_counter() - t0)
+    pr5_unbatched = {
+        "qps": round(n_distinct / sum(lat), 1),
+        "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+    }
+    emit(bench, "pr5_unbatched", "qps", pr5_unbatched["qps"])
+
+    def served(engine, trace, cache=None):
+        """Warm (compile + promote), reset counters, measure one pass."""
+        serve_loop(engine, trace, TenantRegistry(default_policy=reg_proto),
+                   window_ms=window_ms, buckets=ladder, result_cache=cache)
+        if cache is not None:
+            cache.clear()
+            cache.reset_counters()
+        tier = getattr(engine, "tier", None)
+        if tier is not None:
+            tier.reset_counters()
+        stats = ServerStats(engine)
+        _, stats = serve_loop(
+            engine, trace, TenantRegistry(default_policy=reg_proto),
+            window_ms=window_ms, buckets=ladder, stats=stats,
+            result_cache=cache,
+        )
+        return stats.snapshot()
+
+    points = []
+    traces = {}
+    for skew in skews:
+        trace, info = zipf_query_trace(
+            ds, n_requests, skew=skew, n_tenants=4, spacing_s=spacing_s,
+            mean_burst=4.0, seed=0,
+        )
+        traces[str(skew)] = info
+
+        # PR 5 batched reference on this trace (untiered, no cache)
+        snap = served(eng, trace)
+        base_qps = snap["service_qps"]
+        points.append({
+            "skew": skew, "variant": "pr5_batched", "hot_rows": None,
+            "result_cache": False, "service_qps": snap["service_qps"],
+            "p99_ms": snap["latency_ms"]["p99"],
+            "device_bytes": mem["f32_bytes"] + mem["code_bytes"],
+        })
+        emit(bench, f"s{skew}/pr5_batched", "service_qps",
+             snap["service_qps"])
+
+        for hot in hot_budgets:
+            for use_cache in (False, True):
+                tiered = TieredEngine(
+                    eng, hot_rows=hot,
+                    epoch_queries=max(64, n_requests // 4),
+                )
+                cache = ResultCache(max_entries=4 * n_distinct) \
+                    if use_cache else None
+                snap = served(tiered, trace, cache)
+                tier = snap.get("tier", {})
+                rc = snap.get("result_cache", {})
+                tag = (f"s{skew}/hot{hot}" + ("/cache" if use_cache else ""))
+                emit(bench, tag, "service_qps", snap["service_qps"])
+                emit(bench, tag, "p99_ms", snap["latency_ms"]["p99"])
+                if tier:
+                    emit(bench, tag, "tier_hit_rate",
+                         round(tier.get("tier_hit_rate", 0.0), 4))
+                if rc:
+                    emit(bench, tag, "cache_hit_rate",
+                         round(rc.get("hit_rate", 0.0), 4))
+                points.append({
+                    "skew": skew, "variant": "tiered", "hot_rows": hot,
+                    "result_cache": use_cache,
+                    "service_qps": snap["service_qps"],
+                    "p99_ms": snap["latency_ms"]["p99"],
+                    "completed": snap["completed"],
+                    "tier_hit_rate": round(tier.get("tier_hit_rate", 0.0), 4),
+                    "cache_hit_rate": round(rc.get("hit_rate", 0.0), 4)
+                    if rc else None,
+                    "cache_served": rc.get("served") if rc else None,
+                    "device_bytes": mem["code_bytes"] + hot * m * 4,
+                    "speedup_vs_pr5_batched": round(
+                        snap["service_qps"] / base_qps, 3
+                    ) if base_qps else None,
+                })
+
+    # -- self-asserts the CI smoke relies on ------------------------------
+    skewed = [p for p in points if p["variant"] == "tiered"
+              and p["skew"] >= 0.8]
+    hot_hits = max(p["tier_hit_rate"] for p in skewed
+                   if p["hot_rows"] and not p["result_cache"])
+    assert hot_hits > 0, \
+        "hot tier absorbed no rerank gathers on Zipf-skewed traffic"
+    emit(bench, "invariant", "hot_tier_hit_rate_max", round(hot_hits, 4))
+    for skew in (s for s in skews if s >= 0.8):
+        for hot in hot_budgets:
+            off = next(p for p in points
+                       if p["variant"] == "tiered" and p["skew"] == skew
+                       and p["hot_rows"] == hot and not p["result_cache"])
+            on = next(p for p in points
+                      if p["variant"] == "tiered" and p["skew"] == skew
+                      and p["hot_rows"] == hot and p["result_cache"])
+            assert on["cache_served"] > 0, \
+                f"result cache served nothing at skew {skew}"
+            speedup = (on["service_qps"] / off["service_qps"]
+                       if off["service_qps"] else 1.0)
+            emit(bench, f"s{skew}/hot{hot}", "cache_speedup",
+                 round(speedup, 3))
+            assert speedup >= 1.0, (
+                f"result cache slowed serving at skew {skew} hot {hot}: "
+                f"{on['service_qps']} vs {off['service_qps']} qps"
+            )
+
+    flush_csv(bench)
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    with open(os.path.join(BENCH_DIR, "BENCH_cache.json"), "w") as f:
+        json.dump({
+            "n": n, "n_requests": n_requests, "n_distinct": n_distinct,
+            "k": k, "pool": pool, "window_ms": window_ms,
+            "buckets": list(ladder), "quant_mode": "pq",
+            "memory": mem, "traces": traces,
+            "pr5_unbatched": pr5_unbatched,
             "points": points,
         }, f, indent=2)
 
@@ -1080,6 +1289,7 @@ ALL = [
     filter_sweep,
     planner_sweep,
     serve_sweep,
+    cache_sweep,
     mutate_sweep,
     scale_sweep,
 ]

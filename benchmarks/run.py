@@ -24,6 +24,9 @@ def main() -> None:
     ap.add_argument("--partitions", type=int, default=0,
                     help="partition-count override for benchmarks accepting "
                          "partitions (scale_sweep; CI smoke uses 8)")
+    ap.add_argument("--skew", type=float, default=0.0,
+                    help="Zipf query-popularity exponent for benchmarks "
+                         "accepting skew (serve_sweep; 0 = uniform)")
     args = ap.parse_args()
 
     from benchmarks import paper_benchmarks as pb
@@ -41,6 +44,8 @@ def main() -> None:
             kw["n"] = args.n
         if args.partitions and "partitions" in sig:
             kw["partitions"] = args.partitions
+        if args.skew and "skew" in sig:
+            kw["skew"] = args.skew
         print(f"=== {fn.__name__} ===", flush=True)
         t0 = time.time()
         fn(fast=not args.full, **kw)

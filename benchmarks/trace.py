@@ -1,0 +1,89 @@
+"""Shared synthetic serving-trace generator for the serve/cache sweeps.
+
+Real serving traffic is not uniform: query popularity is Zipfian (a head of
+queries repeats constantly while a long tail appears once), the rows those
+queries touch inherit the same skew, and arrivals come in bursts rather
+than a metronome. ``zipf_query_trace`` models all three with one seeded
+generator so ``serve_sweep`` (``--skew``) and ``cache_sweep`` measure the
+same traffic shape:
+
+* **query popularity** — request i draws its query index from the dataset's
+  distinct query pool with P(rank r) ∝ 1/r^s (s=0: uniform). A popular
+  query repeats *verbatim* (same vector bytes, predicates, params), which
+  is exactly what the serve-layer result cache keys on; its result rows
+  recur equally often, which is what the hot tier's frequency tracker sees.
+* **bursty arrivals** — burst sizes are geometric with the given mean;
+  requests inside a burst share one arrival timestamp and the gap to the
+  next burst keeps the *mean* offered rate at ``1/spacing_s`` regardless of
+  burstiness.
+* **tenants** — round-robin over ``n_tenants`` (tenant mix is orthogonal
+  to popularity here).
+
+Returns the ``(arrival_time, Request)`` list the deterministic
+``serve_loop`` driver consumes, plus an info dict with the realized repeat
+fraction (an upper bound on any result cache's hit rate) and head
+concentration (traffic share of the 10% most popular queries).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def zipf_query_trace(
+    ds,
+    n_requests: int,
+    skew: float = 0.0,
+    n_tenants: int = 4,
+    spacing_s: float = 5e-5,
+    mean_burst: float = 1.0,
+    seed: int = 0,
+):
+    """Scripted trace over ``ds``'s distinct query pool (see module doc)."""
+    from repro.api import MATCH, Query
+    from repro.serve import Request
+
+    rng = np.random.default_rng(seed)
+    pool = int(ds.query_features.shape[0])
+
+    if skew > 0:
+        # rank r (1-based) gets weight 1/r^s; pool order is already
+        # arbitrary so rank == pool index without an extra permutation
+        w = 1.0 / np.arange(1, pool + 1, dtype=np.float64) ** float(skew)
+        w /= w.sum()
+        qidx = rng.choice(pool, size=n_requests, p=w)
+    else:
+        qidx = rng.integers(0, pool, size=n_requests)
+
+    # geometric bursts: k requests land at one instant, then the clock
+    # advances k*spacing so the mean offered rate stays 1/spacing_s
+    times = np.empty(n_requests, np.float64)
+    t, i = 0.0, 0
+    while i < n_requests:
+        b = 1 if mean_burst <= 1.0 else int(rng.geometric(1.0 / mean_burst))
+        b = min(b, n_requests - i)
+        times[i:i + b] = t
+        t += spacing_s * b
+        i += b
+
+    trace = [
+        (float(times[i]),
+         Request(f"t{i % n_tenants}",
+                 Query(ds.query_features[j],
+                       [MATCH(int(v)) for v in ds.query_attrs[j]])))
+        for i, j in enumerate(qidx)
+    ]
+
+    counts = np.bincount(qidx, minlength=pool)
+    head = max(1, pool // 10)
+    top = np.sort(counts)[::-1]
+    info = {
+        "skew": float(skew),
+        "distinct_queries": int((counts > 0).sum()),
+        "repeat_fraction": round(
+            float((n_requests - (counts > 0).sum()) / n_requests), 4
+        ),
+        "head10_traffic_share": round(float(top[:head].sum()) / n_requests, 4),
+        "mean_burst": float(mean_burst),
+        "spacing_s": float(spacing_s),
+    }
+    return trace, info

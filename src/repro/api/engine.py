@@ -341,6 +341,14 @@ class Engine:
     ``planner.cost_model_from_table``); otherwise it is calibrated lazily
     from one probe traversal the first time an auto-plan needs it."""
 
+    #: monotone index-content version for result caching. Immutable engines
+    #: stay at 0 forever; ``MutableEngine`` shadows this with an instance
+    #: counter bumped inside the write lock (see ``repro.mutable.engine``),
+    #: and ``repro.cache.ResultCache`` only serves entries whose recorded
+    #: epoch equals the engine's current one. Class attribute (not a
+    #: dataclass field) so equality/repr semantics are untouched.
+    write_epoch = 0
+
     index: Union[StableIndex, "ShardedStableIndex"]  # noqa: F821
     cost_model_override: Optional[CostModel] = dataclasses.field(
         default=None, repr=False, compare=False

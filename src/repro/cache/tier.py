@@ -1,0 +1,149 @@
+"""Hot/cold row tiering for the full-precision rerank gather.
+
+Under a ``hot_rows`` budget the top-frequency rows are kept full-precision
+and *contiguous* on device (``hot_features``); the cold tail stays wherever
+the engine keeps it — PQ/pq4 codes on device for the traversal, f32 rows in
+the host store (``features_host``, possibly a memmap) for the rerank. The
+rerank gather then routes through ``slot_of``: hot candidates resolve with
+one direct device ``take`` (no decode, no host traffic), cold candidates
+are gathered host-side and transferred as a small (B, R, M) buffer.
+
+Scores stay exact by construction — a hot row is a bit-identical copy of
+its source f32 row, and the mixed gather combines the two sources with a
+``where`` that never touches the values — so tiering changes *where* bytes
+come from, never what they are (``tests/test_cache.py`` asserts the full
+search output is bit-identical to the untiered engine).
+
+Promotion/demotion runs in epochs with hysteresis: resident rows get their
+decayed frequency multiplied by ``hysteresis`` before the top-``hot_rows``
+cut, so a cold challenger must beat a resident by that factor to displace
+it (no thrash on near-tied popularity).
+"""
+from __future__ import annotations
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["HotTier"]
+
+
+class HotTier:
+    """Frequency-ranked hot row slice + tier-routed candidate gather."""
+
+    def __init__(
+        self,
+        features_host: np.ndarray,  # (N, M) f32 host store (memmap ok)
+        hot_rows: int,
+        hysteresis: float = 1.5,
+    ):
+        if hot_rows < 0:
+            raise ValueError("hot_rows must be nonnegative")
+        if hysteresis < 1.0:
+            raise ValueError("hysteresis must be ≥ 1 (1 = no stickiness)")
+        self.features_host = features_host
+        self.n_rows = int(features_host.shape[0])
+        self.hot_rows = min(int(hot_rows), self.n_rows)
+        self.hysteresis = float(hysteresis)
+        self.slot_of = np.full(self.n_rows, -1, np.int32)
+        self.hot_ids = np.empty(0, np.int64)
+        self.hot_features = None  # (H, M) device slice, None while empty
+        self._lock = threading.Lock()
+        # row-granular gather counters (a candidate slot = one row gather)
+        self.hot_row_hits = 0
+        self.cold_row_gathers = 0
+        self.promotions = 0
+        self.demotions = 0
+        self.epochs = 0
+
+    # -- promotion ---------------------------------------------------------
+
+    def promote(self, counts: np.ndarray) -> None:
+        """Recompute the hot set from decayed frequency ``counts`` (N,).
+
+        Residents keep a ``hysteresis`` score multiplier; rows with zero
+        frequency are never promoted. The hot slice is rebuilt contiguously
+        in ascending-id order (deterministic layout, stable slot map).
+        """
+        if self.hot_rows <= 0:
+            return
+        eff = np.asarray(counts, np.float64).copy()
+        if self.hot_ids.size:
+            eff[self.hot_ids] *= self.hysteresis
+        top = np.argsort(-eff, kind="stable")[: self.hot_rows]
+        new = np.sort(top[eff[top] > 0]).astype(np.int64)
+        with self._lock:
+            old = self.hot_ids
+            self.promotions += int(np.setdiff1d(new, old).size)
+            self.demotions += int(np.setdiff1d(old, new).size)
+            slot_of = np.full(self.n_rows, -1, np.int32)
+            slot_of[new] = np.arange(new.size, dtype=np.int32)
+            # publish new arrays atomically (gather snapshots references)
+            self.hot_features = (
+                jax.device_put(
+                    np.ascontiguousarray(self.features_host[new], np.float32)
+                )
+                if new.size
+                else None
+            )
+            self.slot_of = slot_of
+            self.hot_ids = new
+            self.epochs += 1
+
+    # -- gather ------------------------------------------------------------
+
+    def gather(self, ids: np.ndarray) -> jax.Array:
+        """(…, M) f32 candidate rows for host-side ``ids`` (INVALID → row 0,
+        matching ``graph_ops.gather_rows``), routed through the tier map."""
+        with self._lock:
+            slot_of, hot_features = self.slot_of, self.hot_features
+        ids = np.maximum(np.asarray(ids, np.int64), 0)
+        slots = slot_of[ids]
+        hot = slots >= 0
+        n_hot = int(hot.sum())
+        n_cold = int(ids.size - n_hot)
+        with self._lock:
+            self.hot_row_hits += n_hot
+            self.cold_row_gathers += n_cold
+        if n_hot and n_cold == 0:
+            return jnp.take(hot_features, jnp.asarray(slots), axis=0)
+        # cold rows gather host-side (hot slots read row 0 — cheap, values
+        # discarded by the where below); transfer one (…, M) buffer
+        host = jnp.asarray(
+            np.ascontiguousarray(
+                self.features_host[np.where(hot, 0, ids)], np.float32
+            )
+        )
+        if n_hot == 0:
+            return host
+        dev = jnp.take(hot_features, jnp.asarray(np.maximum(slots, 0)), axis=0)
+        return jnp.where(jnp.asarray(hot)[..., None], dev, host)
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def hot_bytes(self) -> int:
+        return 0 if self.hot_features is None else int(self.hot_ids.size) * int(
+            self.features_host.shape[1]
+        ) * 4
+
+    def stats(self) -> dict:
+        with self._lock:
+            total = self.hot_row_hits + self.cold_row_gathers
+            return {
+                "hot_rows_budget": self.hot_rows,
+                "hot_rows_resident": int(self.hot_ids.size),
+                "hot_bytes": self.hot_bytes,
+                "hot_row_hits": self.hot_row_hits,
+                "cold_row_gathers": self.cold_row_gathers,
+                "tier_hit_rate": (self.hot_row_hits / total) if total else 0.0,
+                "promotions": self.promotions,
+                "demotions": self.demotions,
+                "epochs": self.epochs,
+            }
+
+    def reset_counters(self) -> None:
+        with self._lock:
+            self.hot_row_hits = self.cold_row_gathers = 0

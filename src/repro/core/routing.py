@@ -510,6 +510,105 @@ def _search_jit(
     return emit_topk(state, db_v, db_a, qv, qa, metric_cfg, cfg, mask)
 
 
+@partial(
+    jax.jit,
+    static_argnames=("metric_cfg", "cfg", "n_nodes"),
+)
+def _traverse_jit(
+    db_v: Array,
+    db_a: Array,
+    graph: Array,
+    qv: Array,
+    qa: Array,
+    entry_ids: Array,
+    metric_cfg: MetricConfig,
+    cfg: RoutingConfig,
+    n_nodes: int,
+    mask: Optional[Array] = None,
+    quant: tuple = (),
+) -> tuple[Array, Array, Array]:
+    _TRACE_COUNT[0] += 1  # runs only while tracing (see trace_count)
+    state = traverse_pool(
+        db_v, db_a, graph, qv, qa, entry_ids, metric_cfg, cfg, n_nodes,
+        mask, quant,
+    )
+    return state.r_ids[:, : cfg.effective_rerank], state.evals, state.hops
+
+
+def search_pool(
+    db_a: Array,
+    graph: Array,
+    qv: Array,
+    qa: Array,
+    entry_ids: Array,
+    metric_cfg: MetricConfig,
+    cfg: RoutingConfig,
+    n_nodes: int,
+    mask: Optional[Array] = None,
+    quant: tuple = (),
+) -> tuple[Array, Array, Array]:
+    """Stages 1–3 only, for callers that source the rerank vectors
+    themselves (the hot/cold tier in ``repro.cache``): traverse over
+    compressed codes and return ``(r_ids, evals, hops)`` where ``r_ids`` is
+    the pool head trimmed to ``cfg.effective_rerank``.
+
+    Quantized modes never read ``db_v`` during traversal (codes carry the
+    feature term — see ``_score_candidates``), so no f32 matrix is taken as
+    an operand at all; a (1, M) dummy satisfies the shared stage signatures.
+    """
+    if cfg.quant_mode == "none":
+        raise ValueError("search_pool requires a quantized traversal codec")
+    dummy_v = jnp.zeros((1, qv.shape[1]), jnp.float32)
+    return _traverse_jit(
+        dummy_v, db_a, graph, qv, qa, entry_ids, metric_cfg, cfg, n_nodes,
+        mask, quant,
+    )
+
+
+@partial(jax.jit, static_argnames=("metric_cfg", "cfg"))
+def rerank_gathered(
+    cv: Array,  # (B, R, M) candidate f32 rows, pre-gathered (INVALID → row 0)
+    db_a: Array,
+    r_ids: Array,  # (B, R) pool-head ids (INVALID-padded)
+    qv: Array,
+    qa: Array,
+    metric_cfg: MetricConfig,
+    cfg: RoutingConfig,
+    mask: Optional[Array] = None,
+    evals: Optional[Array] = None,
+    hops: Optional[Array] = None,
+) -> SearchResult:
+    """Stage 4 for pre-gathered candidates: the exact op sequence of
+    ``emit_topk``'s quantized branch, with the f32 gather replaced by the
+    caller-supplied ``cv`` (the tier routes hot rows to a contiguous device
+    slice and cold rows to the host store — ``repro.cache.HotTier``). Feeding
+    the same row values ``gops.gather_rows(db_v, r_ids)`` would produce
+    keeps the emitted ids/distances bit-identical to the in-jit rerank
+    (asserted in ``tests/test_cache.py``)."""
+    _TRACE_COUNT[0] += 1  # runs only while tracing (see trace_count)
+    b = r_ids.shape[0]
+    ca = gops.gather_rows(db_a, r_ids)
+    m = mask[:, None, :] if mask is not None else None
+    rd = auto_mod.fused_sqdist(qv[:, None, :], qa[:, None], cv, ca, metric_cfg, m)
+    rd = jnp.where(r_ids < 0, INF, rd)
+    neg, take = jax.lax.top_k(-rd, cfg.k)
+    out_sq = -neg
+    out_ids = jnp.take_along_axis(r_ids, take, axis=1)
+    out_ids = jnp.where(out_sq < INF / 2, out_ids, INVALID)
+    n_dist_evals = (r_ids >= 0).sum(axis=1).astype(jnp.int32)
+    n_code_evals = evals if evals is not None else jnp.zeros((b,), jnp.int32)
+    if cfg.enforce_equality:
+        out_ids, out_sq = enforce_filter(out_ids, out_sq, db_a, qa, mask)
+    return SearchResult(
+        ids=out_ids,
+        dists=jnp.sqrt(jnp.maximum(out_sq, 0.0)),
+        sqdists=out_sq,
+        n_dist_evals=n_dist_evals,
+        n_hops=hops if hops is not None else jnp.zeros((), jnp.int32),
+        n_code_evals=n_code_evals,
+    )
+
+
 def make_entry_ids(n_nodes: int, batch: int, pool_size: int, seed: int = 0) -> Array:
     """Paper Alg. 3 init: random-K seed nodes, shared across the batch.
 

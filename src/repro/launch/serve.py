@@ -39,6 +39,7 @@ def main() -> None:
     from repro.core.baselines import brute_force_hybrid, recall_at_k
     from repro.core.help_graph import HelpConfig
     from repro.data.synthetic import make_hybrid_dataset
+    from repro.cache import ResultCache, TieredEngine
     from repro.mutable import CompactionPolicy, MutableEngine
     from repro.quant import QUANT_MODES, QuantConfig
     from repro.serve import (
@@ -85,6 +86,18 @@ def main() -> None:
     ap.add_argument("--max-delta-rows", type=int, default=1024,
                     help="compaction trigger: merge when the delta holds "
                          "this many rows")
+    ap.add_argument("--hot-rows", type=int, default=0,
+                    help="hot/cold tiering: keep the top-frequency rows "
+                         "full-precision on device and rerank the cold "
+                         "tail from host (0 = untiered; incompatible "
+                         "with --writes)")
+    ap.add_argument("--result-cache", type=int, default=0,
+                    help="serve-layer result cache capacity in entries "
+                         "(0 = off); hits return the cached top-k payload "
+                         "bit-identical, invalidated by writes")
+    ap.add_argument("--cache-ttl", type=float, default=0.0,
+                    help="result-cache entry lifetime in seconds "
+                         "(0 = no expiry)")
     args = ap.parse_args()
     buckets = tuple(int(b) for b in args.buckets.split(","))
     n_writes = max(0, min(args.writes, args.n // 2))
@@ -155,6 +168,20 @@ def main() -> None:
     ]
     reqs = list(read_reqs)
 
+    hot_rows = args.hot_rows
+    if hot_rows and n_writes:
+        # merges renumber rows under the frequency tracker, so the tier
+        # only wraps an immutable engine (TieredEngine rejects the mix)
+        print("--hot-rows is incompatible with --writes; serving untiered")
+        hot_rows = 0
+    if hot_rows:
+        eng = TieredEngine(
+            eng, hot_rows=hot_rows,
+            epoch_queries=min(512, max(64, args.requests // 4)),
+        )
+        print(f"hot/cold tiering: top {hot_rows} rows full-precision on "
+              "device, cold tail reranked from host")
+
     deleted: list = []
     if n_writes:
         eng = MutableEngine(eng, CompactionPolicy(
@@ -194,8 +221,16 @@ def main() -> None:
     print(f"serving {len(reqs)} requests ({len(read_reqs)} queries, "
           f"{len(reqs) - len(read_reqs)} writes) from {len(tenants)} "
           f"tenants (window={args.window_ms}ms, buckets={buckets})")
+    result_cache = None
+    if args.result_cache > 0:
+        result_cache = ResultCache(
+            max_entries=args.result_cache,
+            ttl=args.cache_ttl if args.cache_ttl > 0 else None,
+        )
+        print(f"result cache: {args.result_cache} entries"
+              + (f", ttl={args.cache_ttl:g}s" if args.cache_ttl > 0 else ""))
     with ThreadedServer(eng, reg, window_ms=args.window_ms,
-                        buckets=buckets) as srv:
+                        buckets=buckets, result_cache=result_cache) as srv:
         futs = [srv.submit(r) for r in reqs]
         results = [f.result() for f in futs]
 
@@ -218,6 +253,17 @@ def main() -> None:
     for t, c in snap["per_tenant"].items():
         print(f"    {t}: {c['completed']}/{c['submitted']} served "
               f"({c['qps']:.0f} qps, {c['rejected']} shed)")
+    if "tier" in snap:
+        t = snap["tier"]
+        print(f"  tier: hit rate {t.get('tier_hit_rate', 0.0):.2f} "
+              f"(hot budget {t['hot_rows_budget']} rows, "
+              f"{t.get('promotions', 0)} promotions, "
+              f"{t.get('demotions', 0)} demotions)")
+    if "result_cache" in snap:
+        rc = snap["result_cache"]
+        print(f"  result cache: {rc['hits']} hits / {rc['misses']} misses "
+              f"(hit rate {rc['hit_rate']:.2f}, {rc['invalidations']} "
+              f"invalidated, {rc['served']} served without device work)")
     if "writes" in snap:
         w = snap["writes"]
         print(f"  writes: {w['upserts']} upserts, {w['deletes']} deletes, "

@@ -119,6 +119,13 @@ class MutableEngine:
         log at that path is replayed here — so constructing over the last
         checkpointed engine reconstructs the exact pre-crash logical state.
         ``checkpoint`` folds + saves + resets the log."""
+        if not isinstance(engine, Engine):
+            raise TypeError(
+                "MutableEngine wraps a built api.Engine — a "
+                "repro.cache.TieredEngine base is rejected because merges "
+                "renumber rows under its frequency tracker (tier the "
+                "immutable engine, route writes here)"
+            )
         if engine.is_sharded:
             raise ValueError(
                 "MutableEngine wraps single-host engines (the sharded "
@@ -133,6 +140,14 @@ class MutableEngine:
             )
         self.engine = engine
         self.policy = policy
+        #: index-content version for the serve-layer result cache: bumped
+        #: inside the write lock in ``_apply_op`` — i.e. strictly before any
+        #: write acknowledgment resolves — so a cache entry recorded under
+        #: the old epoch can never serve a post-write read (read-your-writes
+        #: holds through the cache). Starts at 0 to match immutable
+        #: ``Engine.write_epoch``; WAL replay below bumps it per recovered
+        #: op, which only under-caches.
+        self.write_epoch = 0
         self.delta = DeltaSegment(self.feat_dim, engine.attr_dim)
         self.tombstones: Set[int] = set()
         self.oplog: list = []
@@ -247,6 +262,7 @@ class MutableEngine:
             # log-before-apply: an acknowledged write is on disk before it
             # is visible, so a crash can lose at most unacknowledged ops
             self.wal.append(op.kind, op.id, op.vector, op.attrs)
+        self.write_epoch += 1  # invalidates cached results before the ack
         self.oplog.append(op)
         if op.kind == "upsert":
             self.delta.append(op.id, op.vector, op.attrs)

@@ -90,6 +90,22 @@ class SegmentStore:
     evict-before-load policy. Counters (``hits``/``loads``/``evictions``) and
     gauges (``resident_rows``/``peak_resident_rows``) back both the scale
     benchmark and the residency tests.
+
+    Residency state and all counters are guarded by one re-entrant lock:
+    under ``ThreadedServer`` the serve worker, the background-merge thread
+    and the prefetch worker all reach the store concurrently, and the
+    previous unlocked read-modify-writes could lose counter updates or
+    corrupt the LRU order (regression-tested by the stress test in
+    ``tests/test_cache.py``). ``loader`` I/O and the device transfer run
+    *outside* the lock so a slow disk never serializes unrelated probes.
+
+    ``pin(pids)`` marks partitions the LRU must not evict (the hot tier in
+    ``repro.cache`` pins the top-frequency partitions under its row
+    budget). Pinned partitions are materialized immediately, still charge
+    ``cap_rows``, and simply get skipped by the eviction scan; when nothing
+    evictable remains the evict-before-load loop gives up and loads over
+    the cap (same escape hatch as the documented single-oversized-partition
+    exception — callers keep pinned buckets under the cap).
     """
 
     def __init__(
@@ -103,7 +119,9 @@ class SegmentStore:
         self.loader = loader
         self.cap_rows = int(cap_rows)
         self.bucket_min = int(bucket_min)
+        self._lock = threading.RLock()
         self._resident: "OrderedDict[int, ResidentPartition]" = OrderedDict()
+        self._pinned: set = set()
         self.hits = 0
         self.loads = 0
         self.evictions = 0
@@ -120,22 +138,68 @@ class SegmentStore:
     # -- residency -------------------------------------------------------
 
     def get(self, pid: int) -> ResidentPartition:
-        hit = self._resident.get(pid)
-        if hit is not None:
-            self._resident.move_to_end(pid)
-            self.hits += 1
-            return hit
+        with self._lock:
+            hit = self._resident.get(pid)
+            if hit is not None:
+                self._resident.move_to_end(pid)
+                self.hits += 1
+                return hit
         part = self._claim_prefetch(pid)
         if part is None:
             part = self._materialize(pid)
-        # evict-before-load keeps the peak gauge under the cap
-        while self._resident and self.resident_rows + part.n_pad > self.cap_rows:
-            self._evict_lru()
-        self._resident[pid] = part
-        self.loads += 1
-        self.resident_rows += part.n_pad
-        self.peak_resident_rows = max(self.peak_resident_rows, self.resident_rows)
+        with self._lock:
+            raced = self._resident.get(pid)
+            if raced is not None:  # another thread installed it meanwhile
+                self._resident.move_to_end(pid)
+                self.hits += 1
+                return raced
+            # evict-before-load keeps the peak gauge under the cap; pinned
+            # partitions are skipped, so the loop also stops when only
+            # pinned rows remain
+            while (
+                self.resident_rows + part.n_pad > self.cap_rows
+                and self._evict_lru()
+            ):
+                pass
+            self._resident[pid] = part
+            self.loads += 1
+            self.resident_rows += part.n_pad
+            self.peak_resident_rows = max(
+                self.peak_resident_rows, self.resident_rows
+            )
         return part
+
+    # -- pinning -----------------------------------------------------------
+
+    def pin(self, pids) -> None:
+        """Replace the pinned set: the given partitions become unevictable
+        and are materialized immediately (charging ``cap_rows`` as usual);
+        previously pinned partitions fall back to plain LRU membership."""
+        pids = set(int(p) for p in pids)
+        with self._lock:
+            self._pinned = pids
+        for pid in sorted(pids):
+            self.get(pid)
+
+    def unpin(self) -> None:
+        """Drop every pin (rows stay resident until the LRU evicts them)."""
+        with self._lock:
+            self._pinned = set()
+
+    def pinned_ids(self) -> list[int]:
+        with self._lock:
+            return sorted(self._pinned)
+
+    @property
+    def pinned_rows(self) -> int:
+        """Resident rows (bucket-padded) currently held by pinned
+        partitions."""
+        with self._lock:
+            return sum(
+                p.n_pad
+                for pid, p in self._resident.items()
+                if pid in self._pinned
+            )
 
     # -- prefetch ----------------------------------------------------------
 
@@ -145,8 +209,11 @@ class SegmentStore:
         probe is about to claim plus the one in flight behind it; an older
         entry that falls off the buffer was never claimed and counts as
         ``prefetch_wasted``."""
+        with self._lock:
+            if pid in self._resident:
+                return
         with self._prefetch_lock:
-            if pid in self._resident or pid in self._staged:
+            if pid in self._staged:
                 return
             if self._prefetch_pool is None:
                 self._prefetch_pool = ThreadPoolExecutor(
@@ -155,9 +222,13 @@ class SegmentStore:
             self._staged[pid] = self._prefetch_pool.submit(
                 self._materialize, pid
             )
+            dropped = 0
             while len(self._staged) > 2:
                 self._staged.popitem(last=False)
-                self.prefetch_wasted += 1
+                dropped += 1
+        if dropped:
+            with self._lock:
+                self.prefetch_wasted += dropped
 
     def _claim_prefetch(self, pid: int) -> Optional[ResidentPartition]:
         """Take ``pid``'s staged load if one exists (blocking on the
@@ -168,14 +239,18 @@ class SegmentStore:
         if fut is None:
             return None
         part = fut.result()
-        self.prefetch_hits += 1
+        with self._lock:
+            self.prefetch_hits += 1
         return part
 
     def drop_prefetch(self) -> None:
         """Discard staged loads that were never claimed (counted wasted)."""
         with self._prefetch_lock:
-            self.prefetch_wasted += len(self._staged)
+            dropped = len(self._staged)
             self._staged.clear()
+        if dropped:
+            with self._lock:
+                self.prefetch_wasted += dropped
 
     def _materialize(self, pid: int) -> ResidentPartition:
         data = self.loader(pid)
@@ -198,35 +273,49 @@ class SegmentStore:
             n_pad=b,
         )
 
-    def _evict_lru(self) -> None:
-        _, part = self._resident.popitem(last=False)
-        self.resident_rows -= part.n_pad
-        self.evictions += 1
+    def _evict_lru(self) -> bool:
+        """Evict the least-recently-used *unpinned* partition (caller holds
+        the lock). False when everything resident is pinned."""
+        for pid in self._resident:
+            if pid not in self._pinned:
+                part = self._resident.pop(pid)
+                self.resident_rows -= part.n_pad
+                self.evictions += 1
+                return True
+        return False
 
     def evict_all(self) -> None:
+        """Drop everything — pins included (a full reset, not an LRU pass)."""
         self.drop_prefetch()
-        while self._resident:
-            self._evict_lru()
+        with self._lock:
+            self._pinned = set()
+            while self._resident and self._evict_lru():
+                pass
 
     # -- introspection -----------------------------------------------------
 
     def resident_ids(self) -> list[int]:
-        return list(self._resident.keys())
+        with self._lock:
+            return list(self._resident.keys())
 
     def stats(self) -> dict:
-        return {
-            "hits": self.hits,
-            "loads": self.loads,
-            "evictions": self.evictions,
-            "resident_partitions": len(self._resident),
-            "resident_rows": self.resident_rows,
-            "peak_resident_rows": self.peak_resident_rows,
-            "cap_rows": self.cap_rows,
-            "prefetch_hits": self.prefetch_hits,
-            "prefetch_wasted": self.prefetch_wasted,
-        }
+        with self._lock:
+            return {
+                "hits": self.hits,
+                "loads": self.loads,
+                "evictions": self.evictions,
+                "resident_partitions": len(self._resident),
+                "resident_rows": self.resident_rows,
+                "peak_resident_rows": self.peak_resident_rows,
+                "cap_rows": self.cap_rows,
+                "prefetch_hits": self.prefetch_hits,
+                "prefetch_wasted": self.prefetch_wasted,
+                "pinned_partitions": len(self._pinned),
+                "pinned_rows": self.pinned_rows,
+            }
 
     def reset_counters(self) -> None:
-        self.hits = self.loads = self.evictions = 0
-        self.prefetch_hits = self.prefetch_wasted = 0
-        self.peak_resident_rows = self.resident_rows
+        with self._lock:
+            self.hits = self.loads = self.evictions = 0
+            self.prefetch_hits = self.prefetch_wasted = 0
+            self.peak_resident_rows = self.resident_rows

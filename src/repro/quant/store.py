@@ -185,6 +185,14 @@ class QuantizedVectors:
     def code_bytes(self) -> int:
         return int(self.codes.size * self.codes.dtype.itemsize)
 
+    @property
+    def code_bytes_per_row(self) -> int:
+        """Device bytes one encoded row occupies (sq8: M · pq: S ·
+        pq4: ⌈S/2⌉) — the cold-tier cost the hot/cold memory accounting
+        in ``repro.cache`` and the cache benchmark compare against the
+        4·M bytes of a full-precision hot row."""
+        return int(self.codes.shape[1] * self.codes.dtype.itemsize)
+
     # -- persistence (piggybacks on StableIndex.save/load) -------------------
 
     def save(self, path: str) -> dict:

@@ -22,10 +22,11 @@ from concurrent.futures import Future
 from typing import Iterable, List, Optional, Tuple, Union
 
 from repro.api import Engine
+from repro.cache.results import ResultCache, result_key
 from repro.serve import request as request_mod
 from repro.serve.batcher import DEFAULT_BUCKETS, Microbatcher
 from repro.serve.request import (
-    Delete, Rejected, Request, Response, Upsert, WriteAck,
+    Completed, Delete, Rejected, Request, Response, Upsert, WriteAck,
 )
 from repro.serve.stats import ServerStats
 from repro.serve.tenants import TenantPolicy, TenantRegistry
@@ -64,6 +65,7 @@ def serve_loop(
     buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
     max_queue: int = 1024,
     stats: Optional[ServerStats] = None,
+    result_cache: Optional[ResultCache] = None,
 ) -> Tuple[List[Response], ServerStats]:
     """Drive a scripted request trace through the serving stack.
 
@@ -84,16 +86,28 @@ def serve_loop(
     at that trace position (deterministic; the threaded front-end instead
     overlaps the expensive prepare with serving).
 
+    ``result_cache`` attaches a serve-layer ``repro.cache.ResultCache``:
+    after admission, a request whose (tenant, query, params) signature hits
+    a valid entry (same engine write epoch, TTL — against the virtual clock
+    — unexpired) completes immediately with the cached payload
+    (``Completed.cached=True``, bit-identical to fresh execution); misses
+    execute normally and populate the cache at settle time with the epoch
+    captured *at admission*, so an entry computed across a write can never
+    serve afterwards.
+
     Returns one response per submitted request, in submission order, plus
     the ``ServerStats`` for the run.
     """
     registry = registry or TenantRegistry(default_policy=TenantPolicy())
     stats = stats or ServerStats(engine)
+    if result_cache is not None:
+        stats.result_cache = result_cache
     mb = Microbatcher(
         engine, stats, window_s=window_ms * 1e-3, buckets=buckets
     )
     out: List[Optional[Response]] = []
     slot: dict = {}  # in-flight request_id → submission index
+    pending_key: dict = {}  # in-flight request_id → (cache key, epoch)
     now = 0.0
     t_start: Optional[float] = None
     next_id = 0
@@ -101,6 +115,9 @@ def serve_loop(
     def settle(completions) -> None:
         for c in completions:
             out[slot.pop(c.request_id)] = c
+            pk = pending_key.pop(c.request_id, None)
+            if pk is not None:
+                result_cache.insert(pk[0], c.ids, c.dists, now, pk[1])
 
     for item in requests:
         t, req = item if isinstance(item, tuple) else (now, item)
@@ -149,8 +166,23 @@ def serve_loop(
                 request_id=req.request_id, tenant=req.tenant, reason=reason
             )
             continue
+        params = registry.resolve_params(req)
+        if result_cache is not None:
+            epoch = getattr(engine, "write_epoch", 0)
+            key = result_key(req.tenant, req.query, params)
+            hit = result_cache.lookup(key, now, epoch)
+            if hit is not None:
+                ids, dists = hit
+                stats.record_completion(req.tenant, 0.0, 0.0, cached=True)
+                out[idx] = Completed(
+                    request_id=req.request_id, tenant=req.tenant,
+                    ids=ids, dists=dists, queue_ms=0.0, service_ms=0.0,
+                    bucket=0, batch_fill=0.0, cached=True,
+                )
+                continue
+            pending_key[req.request_id] = (key, epoch)
         slot[req.request_id] = idx
-        settle(mb.enqueue(req, registry.resolve_params(req), now))
+        settle(mb.enqueue(req, params, now))
 
     # drain: every remaining deadline is ≤ last arrival + window
     now += mb.queue.window_s
@@ -192,18 +224,23 @@ class ThreadedServer:
         window_ms: float = 2.0,
         buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
         max_queue: int = 1024,
+        result_cache: Optional[ResultCache] = None,
     ):
         self.registry = registry or TenantRegistry(
             default_policy=TenantPolicy()
         )
         self._engine = engine
         self.stats = ServerStats(engine)
+        self._result_cache = result_cache
+        if result_cache is not None:
+            self.stats.result_cache = result_cache
         self._mb = Microbatcher(
             engine, self.stats, window_s=window_ms * 1e-3, buckets=buckets
         )
         self.max_queue = max_queue
         self._inbox: "queue_mod.Queue" = queue_mod.Queue()
         self._futures: dict = {}
+        self._pending_keys: dict = {}  # request_id → (cache key, epoch)
         self._lock = threading.Lock()  # admission + id assignment
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -245,6 +282,7 @@ class ThreadedServer:
             req, _ = item
             with self._lock:
                 fut = self._futures.pop(req.request_id, None)
+                self._pending_keys.pop(req.request_id, None)
             if fut is not None and not fut.done():
                 self.stats.record_reject(
                     req.tenant, request_mod.REJECT_STOPPED
@@ -295,6 +333,27 @@ class ThreadedServer:
                 ))
                 return fut
             params = self.registry.resolve_params(req)
+            if self._result_cache is not None:
+                # epoch read under the admission lock: writes apply (and
+                # bump it) under this same lock, so a post-ack submit sees
+                # the post-write epoch — read-your-writes holds through
+                # the cache
+                epoch = getattr(self._engine, "write_epoch", 0)
+                key = result_key(req.tenant, req.query, params)
+                hit = self._result_cache.lookup(key, self._now(), epoch)
+                if hit is not None:
+                    ids, dists = hit
+                    self.stats.record_completion(
+                        req.tenant, 0.0, 0.0, cached=True
+                    )
+                    fut.set_result(Completed(
+                        request_id=req.request_id, tenant=req.tenant,
+                        ids=ids, dists=dists, queue_ms=0.0,
+                        service_ms=0.0, bucket=0, batch_fill=0.0,
+                        cached=True,
+                    ))
+                    return fut
+                self._pending_keys[req.request_id] = (key, epoch)
             self._futures[req.request_id] = fut
         self._inbox.put((req, params))
         return fut
@@ -376,6 +435,15 @@ class ThreadedServer:
         for c in completions:
             with self._lock:
                 fut = self._futures.pop(c.request_id, None)
+                pk = self._pending_keys.pop(c.request_id, None)
+            if pk is not None:
+                # stored under the submit-time epoch: a write that landed
+                # mid-flight leaves this entry permanently stale (the
+                # lookup epoch check rejects it) — stale top-k is
+                # structurally unreachable
+                self._result_cache.insert(
+                    pk[0], c.ids, c.dists, self._now(), pk[1]
+                )
             if fut is not None:
                 fut.set_result(c)
 
@@ -403,6 +471,7 @@ class ThreadedServer:
         except BaseException as exc:  # fail loudly: never strand futures
             with self._lock:
                 pending, self._futures = self._futures, {}
+                self._pending_keys.clear()
             for fut in pending.values():
                 if not fut.done():
                     fut.set_exception(exc)

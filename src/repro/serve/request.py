@@ -79,6 +79,11 @@ class Completed:
     service_ms: float
     bucket: int
     batch_fill: float
+    #: True when the payload came from the serve-layer ``ResultCache``
+    #: (bit-identical to fresh execution; queue/service are ~0 and
+    #: ``bucket=0`` — no batch was ridden). Trailing default keeps every
+    #: existing positional constructor call valid.
+    cached: bool = False
 
     @property
     def ok(self) -> bool:

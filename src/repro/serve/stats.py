@@ -11,9 +11,17 @@ Latency is decomposed per request into ``queue`` (waiting for the
 micro-batch window — the driver's clock domain) and ``service`` (measured
 wall time of the coalesced batch execution the request rode in); the
 percentiles reported are end-to-end (queue + service).
+
+All recording paths hold one re-entrant lock: under ``ThreadedServer`` the
+submit path runs on caller threads while completions/batches come from the
+worker and merges from the merge thread, and the previous bare
+read-modify-writes (counters, ``per_tenant`` dicts, latency lists) could
+drop updates. ``snapshot()`` takes the same lock, so a mid-stream scrape
+sees a consistent sample.
 """
 from __future__ import annotations
 
+import threading
 from collections import defaultdict
 from typing import TYPE_CHECKING, Optional
 
@@ -32,6 +40,7 @@ class ServerStats:
         from repro.core import routing as routing_mod
 
         self._engine = engine
+        self._lock = threading.RLock()
         ex = engine.executor.stats() if engine is not None else None
         # baselines: snapshot deltas isolate *this* serving run from
         # whatever warmed the process earlier
@@ -62,57 +71,76 @@ class ServerStats:
         self.queue_depth = 0
         self.max_queue_depth = 0
         self.span_s = 0.0  # driver-clock span of the run (for QPS)
+        #: completions served straight from the result cache (no device work)
+        self.cache_served = 0
+        #: the attached ``repro.cache.ResultCache`` (set by the driver when
+        #: one is in play) — ``snapshot`` folds its counters in
+        self.result_cache = None
 
     # -- recording (host-side only) ------------------------------------------
 
     def record_submit(self, tenant: str) -> None:
-        self.submitted += 1
-        self.per_tenant[tenant]["submitted"] += 1
+        with self._lock:
+            self.submitted += 1
+            self.per_tenant[tenant]["submitted"] += 1
 
     def record_reject(self, tenant: str, reason: str) -> None:
-        self.rejected += 1
-        self.rejected_by_reason[reason] += 1
-        self.per_tenant[tenant]["rejected"] += 1
+        with self._lock:
+            self.rejected += 1
+            self.rejected_by_reason[reason] += 1
+            self.per_tenant[tenant]["rejected"] += 1
 
     def record_write(self, tenant: str, op: str) -> None:
         """One accepted (applied) write. ``op`` is "upsert" or "delete"."""
-        if op == "upsert":
-            self.upserts += 1
-            self.per_tenant[tenant]["upserts"] += 1
-        else:
-            self.deletes += 1
-            self.per_tenant[tenant]["deletes"] += 1
+        with self._lock:
+            if op == "upsert":
+                self.upserts += 1
+                self.per_tenant[tenant]["upserts"] += 1
+            else:
+                self.deletes += 1
+                self.per_tenant[tenant]["deletes"] += 1
 
     def record_write_reject(self, tenant: str, reason: str) -> None:
         """One shed write (kept separate from read rejections: ``rejected``
         counts queries only, so read SLO math is unpolluted)."""
-        self.writes_rejected += 1
-        self.rejected_by_reason[reason] += 1
-        self.per_tenant[tenant]["writes_shed"] += 1
+        with self._lock:
+            self.writes_rejected += 1
+            self.rejected_by_reason[reason] += 1
+            self.per_tenant[tenant]["writes_shed"] += 1
 
     def record_merge(self, wall_ms: float) -> None:
         """One completed delta→main merge (prepare + apply wall time)."""
-        self.merge_ms.append(float(wall_ms))
+        with self._lock:
+            self.merge_ms.append(float(wall_ms))
 
     def record_queue_depth(self, depth: int) -> None:
-        self.queue_depth = depth
-        self.max_queue_depth = max(self.max_queue_depth, depth)
+        with self._lock:
+            self.queue_depth = depth
+            self.max_queue_depth = max(self.max_queue_depth, depth)
 
     def record_batch(self, n_real: int, bucket: int, service_s: float) -> None:
-        self.batches += 1
-        self.real_rows += n_real
-        self.bucket_rows += bucket
-        self.service_wall_s += service_s
+        with self._lock:
+            self.batches += 1
+            self.real_rows += n_real
+            self.bucket_rows += bucket
+            self.service_wall_s += service_s
 
     def record_completion(
-        self, tenant: str, queue_ms: float, service_ms: float
+        self,
+        tenant: str,
+        queue_ms: float,
+        service_ms: float,
+        cached: bool = False,
     ) -> None:
-        self.admitted += 1  # completion implies prior admission
-        self.completed += 1
-        self.per_tenant[tenant]["completed"] += 1
-        self.queue_ms.append(queue_ms)
-        self.service_ms.append(service_ms)
-        self.total_ms.append(queue_ms + service_ms)
+        with self._lock:
+            self.admitted += 1  # completion implies prior admission
+            self.completed += 1
+            self.per_tenant[tenant]["completed"] += 1
+            self.queue_ms.append(queue_ms)
+            self.service_ms.append(service_ms)
+            self.total_ms.append(queue_ms + service_ms)
+            if cached:
+                self.cache_served += 1
 
     # -- reporting ------------------------------------------------------------
 
@@ -129,51 +157,66 @@ class ServerStats:
         """One host-side metrics sample (safe to call mid-stream)."""
         from repro.core import routing as routing_mod
 
-        out = {
-            "submitted": self.submitted,
-            "completed": self.completed,
-            "rejected": self.rejected,
-            "rejected_by_reason": dict(self.rejected_by_reason),
-            "latency_ms": {
-                "p50": round(self._pct(self.total_ms, 50), 3),
-                "p95": round(self._pct(self.total_ms, 95), 3),
-                "p99": round(self._pct(self.total_ms, 99), 3),
-                "mean": round(
-                    float(np.mean(self.total_ms)) if self.total_ms else 0.0, 3
-                ),
-            },
-            "queue_ms_p99": round(self._pct(self.queue_ms, 99), 3),
-            "service_ms_p99": round(self._pct(self.service_ms, 99), 3),
-            "queue_depth": self.queue_depth,
-            "max_queue_depth": self.max_queue_depth,
-            "batches": self.batches,
-            "batch_fill_ratio": round(self.batch_fill_ratio, 4),
-            "qps": round(self.completed / self.span_s, 1) if self.span_s else 0.0,
-            "service_qps": round(
-                self.completed / self.service_wall_s, 1
-            ) if self.service_wall_s else 0.0,
-            "per_tenant": {
-                t: {
-                    **c,
-                    "qps": round(c["completed"] / self.span_s, 1)
-                    if self.span_s else 0.0,
-                }
-                for t, c in sorted(self.per_tenant.items())
-            },
-        }
-        if self.upserts or self.deletes or self.writes_rejected:
-            out["writes"] = {
-                "upserts": self.upserts,
-                "deletes": self.deletes,
-                "shed": self.writes_rejected,
-                "merges": len(self.merge_ms),
-                "merge_ms_p50": round(self._pct(self.merge_ms, 50), 3),
-                "merge_ms_p95": round(self._pct(self.merge_ms, 95), 3),
+        with self._lock:
+            out = {
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "rejected": self.rejected,
+                "rejected_by_reason": dict(self.rejected_by_reason),
+                "latency_ms": {
+                    "p50": round(self._pct(self.total_ms, 50), 3),
+                    "p95": round(self._pct(self.total_ms, 95), 3),
+                    "p99": round(self._pct(self.total_ms, 99), 3),
+                    "mean": round(
+                        float(np.mean(self.total_ms))
+                        if self.total_ms else 0.0, 3
+                    ),
+                },
+                "queue_ms_p99": round(self._pct(self.queue_ms, 99), 3),
+                "service_ms_p99": round(self._pct(self.service_ms, 99), 3),
+                "queue_depth": self.queue_depth,
+                "max_queue_depth": self.max_queue_depth,
+                "batches": self.batches,
+                "batch_fill_ratio": round(self.batch_fill_ratio, 4),
+                "qps": round(self.completed / self.span_s, 1)
+                if self.span_s else 0.0,
+                "service_qps": round(
+                    self.completed / self.service_wall_s, 1
+                ) if self.service_wall_s else 0.0,
+                "per_tenant": {
+                    t: {
+                        **c,
+                        "qps": round(c["completed"] / self.span_s, 1)
+                        if self.span_s else 0.0,
+                    }
+                    for t, c in sorted(self.per_tenant.items())
+                },
             }
+            if self.upserts or self.deletes or self.writes_rejected:
+                out["writes"] = {
+                    "upserts": self.upserts,
+                    "deletes": self.deletes,
+                    "shed": self.writes_rejected,
+                    "merges": len(self.merge_ms),
+                    "merge_ms_p50": round(self._pct(self.merge_ms, 50), 3),
+                    "merge_ms_p95": round(self._pct(self.merge_ms, 95), 3),
+                }
+            cache_served = self.cache_served
         # delta/tombstone occupancy gauges from a write-capable engine
         write_stats = getattr(self._engine, "write_stats", None)
         if write_stats is not None:
             out["delta"] = write_stats()
+        # serve-layer result cache: hit/invalidation counters plus how many
+        # completions this run served without touching the device
+        if self.result_cache is not None:
+            out["result_cache"] = {
+                **self.result_cache.stats(),
+                "served": cache_served,
+            }
+        # hot/cold tier counters from a tiered engine (repro.cache)
+        tier_stats = getattr(self._engine, "tier_stats", None)
+        if tier_stats is not None:
+            out["tier"] = tier_stats()
         # cache/trace rates from host counters (deltas vs construction time)
         retraces = routing_mod.trace_count() - self._traces0
         out["retraces"] = retraces

@@ -1,0 +1,627 @@
+"""Frequency-aware hot/cold tiering + serve-layer result cache.
+
+The load-bearing property: a ``TieredEngine`` — whatever its tier state
+(cold, promoted, mid-churn) — returns results **bit-identical** (ids AND
+distances) to the untiered engine across every codec × backend × predicate
+kind, because tiering only changes where the rerank's f32 bytes are
+gathered from, never what they are. On top of that: frequency-tracker and
+hot-tier unit semantics (decay, hysteresis, gather routing), result-cache
+LRU/TTL/epoch invalidation, cache-hit payload bit-identity through both
+serve drivers, read-your-writes through the write-epoch protocol,
+partition-granular pinning on out-of-core engines, and the thread-safety
+stress regression for the ``SegmentStore``/stats counters.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    ANY, BETWEEN, MATCH, ONE_OF, Engine, Query, QueryBatch, SearchParams,
+)
+from repro.cache import (
+    FrequencyTracker, HotTier, ResultCache, TieredEngine, result_key,
+)
+from repro.core.help_graph import HelpConfig
+from repro.data.synthetic import make_hybrid_dataset
+from repro.mutable import CompactionPolicy, MutableEngine
+from repro.partition import PartitionData, SegmentStore, row_bucket
+from repro.quant import QuantConfig
+from repro.serve import (
+    Delete, Request, ServerStats, TenantPolicy, TenantRegistry,
+    ThreadedServer, Upsert, serve_loop,
+)
+
+HELP_CFG = HelpConfig(gamma=12, gamma_new=4, max_rounds=3,
+                      quality_sample=64, node_block=512)
+PARAMS = SearchParams(k=10, pool_size=32, pioneer_size=8)
+MODES = ("none", "sq8", "pq", "pq4")
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_hybrid_dataset(
+        n=2000, n_queries=48, profile="sift", attr_dim=5, labels_per_dim=3,
+        n_clusters=8, attr_cluster_corr=0.6, seed=0,
+    )
+
+
+@pytest.fixture(scope="module")
+def engines(ds):
+    return {
+        mode: Engine.build(
+            ds.features, ds.attrs, HELP_CFG,
+            quant_cfg=QuantConfig(mode=mode, pq_subspaces=8,
+                                  pq_train_iters=4),
+        )
+        for mode in MODES
+    }
+
+
+def _batches(ds) -> dict:
+    qv, qa = ds.query_features, ds.query_attrs
+    lab = int(ds.attrs.max()) + 1
+    one_of = [
+        Query(qv[i], [ONE_OF(int(qa[i, 0]), (int(qa[i, 0]) + 1) % lab),
+                      MATCH(int(qa[i, 1])), ANY, ANY, ANY])
+        for i in range(qv.shape[0])
+    ]
+    between = [
+        Query(qv[i], [BETWEEN(0, 1), MATCH(int(qa[i, 1])), ANY, ANY,
+                      MATCH(int(qa[i, 4]))])
+        for i in range(qv.shape[0])
+    ]
+    return {
+        "match": QueryBatch.match(qv, qa),
+        "one_of": QueryBatch.from_queries(one_of),
+        "between": QueryBatch.from_queries(between),
+    }
+
+
+def _assert_bit_equal(res, ref, ctx=""):
+    np.testing.assert_array_equal(
+        np.asarray(res.ids), np.asarray(ref.ids), err_msg=f"{ctx}: ids"
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.dists), np.asarray(ref.dists), err_msg=f"{ctx}: dists"
+    )
+
+
+# ---------------------------------------------------------------------------
+# frequency tracker
+# ---------------------------------------------------------------------------
+
+
+class TestFrequencyTracker:
+    def test_observe_counts_and_filters(self):
+        tr = FrequencyTracker(10)
+        n = tr.observe(np.array([[0, 3, 3], [-1, 12, 9]]))
+        assert n == 4  # -1 (INVALID padding) and 12 (out of range) ignored
+        assert tr.counts[3] == 2.0 and tr.counts[0] == 1.0
+        assert tr.counts[9] == 1.0 and tr.counts.sum() == 4.0
+
+    def test_decay_is_geometric(self):
+        tr = FrequencyTracker(4, decay=0.5)
+        tr.observe([1, 1, 2])
+        tr.end_epoch()
+        assert tr.counts[1] == 1.0 and tr.counts[2] == 0.5
+        tr.observe([2])
+        assert tr.counts[2] == 1.5  # new epoch adds on the decayed base
+
+    def test_snapshot_is_a_copy(self):
+        tr = FrequencyTracker(4)
+        snap = tr.snapshot()
+        tr.observe([0])
+        assert snap[0] == 0.0
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            FrequencyTracker(0)
+        with pytest.raises(ValueError):
+            FrequencyTracker(4, decay=1.5)
+
+
+# ---------------------------------------------------------------------------
+# hot tier
+# ---------------------------------------------------------------------------
+
+
+class TestHotTier:
+    def _feats(self, n=32, m=4, seed=0):
+        return np.random.default_rng(seed).standard_normal(
+            (n, m)).astype(np.float32)
+
+    def test_gather_matches_direct_take(self):
+        """Cold, all-hot and mixed gathers all return the exact source
+        rows; INVALID (-1) clamps to row 0 like ``gops.gather_rows``."""
+        feats = self._feats()
+        tier = HotTier(feats, hot_rows=8)
+        ids = np.array([[0, 5, -1], [31, 8, 2]])
+        want = feats[np.maximum(ids, 0)]
+        np.testing.assert_array_equal(np.asarray(tier.gather(ids)), want)
+
+        counts = np.zeros(32)
+        counts[[0, 5, 8, 31]] = 10.0
+        tier.promote(counts)
+        np.testing.assert_array_equal(np.asarray(tier.gather(ids)), want)
+        st = tier.stats()
+        assert st["hot_row_hits"] > 0 and st["cold_row_gathers"] > 0
+
+        all_hot = np.array([[0, 5], [8, 31]])
+        np.testing.assert_array_equal(
+            np.asarray(tier.gather(all_hot)), feats[all_hot]
+        )
+
+    def test_zero_frequency_rows_never_promoted(self):
+        tier = HotTier(self._feats(), hot_rows=16)
+        counts = np.zeros(32)
+        counts[[3, 7]] = 1.0
+        tier.promote(counts)
+        assert list(tier.hot_ids) == [3, 7]  # budget 16, only 2 qualify
+
+    def test_hysteresis_protects_residents(self):
+        tier = HotTier(self._feats(), hot_rows=2, hysteresis=2.0)
+        counts = np.zeros(32)
+        counts[[1, 2]] = 10.0
+        tier.promote(counts)
+        assert list(tier.hot_ids) == [1, 2]
+        # challenger at 1.5x the resident score loses to the 2x multiplier
+        counts2 = np.zeros(32)
+        counts2[[1, 2]] = 10.0
+        counts2[5] = 15.0
+        tier.promote(counts2)
+        assert list(tier.hot_ids) == [1, 2]
+        # at >2x it wins and displaces the weaker resident
+        counts2[5] = 25.0
+        tier.promote(counts2)
+        assert 5 in tier.hot_ids and tier.stats()["demotions"] == 1
+
+    def test_budget_clamps_and_hot_bytes(self):
+        feats = self._feats(n=8, m=4)
+        tier = HotTier(feats, hot_rows=100)
+        assert tier.hot_rows == 8
+        tier.promote(np.ones(8))
+        assert tier.hot_bytes == 8 * 4 * 4
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            HotTier(self._feats(), hot_rows=-1)
+        with pytest.raises(ValueError):
+            HotTier(self._feats(), hot_rows=4, hysteresis=0.5)
+
+
+# ---------------------------------------------------------------------------
+# result cache
+# ---------------------------------------------------------------------------
+
+
+def _mk(i):
+    return (np.arange(10, dtype=np.int32) + i,
+            np.arange(10, dtype=np.float32) * i)
+
+
+class TestResultCache:
+    def test_hit_returns_copies(self):
+        c = ResultCache()
+        ids, dists = _mk(1)
+        c.insert(b"k", ids, dists, now=0.0, epoch=0)
+        got = c.lookup(b"k", now=1.0, epoch=0)
+        np.testing.assert_array_equal(got[0], ids)
+        got[0][:] = -7  # corrupting the returned copy must not poison
+        again = c.lookup(b"k", now=1.0, epoch=0)
+        np.testing.assert_array_equal(again[0], ids)
+
+    def test_epoch_mismatch_invalidates(self):
+        c = ResultCache()
+        c.insert(b"k", *_mk(1), now=0.0, epoch=3)
+        assert c.lookup(b"k", now=0.0, epoch=4) is None
+        assert c.stats()["invalidations"] == 1
+        assert len(c) == 0  # stale entry dropped eagerly
+
+    def test_ttl_expires_on_caller_clock(self):
+        c = ResultCache(ttl=5.0)
+        c.insert(b"k", *_mk(1), now=10.0, epoch=0)
+        assert c.lookup(b"k", now=14.9, epoch=0) is not None
+        assert c.lookup(b"k", now=15.0, epoch=0) is None
+        assert c.stats()["expirations"] == 1
+
+    def test_lru_eviction_order(self):
+        c = ResultCache(max_entries=2)
+        c.insert(b"a", *_mk(1), now=0.0, epoch=0)
+        c.insert(b"b", *_mk(2), now=0.0, epoch=0)
+        c.lookup(b"a", now=0.0, epoch=0)  # freshen a → b is now LRU
+        c.insert(b"c", *_mk(3), now=0.0, epoch=0)
+        assert c.lookup(b"b", now=0.0, epoch=0) is None
+        assert c.lookup(b"a", now=0.0, epoch=0) is not None
+        assert c.stats()["evictions"] == 1
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            ResultCache(max_entries=0)
+        with pytest.raises(ValueError):
+            ResultCache(ttl=0.0)
+
+    def test_result_key_sensitivity(self, ds):
+        q0 = Query(ds.query_features[0],
+                   [MATCH(int(v)) for v in ds.query_attrs[0]])
+        q0b = Query(ds.query_features[0].copy(),
+                    [MATCH(int(v)) for v in ds.query_attrs[0]])
+        q1 = Query(ds.query_features[1],
+                   [MATCH(int(v)) for v in ds.query_attrs[0]])
+        q2 = Query(ds.query_features[0],
+                   [ONE_OF(int(ds.query_attrs[0][0]), 0)]
+                   + [MATCH(int(v)) for v in ds.query_attrs[0][1:]])
+        p2 = SearchParams(k=10, pool_size=64, pioneer_size=8)
+        base = result_key("a", q0, PARAMS)
+        assert result_key("a", q0b, PARAMS) == base  # content, not identity
+        assert result_key("b", q0, PARAMS) != base  # tenant
+        assert result_key("a", q1, PARAMS) != base  # vector
+        assert result_key("a", q2, PARAMS) != base  # predicates
+        assert result_key("a", q0, p2) != base  # params
+
+
+# ---------------------------------------------------------------------------
+# the tiering acceptance test — bit-exact vs the untiered engine
+# ---------------------------------------------------------------------------
+
+
+class TestTieredBitExact:
+    @pytest.mark.parametrize("mode", MODES)
+    @pytest.mark.parametrize("backend", ("graph", "brute"))
+    def test_every_tier_state_matches_untiered(self, ds, engines, mode,
+                                               backend):
+        """Cold tier (nothing promoted), warm tier (hot set resident) and a
+        churned tier (popularity shifted, promotions + demotions applied)
+        all serve ids AND distances bit-identical to the untiered engine,
+        for every predicate kind."""
+        eng = engines[mode]
+        params = SearchParams(k=10, pool_size=32, pioneer_size=8,
+                              backend=backend)
+        batches = _batches(ds)
+        refs = {kind: eng.search(qb, params)
+                for kind, qb in batches.items()}
+        tiered = TieredEngine(eng, hot_rows=256, epoch_queries=48)
+        for state in ("cold", "warm"):
+            for kind, qb in batches.items():
+                _assert_bit_equal(tiered.search(qb, params), refs[kind],
+                                  f"{mode}/{backend}/{kind}/{state}")
+        # churn: skew the tracker to a disjoint id range and re-promote
+        tiered.tracker.observe(np.tile(np.arange(1000, 1400), 5))
+        tiered.refresh_tier()
+        assert tiered.tier.stats()["epochs"] >= 2
+        for kind, qb in batches.items():
+            _assert_bit_equal(tiered.search(qb, params), refs[kind],
+                              f"{mode}/{backend}/{kind}/churned")
+
+    def test_feedback_loop_promotes_result_rows(self, ds, engines):
+        """Rows the engine actually returns become the hot set; the warm
+        pass then resolves most rerank gathers on-device."""
+        tiered = TieredEngine(engines["pq"], hot_rows=512, epoch_queries=48)
+        qb = _batches(ds)["match"]
+        tiered.search(qb, PARAMS)  # 48 queries → epoch boundary → promote
+        assert tiered.tier.hot_ids.size > 0
+        tiered.tier.reset_counters()
+        tiered.search(qb, PARAMS)
+        st = tiered.tier_stats()
+        assert st["hot_row_hits"] > 0
+        # the tracker observes returned top-k rows but the gather spans the
+        # whole pool head, so the ceiling is k/pool-ish, not 1.0 — a
+        # repeat-identical stream must still land well above zero
+        assert st["tier_hit_rate"] > 0.2
+
+    def test_rejects_mutable_and_bad_config(self, ds, engines):
+        m = MutableEngine(engines["none"], CompactionPolicy())
+        with pytest.raises(TypeError):
+            TieredEngine(m, hot_rows=64)
+        with pytest.raises(ValueError):
+            TieredEngine(engines["none"], hot_rows=64, epoch_queries=0)
+
+    def test_mutable_rejects_tiered_base(self, ds, engines):
+        with pytest.raises(TypeError):
+            MutableEngine(TieredEngine(engines["none"], hot_rows=64),
+                          CompactionPolicy())
+
+
+# ---------------------------------------------------------------------------
+# partitioned engines: partition-granular pinning
+# ---------------------------------------------------------------------------
+
+
+class TestPartitionedPinning:
+    @pytest.fixture(scope="class")
+    def capped(self, ds, tmp_path_factory):
+        eng = Engine.build_partitioned(
+            ds.features, ds.attrs, n_partitions=5,
+            help_cfg=HelpConfig(gamma=6, gamma_new=3, max_rounds=2),
+            quant_cfg=QuantConfig(mode="pq", pq_subspaces=8,
+                                  pq_train_iters=4),
+        )
+        path = str(tmp_path_factory.mktemp("part_idx"))
+        eng.save(path)
+        return Engine.load(path, residency_rows=1024)
+
+    def test_pinned_serving_bit_identical(self, ds, capped):
+        qb = QueryBatch.match(ds.query_features, ds.query_attrs)
+        ref = capped.search(qb, PARAMS)
+        tiered = TieredEngine(capped, hot_rows=768, epoch_queries=48)
+        _assert_bit_equal(tiered.search(qb, PARAMS), ref, "cold")
+        assert len(capped.index.store.pinned_ids()) >= 1
+        _assert_bit_equal(tiered.search(qb, PARAMS), ref, "pinned")
+        st = tiered.tier_stats()
+        assert st["pinned_partitions"] >= 1
+        assert st["pinned_rows"] <= capped.index.store.cap_rows
+        assert st["tier_hit_rate"] > 0  # pinned partitions turn loads → hits
+
+    def test_pins_survive_lru_pressure(self, ds, capped):
+        store = capped.index.store
+        tiered = TieredEngine(capped, hot_rows=768, epoch_queries=48)
+        qb = QueryBatch.match(ds.query_features, ds.query_attrs)
+        tiered.search(qb, PARAMS)
+        pinned = store.pinned_ids()
+        assert pinned
+        # hammer every other partition through the cap: pins stay resident
+        for pid in range(capped.index.n_partitions):
+            store.get(pid)
+        assert set(pinned) <= set(store.resident_ids())
+        store.unpin()
+        assert store.pinned_ids() == []
+
+
+# ---------------------------------------------------------------------------
+# SegmentStore pinning + thread-safety stress (the counter regression)
+# ---------------------------------------------------------------------------
+
+
+def _toy_store(n_parts=6, rows=100, cap=4 * 128, bucket=128):
+    def loader(pid):
+        rng = np.random.default_rng(pid)
+        return PartitionData(
+            features=rng.standard_normal((rows, 4)).astype(np.float32),
+            attrs=np.zeros((rows, 2), np.int32),
+            graph=np.zeros((rows, 0), np.int32),
+            codes=None,
+            row_ids=np.arange(pid * rows, (pid + 1) * rows, dtype=np.int32),
+        )
+
+    return SegmentStore(loader, cap_rows=cap, bucket_min=bucket)
+
+
+class TestSegmentStorePinning:
+    def test_evict_lru_skips_pinned(self):
+        store = _toy_store()
+        store.pin([0, 1])
+        for pid in range(6):
+            store.get(pid)
+        assert {0, 1} <= set(store.resident_ids())
+        assert store.resident_rows <= store.cap_rows
+
+    def test_all_pinned_loads_over_cap(self):
+        """The documented escape hatch: when every resident partition is
+        pinned the evict loop gives up and the load goes over the cap
+        rather than deadlocking."""
+        store = _toy_store(cap=2 * 128)
+        store.pin([0, 1])
+        store.get(2)
+        assert store.resident_rows > store.cap_rows
+        assert 2 in store.resident_ids()
+
+    def test_evict_all_clears_pins(self):
+        store = _toy_store()
+        store.pin([0, 1])
+        store.evict_all()
+        assert store.resident_ids() == [] and store.pinned_ids() == []
+        assert store.resident_rows == 0
+
+    def test_concurrent_get_counter_conservation(self):
+        """The stress regression: hammer ``get``/``prefetch`` from many
+        threads; the lock must keep hits+loads == total gets, the resident
+        row gauge equal to the actual resident set, and the LRU under cap
+        (pins absent here)."""
+        store = _toy_store(n_parts=8, cap=3 * 128)
+        n_threads, per_thread = 8, 120
+        errs = []
+
+        def worker(seed):
+            rng = np.random.default_rng(seed)
+            try:
+                for _ in range(per_thread):
+                    pid = int(rng.integers(0, 8))
+                    if rng.random() < 0.2:
+                        store.prefetch(int(rng.integers(0, 8)))
+                    part = store.get(pid)
+                    assert part.n_real == 100
+            except BaseException as e:  # surface in the main thread
+                errs.append(e)
+
+        threads = [threading.Thread(target=worker, args=(s,))
+                   for s in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errs, errs
+        st = store.stats()
+        assert st["hits"] + st["loads"] == n_threads * per_thread
+        with store._lock:
+            actual = sum(p.n_pad for p in store._resident.values())
+        assert st["resident_rows"] == actual
+        assert st["resident_rows"] <= st["cap_rows"]
+
+    def test_concurrent_stats_and_cache_counters(self):
+        """ServerStats + ResultCache + FrequencyTracker counters under
+        concurrent mutation: totals must be conserved exactly."""
+        stats = ServerStats()
+        cache = ResultCache(max_entries=64)
+        tracker = FrequencyTracker(1000)
+        n_threads, per_thread = 8, 200
+
+        def worker(seed):
+            rng = np.random.default_rng(seed)
+            for i in range(per_thread):
+                stats.record_completion("t", 1.0, 1.0,
+                                        cached=bool(i % 2))
+                key = bytes([int(rng.integers(0, 32))])
+                if cache.lookup(key, now=0.0, epoch=0) is None:
+                    cache.insert(key, *_mk(1), now=0.0, epoch=0)
+                tracker.observe(rng.integers(0, 1000, size=16))
+
+        threads = [threading.Thread(target=worker, args=(s,))
+                   for s in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        total = n_threads * per_thread
+        assert stats.completed == total
+        assert stats.cache_served == total // 2
+        cs = cache.stats()
+        assert cs["hits"] + cs["misses"] == total
+        assert cs["insertions"] == cs["misses"]  # every miss inserted once
+        assert tracker.stats()["observed"] == total * 16
+        assert float(tracker.counts.sum()) == float(total * 16)
+
+
+# ---------------------------------------------------------------------------
+# result cache through the serve drivers
+# ---------------------------------------------------------------------------
+
+
+def _match_query(ds, i):
+    return Query(ds.query_features[i],
+                 [MATCH(int(v)) for v in ds.query_attrs[i]])
+
+
+class TestServedResultCache:
+    def test_serve_loop_hit_bit_identical(self, ds, engines):
+        """A verbatim repeat is served from the cache with the exact bytes
+        of the fresh execution, flagged ``cached`` and counted."""
+        cache = ResultCache()
+        reg = TenantRegistry(default_policy=TenantPolicy(params=PARAMS))
+        trace = [(i * 1e-3, Request("a", _match_query(ds, i % 4)))
+                 for i in range(12)]
+        resp, stats = serve_loop(engines["pq"], trace, reg, window_ms=1.0,
+                                 buckets=(1, 8), result_cache=cache)
+        assert all(r.ok for r in resp)
+        fresh = {}
+        for (_, req), r in zip(trace, resp):
+            key = result_key("a", req.query, PARAMS)
+            if key not in fresh:
+                assert not r.cached
+                fresh[key] = r
+            else:
+                assert r.cached and r.bucket == 0
+                np.testing.assert_array_equal(r.ids, fresh[key].ids)
+                np.testing.assert_array_equal(r.dists, fresh[key].dists)
+        snap = stats.snapshot()
+        assert snap["result_cache"]["hits"] == 8
+        assert snap["result_cache"]["served"] == 8
+        assert snap["completed"] == 12
+
+    def test_serve_loop_ttl_on_virtual_clock(self, ds, engines):
+        """Expiry uses the trace's virtual clock, not the wall clock: the
+        same repeat hits inside the TTL and recomputes beyond it."""
+        cache = ResultCache(ttl=1.0)
+        reg = TenantRegistry(default_policy=TenantPolicy(params=PARAMS))
+        trace = [(0.0, Request("a", _match_query(ds, 0))),
+                 (0.5, Request("a", _match_query(ds, 0))),
+                 (5.0, Request("a", _match_query(ds, 0)))]
+        resp, stats = serve_loop(engines["none"], trace, reg, window_ms=1.0,
+                                 buckets=(1,), result_cache=cache)
+        assert [r.cached for r in resp] == [False, True, False]
+        assert stats.snapshot()["result_cache"]["expirations"] == 1
+
+    def test_serve_loop_write_invalidates_before_ack(self, ds, engines):
+        """An Upsert bumps the write epoch before its ack resolves, so a
+        repeat arriving after the write recomputes against the new corpus —
+        no stale top-k can be served."""
+        m = MutableEngine(Engine.build(
+            ds.features, ds.attrs, HELP_CFG,
+            quant_cfg=QuantConfig(mode="none"),
+        ), CompactionPolicy(max_delta_rows=10_000))
+        cache = ResultCache()
+        reg = TenantRegistry(default_policy=TenantPolicy(params=PARAMS))
+        q = _match_query(ds, 0)
+        epoch0 = m.write_epoch
+        # the upserted row is the query vector itself with matching attrs:
+        # it must be the new rank-1 neighbor after the write
+        up = Upsert("a", ds.query_features[0], ds.query_attrs[0], id=2000)
+        trace = [(0.0, Request("a", q)), (0.1, Request("a", q)),
+                 (0.2, up), (0.3, Request("a", q))]
+        resp, stats = serve_loop(m, trace, reg, window_ms=1.0, buckets=(1,),
+                                 result_cache=cache)
+        assert m.write_epoch == epoch0 + 1
+        assert [getattr(r, "cached", False) for r in resp] == [
+            False, True, False, False]
+        assert 2000 not in set(int(x) for x in resp[1].ids)
+        assert int(resp[3].ids[0]) == 2000  # post-write recompute sees it
+        assert stats.snapshot()["result_cache"]["served"] == 1
+
+    def test_threaded_read_your_writes_through_cache(self, ds, engines):
+        """ThreadedServer: cache hit before the write, invalidated after —
+        the deleted id disappears from the repeat's results immediately."""
+        m = MutableEngine(Engine.build(
+            ds.features, ds.attrs, HELP_CFG,
+            quant_cfg=QuantConfig(mode="none"),
+        ), CompactionPolicy(max_delta_rows=10_000))
+        cache = ResultCache()
+        reg = TenantRegistry(default_policy=TenantPolicy(params=PARAMS))
+        q = _match_query(ds, 0)
+        with ThreadedServer(m, reg, window_ms=0.5, buckets=(1, 8),
+                            result_cache=cache) as srv:
+            r1 = srv.submit(Request("a", q)).result()
+            r2 = srv.submit(Request("a", q)).result()
+            assert not r1.cached and r2.cached
+            np.testing.assert_array_equal(r1.ids, r2.ids)
+            np.testing.assert_array_equal(r1.dists, r2.dists)
+            victim = int(r1.ids[0])
+            ack = srv.submit(Delete("a", victim)).result()
+            assert ack.ok and ack.applied
+            r3 = srv.submit(Request("a", q)).result()
+            assert not r3.cached
+            assert victim not in set(int(x) for x in r3.ids)
+            snap = srv.stats.snapshot()
+        assert snap["result_cache"]["served"] == 1
+        assert snap["result_cache"]["invalidations"] == 1
+
+    def test_tenant_isolation(self, ds, engines):
+        """Identical queries from different tenants never share entries."""
+        cache = ResultCache()
+        reg = TenantRegistry(default_policy=TenantPolicy(params=PARAMS))
+        q = _match_query(ds, 0)
+        trace = [(0.0, Request("a", q)), (0.1, Request("b", q))]
+        resp, _ = serve_loop(engines["none"], trace, reg, window_ms=1.0,
+                             buckets=(1,), result_cache=cache)
+        assert [r.cached for r in resp] == [False, False]
+        np.testing.assert_array_equal(resp[0].ids, resp[1].ids)
+
+    def test_tiered_engine_through_serve_loop(self, ds, engines):
+        """Tiering + result cache compose: the served stream is
+        bit-identical to the untiered, uncached stream and both layers
+        report activity."""
+        eng = engines["pq"]
+        reg = TenantRegistry(default_policy=TenantPolicy(params=PARAMS))
+        trace = [(i * 1e-3, Request("a", _match_query(ds, i % 8)))
+                 for i in range(48)]
+        ref, _ = serve_loop(eng, trace, reg, window_ms=1.0, buckets=(1, 8))
+        tiered = TieredEngine(eng, hot_rows=256, epoch_queries=16)
+        # warm pass (no cache) so the tier promotes — with the cache on,
+        # repeats never reach the engine and the tracker sees only the
+        # 8 distinct queries, below the epoch boundary
+        serve_loop(tiered, trace,
+                   TenantRegistry(default_policy=TenantPolicy(params=PARAMS)),
+                   window_ms=1.0, buckets=(1, 8))
+        tiered.tier.reset_counters()
+        cache = ResultCache()
+        stats = ServerStats(tiered)
+        resp, stats = serve_loop(
+            tiered, trace, TenantRegistry(default_policy=TenantPolicy(
+                params=PARAMS)),
+            window_ms=1.0, buckets=(1, 8), stats=stats, result_cache=cache,
+        )
+        for a, b in zip(ref, resp):
+            np.testing.assert_array_equal(a.ids, b.ids)
+            np.testing.assert_array_equal(a.dists, b.dists)
+        snap = stats.snapshot()
+        assert snap["result_cache"]["served"] > 0
+        assert snap["tier"]["hot_row_hits"] > 0

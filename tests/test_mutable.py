@@ -482,6 +482,43 @@ class TestServeWrites:
 
 
 # ---------------------------------------------------------------------------
+# Write epoch (the serve-layer result cache's invalidation signal)
+# ---------------------------------------------------------------------------
+
+
+class TestWriteEpoch:
+    def test_bumps_per_applied_op_before_ack(self, base_indexes, ds):
+        """Every applied write increments ``write_epoch`` synchronously —
+        by the time ``upsert``/``delete`` returns (i.e. before any ack can
+        resolve) the epoch already differs, so a cache entry recorded
+        under the old epoch can never serve a post-write read."""
+        m = MutableEngine(_engine(base_indexes, "none"))
+        assert m.write_epoch == 0
+        m.upsert(ds.features[N0], ds.attrs[N0], id=N0)
+        assert m.write_epoch == 1
+        assert m.delete(N0)
+        assert m.write_epoch == 2
+        # a rejected write (non-visible delete) applies nothing: no bump
+        assert not m.delete(N0)
+        assert m.write_epoch == 2
+
+    def test_immutable_engine_epoch_is_constant_zero(self, base_indexes):
+        assert _engine(base_indexes, "none").write_epoch == 0
+
+    def test_wal_replay_advances_epoch(self, base_indexes, ds, tmp_path):
+        """Recovered ops bump the epoch too — a cache surviving a restart
+        (hypothetically) could only under-serve, never serve stale."""
+        path = str(tmp_path / "wal.log")
+        m = MutableEngine(_engine(base_indexes, "none"), wal_path=path)
+        m.upsert(ds.features[N0], ds.attrs[N0], id=N0)
+        m.upsert(ds.features[N0 + 1], ds.attrs[N0 + 1], id=N0 + 1)
+        del m
+        m2 = MutableEngine(_engine(base_indexes, "none"), wal_path=path)
+        assert m2.write_epoch == 2
+        assert m2.exists(N0) and m2.exists(N0 + 1)
+
+
+# ---------------------------------------------------------------------------
 # End-to-end freshness (the acceptance bar)
 # ---------------------------------------------------------------------------
 

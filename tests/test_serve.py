@@ -411,3 +411,74 @@ class TestCostModelPersistence:
             SearchParams(k=5),
         )
         assert res.ids.shape == (2, 5)
+
+
+# ---------------------------------------------------------------------------
+# Serve-layer result cache at the submission surface
+# ---------------------------------------------------------------------------
+
+
+class TestResultCacheAtSubmission:
+    """Driver-level cache semantics (the cache itself + the tiering engine
+    are covered in tests/test_cache.py): key resolution happens on the
+    *resolved* per-tenant params, rejections never touch the cache, and an
+    uncached run reports no result_cache section."""
+
+    def test_params_override_changes_cache_key(self, ds, engines):
+        """The same query under a per-request params override must miss —
+        the cache keys on the resolved SearchParams, not the query alone."""
+        from repro.cache import ResultCache
+
+        cache = ResultCache()
+        reg = TenantRegistry(default_policy=TenantPolicy(
+            params=PARAMS, max_k=10, max_pool=128))
+        wide = dataclasses.replace(PARAMS, pool_size=64)
+        q = _query(ds, 0, "match")
+        trace = [(0.0, Request("a", q)),
+                 (0.1, Request("a", q, params=wide)),
+                 (0.2, Request("a", q)),
+                 (0.3, Request("a", q, params=wide))]
+        resp, stats = serve_loop(engines["none"], trace, reg, window_ms=1.0,
+                                 buckets=(1,), result_cache=cache)
+        assert [r.cached for r in resp] == [False, False, True, True]
+        snap = stats.snapshot()
+        assert snap["result_cache"]["hits"] == 2
+        assert snap["result_cache"]["size"] == 2  # two distinct entries
+
+    def test_rejected_requests_never_cached(self, ds, engines):
+        from repro.cache import ResultCache
+
+        cache = ResultCache()
+        reg = TenantRegistry()
+        reg.register("tight", TenantPolicy(params=PARAMS, rate=1e-9,
+                                           burst=1.0))
+        q = _query(ds, 0, "match")
+        trace = [(0.0, Request("tight", q)), (0.0, Request("tight", q))]
+        resp, stats = serve_loop(engines["none"], trace, reg, window_ms=1.0,
+                                 buckets=(1,), result_cache=cache)
+        assert resp[0].ok and not resp[1].ok  # burst=1 → second shed
+        assert len(cache) == 1  # only the completed request was inserted
+        assert stats.snapshot()["result_cache"]["served"] == 0
+
+    def test_no_cache_means_no_section_and_false_flag(self, ds, engines):
+        reg = TenantRegistry(default_policy=TenantPolicy(params=PARAMS))
+        trace = _mixed_trace(ds, n=6)
+        resp, stats = serve_loop(engines["none"], trace, reg, window_ms=1.0,
+                                 buckets=(1, 8))
+        assert all(not r.cached for r in resp)
+        assert "result_cache" not in stats.snapshot()
+
+    def test_threaded_server_repeat_hits(self, ds, engines):
+        from repro.cache import ResultCache
+
+        cache = ResultCache()
+        reg = TenantRegistry(default_policy=TenantPolicy(params=PARAMS))
+        q = _query(ds, 0, "match")
+        with ThreadedServer(engines["none"], reg, window_ms=0.5,
+                            buckets=(1, 8), result_cache=cache) as srv:
+            r1 = srv.submit(Request("a", q)).result(30)
+            r2 = srv.submit(Request("a", q)).result(30)
+        assert not r1.cached and r2.cached
+        np.testing.assert_array_equal(r1.ids, r2.ids)
+        np.testing.assert_array_equal(r1.dists, r2.dists)
+        assert srv.stats.snapshot()["result_cache"]["served"] == 1
