@@ -1274,6 +1274,217 @@ def scale_sweep(fast: bool = True, n: int = 0, partitions: int = 0) -> None:
         )
 
 
+# ---------------------------------------------------------------------------
+# PR 10 — observability: tracing overhead + trace decomposition
+# ---------------------------------------------------------------------------
+
+
+def obs_sweep(fast: bool = True, n: int = 0) -> None:
+    """Self-asserting observability benchmark (PR 10 acceptance gates).
+
+    * **overhead** — serve throughput with a *disabled* tracer attached
+      (``Tracer(sample_every=0)`` — the no-op span/sampling hooks are the
+      only code difference) must stay within 2% of the ``tracer=None``
+      path, best-of-3 each arm on the same warmed executables;
+    * **decomposition** — a fully sampled run's traces must decompose
+      end-to-end latency: root = queue + batch exactly by construction,
+      the batch's children (assemble/plan/compile/execute) cover ≥ half
+      of the batch wall, and the root's recorded ``queue_ms + service_ms``
+      attributes match its duration within tolerance;
+    * **span set** — a quantized *partitioned* engine's sampled trace
+      carries the full hierarchy: plan (backend/nprobe attrs), compile
+      (hit/miss), execute (partition probe counters), serve (batch);
+    * **exposition** — the run's registry renders a Prometheus text
+      exposition whose every sample line parses and whose
+      ``serve_total_ms_count`` equals the completions recorded.
+
+    Emits ``BENCH_obs.json`` under artifacts/bench/. Pass ``--n``
+    (benchmarks.run) for the CI smoke.
+    """
+    import json
+    import os
+    import re
+
+    from benchmarks.common import BENCH_DIR
+    from benchmarks.trace import zipf_query_trace
+    from repro.api import Engine
+    from repro.obs import Tracer, prometheus_text
+    from repro.quant import QuantConfig
+    from repro.serve import (
+        ServerStats, TenantPolicy, TenantRegistry, serve_loop,
+    )
+
+    bench = "obs_sweep"
+    n = n or (10_000 if fast else 20_000)
+    n_requests = 256 if fast else 512
+    window_ms, ladder = 2.0, (1, 8, 32)
+    k, pool = 10, 64
+
+    ds = dataset("sift", 5, 3, n, n_requests)
+    eng = built_engine(ds, "auto")
+    params = SearchParams(k=k, pool_size=pool,
+                          pioneer_size=max(4, pool // 8))
+    policy = TenantPolicy(params=params)
+
+    def run_loop(engine, tracer, n_req=n_requests):
+        trace, _ = zipf_query_trace(
+            ds, n_req, n_tenants=4, spacing_s=5e-5, seed=0,
+        )
+        stats = ServerStats(engine)
+        _, stats = serve_loop(
+            engine, trace, TenantRegistry(default_policy=policy),
+            window_ms=window_ms, buckets=ladder, stats=stats, tracer=tracer,
+        )
+        return stats
+
+    run_loop(eng, None)  # warm the ladder executables once for both arms
+
+    # -- gate 1: disabled-tracer overhead ≤ 2% ------------------------------
+    qps_none = qps_disabled = 0.0
+    for _ in range(3):
+        qps_none = max(
+            qps_none, run_loop(eng, None).snapshot()["service_qps"]
+        )
+        qps_disabled = max(
+            qps_disabled,
+            run_loop(eng, Tracer(sample_every=0)).snapshot()["service_qps"],
+        )
+    overhead = 1.0 - qps_disabled / qps_none if qps_none else 0.0
+    assert qps_disabled >= 0.98 * qps_none, (
+        f"disabled-tracer serve throughput {qps_disabled:.1f} qps fell "
+        f"more than 2% below the untraced path {qps_none:.1f} qps"
+    )
+    emit(bench, "overhead", "qps_untraced", round(qps_none, 1))
+    emit(bench, "overhead", "qps_tracer_disabled", round(qps_disabled, 1))
+    emit(bench, "overhead", "overhead_frac", round(overhead, 4))
+
+    # informational cross-run reference: PR 9's serve artifact, if present
+    baseline_qps = None
+    ref = os.path.join(BENCH_DIR, "BENCH_serve.json")
+    if os.path.exists(ref):
+        try:
+            with open(ref) as f:
+                pts = json.load(f)["points"]
+            baseline_qps = max(p["service_qps"] for p in pts)
+        except (KeyError, ValueError, OSError):
+            baseline_qps = None
+
+    # -- gate 2: sampled traces decompose end-to-end latency ----------------
+    tracer = Tracer(sample_every=1)
+    stats = run_loop(eng, tracer)
+    traces = tracer.traces()
+    assert traces, "sample_every=1 over a full run must record traces"
+    max_exact_err_ms, max_attr_err_ms, min_cover = 0.0, 0.0, 1.0
+    for tr in traces:
+        root = tr.root
+        total_ms = root.duration * 1e3
+        queue, batch = root.find("queue"), root.find("batch")
+        assert queue is not None and batch is not None, (
+            "every request trace carries queue + batch spans"
+        )
+        # exact by construction: root is pinned to queue + batch
+        exact_err = abs(total_ms - (queue.duration + batch.duration) * 1e3)
+        assert exact_err <= 1e-3, (
+            f"root span ({total_ms:.3f}ms) != queue + batch "
+            f"(err {exact_err:.4f}ms)"
+        )
+        max_exact_err_ms = max(max_exact_err_ms, exact_err)
+        # recorded latency attrs re-derive the same total within tolerance
+        # (service_ms excludes batch assembly; queue_ms is driver-clock)
+        attr_ms = root.attrs["queue_ms"] + root.attrs["service_ms"]
+        attr_err = abs(total_ms - attr_ms)
+        assert attr_err <= max(1.0, 0.25 * total_ms), (
+            f"trace total {total_ms:.3f}ms vs recorded queue+service "
+            f"{attr_ms:.3f}ms drifted past tolerance"
+        )
+        max_attr_err_ms = max(max_attr_err_ms, attr_err)
+        if batch.duration > 0:
+            cover = sum(c.duration for c in batch.children) / batch.duration
+            assert cover >= 0.5, (
+                f"batch children cover only {cover:.0%} of the batch span"
+            )
+            min_cover = min(min_cover, cover)
+    emit(bench, "decomposition", "n_traces", len(traces))
+    emit(bench, "decomposition", "max_exact_err_ms",
+         round(max_exact_err_ms, 4))
+    emit(bench, "decomposition", "min_child_coverage", round(min_cover, 3))
+
+    # -- gate 3: quantized partitioned engine's trace has the full span set -
+    p_eng = Engine.build_partitioned(
+        ds.features, ds.attrs, n_partitions=8,
+        quant_cfg=QuantConfig(mode="pq", pq_subspaces=16, pq_train_iters=6),
+    )
+    run_loop(p_eng, None, n_req=32)  # warm compile off the traced run
+    p_tracer = Tracer(sample_every=1)
+    run_loop(p_eng, p_tracer, n_req=32)
+    p_traces = p_tracer.traces()
+    assert p_traces, "partitioned serve run must record traces"
+    root = p_traces[0].root
+    spans = {s: root.find(s) for s in ("batch", "plan", "compile", "execute")}
+    missing = [s for s, sp in spans.items() if sp is None]
+    assert not missing, f"partitioned trace missing spans: {missing}"
+    assert spans["plan"].attrs.get("backend") == "partitioned"
+    assert "nprobe" in spans["plan"].attrs
+    assert "hit" in spans["compile"].attrs
+    assert "partitions_probed" in spans["execute"].attrs, (
+        "execute span must carry the probe counters"
+    )
+    emit(bench, "partitioned_trace", "spans", len(spans))
+    emit(bench, "partitioned_trace", "partitions_probed",
+         spans["execute"].attrs["partitions_probed"])
+
+    # -- gate 4: the Prometheus exposition parses ---------------------------
+    text = prometheus_text(stats.registry)
+    sample_re = re.compile(
+        r"^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? -?[0-9+\-.eEinfa]+$"
+    )
+    lines = [l for l in text.splitlines() if l and not l.startswith("#")]
+    bad = [l for l in lines if not sample_re.match(l)]
+    assert lines and not bad, f"unparseable exposition lines: {bad[:3]}"
+    count_line = next(
+        l for l in lines if l.startswith("serve_total_ms_count")
+    )
+    assert float(count_line.split()[-1]) == stats.completed, (
+        "histogram count must equal completions recorded"
+    )
+    emit(bench, "exposition", "sample_lines", len(lines))
+
+    flush_csv(bench)
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    with open(os.path.join(BENCH_DIR, "BENCH_obs.json"), "w") as f:
+        json.dump({
+            "n": n, "n_requests": n_requests, "k": k, "pool": pool,
+            "window_ms": window_ms, "buckets": list(ladder),
+            "overhead": {
+                "qps_untraced": round(qps_none, 1),
+                "qps_tracer_disabled": round(qps_disabled, 1),
+                "overhead_frac": round(overhead, 4),
+                "threshold": 0.02,
+                "passed": True,
+                "pr9_serve_best_qps": baseline_qps,
+            },
+            "decomposition": {
+                "n_traces": len(traces),
+                "max_exact_err_ms": round(max_exact_err_ms, 4),
+                "max_attr_err_ms": round(max_attr_err_ms, 3),
+                "min_child_coverage": round(min_cover, 3),
+                "passed": True,
+            },
+            "partitioned_trace": {
+                "spans": sorted(spans),
+                "plan_backend": spans["plan"].attrs["backend"],
+                "nprobe": spans["plan"].attrs["nprobe"],
+                "partitions_probed":
+                    spans["execute"].attrs["partitions_probed"],
+                "passed": True,
+            },
+            "exposition": {
+                "sample_lines": len(lines),
+                "histogram_count_matches": True,
+            },
+        }, f, indent=2)
+
+
 ALL = [
     tab1_magnitude_stats,
     fig3_qps_recall,
@@ -1292,4 +1503,5 @@ ALL = [
     cache_sweep,
     mutate_sweep,
     scale_sweep,
+    obs_sweep,
 ]

@@ -61,6 +61,7 @@ import numpy as np
 from repro.core import auto as auto_mod
 from repro.core import baselines as baselines_mod
 from repro.core import routing as routing_mod
+from repro.obs import trace as obs_trace
 from repro.core.auto import DatasetStats, MetricConfig
 from repro.core.graph_ops import INF, INVALID
 from repro.core.help_graph import HelpConfig
@@ -563,7 +564,17 @@ class Engine:
         all-MATCH batch."""
         if isinstance(queries, tuple):
             queries = QueryBatch.match(*queries)
-        plan = self.plan(queries, params)
+        with obs_trace.span("plan") as sp:
+            plan = self.plan(queries, params)
+            if sp:
+                sp.set("backend", plan.backend)
+                sp.set("quant_mode", plan.quant_mode)
+                sp.set("reason", plan.reason)
+                sp.set("cost_brute", plan.cost_brute)
+                sp.set("cost_graph", plan.cost_graph)
+                if plan.backend == "partitioned":
+                    sp.set("nprobe", plan.nprobe)
+                    sp.set("sub_backend", plan.sub_backend)
         return self.executor.run(queries, params, plan)
 
     def _predicate_filter(

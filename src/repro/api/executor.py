@@ -36,9 +36,13 @@ import dataclasses
 from collections import OrderedDict
 from typing import TYPE_CHECKING, Callable, NamedTuple, Optional
 
+import jax
+import numpy as np
+
 from repro.core import lru_get
 from repro.core import routing as routing_mod
 from repro.core.routing import RoutingConfig, SearchResult
+from repro.obs import trace as obs_trace
 from repro.api.query import QueryBatch
 
 if TYPE_CHECKING:
@@ -134,19 +138,34 @@ class Executor:
     def run(
         self, queries: QueryBatch, params: "SearchParams", plan: "Plan"
     ) -> SearchResult:
-        sig = self.signature(queries, params, plan)
-        size0 = len(self._cache)
-        fn, hit = lru_get(
-            self._cache, sig, lambda: self._compile(params, plan, sig),
-            self.max_entries,
-        )
-        if hit:
-            self.hits += 1
-        else:
-            self.misses += 1
-            if len(self._cache) == size0:  # insert displaced the LRU entry
-                self.evictions += 1
-        return fn(queries)
+        with obs_trace.span("compile") as sp:
+            sig = self.signature(queries, params, plan)
+            size0 = len(self._cache)
+            fn, hit = lru_get(
+                self._cache, sig, lambda: self._compile(params, plan, sig),
+                self.max_entries,
+            )
+            if hit:
+                self.hits += 1
+            else:
+                self.misses += 1
+                if len(self._cache) == size0:  # insert displaced the LRU
+                    self.evictions += 1
+            if sp:
+                sp.set("hit", hit)
+                sp.set("backend", sig.backend)
+                sp.set("batch", sig.batch)
+        with obs_trace.span("execute") as sp:
+            res = fn(queries)
+            if sp:
+                # sampled path only: block so the span covers device time
+                # (the result is about to be consumed anyway), then read
+                # the host-side counters the result already carries
+                jax.block_until_ready(res.ids)
+                sp.set("n_hops", int(np.asarray(res.n_hops)))
+                sp.set("fp_evals", int(res.total_dist_evals))
+                sp.set("code_evals", int(res.total_code_evals))
+        return res
 
     # -- compilation ---------------------------------------------------------
 

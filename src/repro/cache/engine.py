@@ -41,6 +41,7 @@ import numpy as np
 from repro.core import auto as auto_mod
 from repro.core import routing as routing_mod
 from repro.core.graph_ops import INF
+from repro.obs import trace as obs_trace
 from repro.quant import adc_scan, is_pq_mode
 from repro.api import engine as engine_mod
 from repro.api.engine import Engine, SearchParams
@@ -249,8 +250,24 @@ class TieredEngine:
     ):
         if isinstance(queries, tuple):
             queries = QueryBatch.match(*queries)
-        plan = self.plan(queries, params)
+        with obs_trace.span("plan") as sp:
+            plan = self.plan(queries, params)
+            if sp:
+                sp.set("backend", plan.backend)
+                sp.set("quant_mode", plan.quant_mode)
+                sp.set("reason", plan.reason)
+                sp.set("cost_brute", plan.cost_brute)
+                sp.set("cost_graph", plan.cost_graph)
+        sp = obs_trace.current()
+        if sp and self.tier is not None:
+            hot0 = self.tier.hot_row_hits
+            cold0 = self.tier.cold_row_gathers
         res = self.executor.run(queries, params, plan)
+        if sp and self.tier is not None:
+            # the gather happened inside the executor's execute span; report
+            # the tier split for this request as counter deltas
+            sp.set("tier_hot_hits", self.tier.hot_row_hits - hot0)
+            sp.set("tier_cold_gathers", self.tier.cold_row_gathers - cold0)
         ids = np.asarray(res.ids)
         self.tracker.observe(ids)
         self._since_epoch += int(ids.shape[0])

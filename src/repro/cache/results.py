@@ -59,6 +59,7 @@ class CachedResult(NamedTuple):
     dists: np.ndarray  # (K,) f32
     epoch: int  # engine write epoch the result was computed under
     expires: float  # caller-clock expiry (+inf when no TTL)
+    empty: bool = False  # negative result: hard predicate pruned every row
 
 
 class ResultCache:
@@ -79,6 +80,10 @@ class ResultCache:
         self.invalidations = 0  # epoch-stale entries dropped at lookup
         self.expirations = 0  # TTL-expired entries dropped at lookup
         self.evictions = 0  # LRU displacement at insert
+        #: hits on negative entries (all-INVALID payloads: the query's hard
+        #: predicate pruned every row) — repeating an impossible predicate
+        #: costs a dict lookup instead of a device scan
+        self.empty_hits = 0
 
     def lookup(
         self, key: bytes, now: float, epoch: int
@@ -104,6 +109,8 @@ class ResultCache:
                 return None
             self._entries.move_to_end(key)
             self.hits += 1
+            if entry.empty:
+                self.empty_hits += 1
             return entry.ids.copy(), entry.dists.copy()
 
     def insert(
@@ -118,12 +125,18 @@ class ResultCache:
         its request was admitted (NOT the current epoch — if a write landed
         mid-flight the entry must already be stale)."""
         expires = float("inf") if self.ttl is None else now + self.ttl
+        ids = np.asarray(ids)
+        # negative-result caching: a hard predicate that prunes to zero
+        # survivors yields an all-INVALID row — flag it so repeat lookups
+        # of the impossible predicate are attributable (``empty_hits``)
+        empty = bool(ids.size) and bool(np.all(ids < 0))
         with self._lock:
             self._entries[key] = CachedResult(
-                ids=np.asarray(ids).copy(),
+                ids=ids.copy(),
                 dists=np.asarray(dists).copy(),
                 epoch=int(epoch),
                 expires=expires,
+                empty=empty,
             )
             self._entries.move_to_end(key)
             self.insertions += 1
@@ -140,6 +153,7 @@ class ResultCache:
         with self._lock:
             self.hits = self.misses = self.insertions = 0
             self.invalidations = self.expirations = self.evictions = 0
+            self.empty_hits = 0
 
     def __len__(self) -> int:
         with self._lock:
@@ -152,6 +166,10 @@ class ResultCache:
                 "hits": self.hits,
                 "misses": self.misses,
                 "hit_rate": (self.hits / total) if total else 0.0,
+                "empty_hits": self.empty_hits,
+                "empty_entries": sum(
+                    1 for e in self._entries.values() if e.empty
+                ),
                 "insertions": self.insertions,
                 "invalidations": self.invalidations,
                 "expirations": self.expirations,

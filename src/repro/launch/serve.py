@@ -24,6 +24,8 @@ Examples:
   PYTHONPATH=src python -m repro.launch.serve --index-dir /tmp/idx --rate 200
   PYTHONPATH=src python -m repro.launch.serve --n 20000 --writes 2000 \\
       --write-rate 500 --max-delta-rows 1024
+  PYTHONPATH=src python -m repro.launch.serve --n 20000 \\
+      --metrics-port 9100 --trace-sample 16 --trace-out /tmp/trace.json
 """
 from __future__ import annotations
 
@@ -41,6 +43,7 @@ def main() -> None:
     from repro.data.synthetic import make_hybrid_dataset
     from repro.cache import ResultCache, TieredEngine
     from repro.mutable import CompactionPolicy, MutableEngine
+    from repro.obs import Tracer, dump_chrome_trace
     from repro.quant import QUANT_MODES, QuantConfig
     from repro.serve import (
         Delete, Request, TenantPolicy, TenantRegistry, ThreadedServer,
@@ -98,6 +101,17 @@ def main() -> None:
     ap.add_argument("--cache-ttl", type=float, default=0.0,
                     help="result-cache entry lifetime in seconds "
                          "(0 = no expiry)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve the metrics registry over HTTP on this "
+                         "port: Prometheus text at /metrics, JSON at "
+                         "/metrics.json (0 = pick an ephemeral port)")
+    ap.add_argument("--trace-sample", type=int, default=0,
+                    help="sample every Nth request into a per-query trace "
+                         "(0 = tracing off; the no-op path costs nothing)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write sampled traces as Chrome trace-event JSON "
+                         "(chrome://tracing / Perfetto); implies "
+                         "--trace-sample 1 unless set explicitly")
     args = ap.parse_args()
     buckets = tuple(int(b) for b in args.buckets.split(","))
     n_writes = max(0, min(args.writes, args.n // 2))
@@ -229,8 +243,17 @@ def main() -> None:
         )
         print(f"result cache: {args.result_cache} entries"
               + (f", ttl={args.cache_ttl:g}s" if args.cache_ttl > 0 else ""))
+    sample_every = args.trace_sample or (1 if args.trace_out else 0)
+    tracer = Tracer(sample_every=sample_every) if sample_every > 0 else None
+    if tracer is not None:
+        print(f"tracing: sampling every {sample_every} request(s)")
     with ThreadedServer(eng, reg, window_ms=args.window_ms,
-                        buckets=buckets, result_cache=result_cache) as srv:
+                        buckets=buckets, result_cache=result_cache,
+                        tracer=tracer,
+                        metrics_port=args.metrics_port) as srv:
+        if srv.metrics_server is not None:
+            print(f"metrics: {srv.metrics_server.url}/metrics "
+                  f"(JSON at /metrics.json)")
         futs = [srv.submit(r) for r in reqs]
         results = [f.result() for f in futs]
 
@@ -275,6 +298,17 @@ def main() -> None:
               f"{d['tombstones']} tombstones "
               f"(logical n={d['logical_n']}, "
               f"{d['delta_result_fraction']:.1%} of served ids from delta)")
+
+    if tracer is not None:
+        traces = tracer.traces()
+        if args.trace_out:
+            dump_chrome_trace(traces, args.trace_out)
+            print(f"  traces: {len(traces)} sampled -> {args.trace_out} "
+                  "(open in chrome://tracing or ui.perfetto.dev)")
+        elif traces:
+            root = traces[-1].root
+            print(f"  traces: {len(traces)} sampled "
+                  f"(last root {root.duration * 1e3:.1f}ms end-to-end)")
 
     if done:
         take = [r.request_id for r in done]

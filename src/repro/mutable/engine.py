@@ -42,6 +42,7 @@ from repro.api.planner import CostModel
 from repro.core.graph_ops import INF, INVALID
 from repro.core.routing import SearchResult
 from repro.mutable.delta import DeltaSegment
+from repro.obs import trace as obs_trace
 
 __all__ = ["CompactionPolicy", "MutableEngine", "WriteOp"]
 
@@ -297,11 +298,15 @@ class MutableEngine:
                 dead = np.isin(main_ids, banned)
                 main_ids = np.where(dead, INVALID, main_ids)
                 main_sq = np.where(dead, INF, main_sq)
-            d_ids, d_sq = self.delta.topk(
-                queries, k, self.engine.index.metric_cfg,
-                oracle=(plan.backend == "brute"),
-                enforce=params.enforce_equality,
-            )
+            with obs_trace.span("delta_scan") as sp:
+                d_ids, d_sq = self.delta.topk(
+                    queries, k, self.engine.index.metric_cfg,
+                    oracle=(plan.backend == "brute"),
+                    enforce=params.enforce_equality,
+                )
+                if sp:
+                    sp.set("delta_rows", int(self.delta.n_alive))
+                    sp.set("tombstones", len(self.tombstones))
             # one currency on both sides (see module docstring) → plain sort
             all_ids = np.concatenate([main_ids, d_ids], axis=1)
             all_sq = np.concatenate([main_sq, d_sq], axis=1)

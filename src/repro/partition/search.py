@@ -41,6 +41,7 @@ from repro.core import routing as routing_mod
 from repro.core.auto import MetricConfig
 from repro.core.graph_ops import INF, INVALID
 from repro.core.routing import SearchResult
+from repro.obs import trace as obs_trace
 from repro.quant import adc_scan
 from repro.quant.store import is_packed_mode, is_pq_mode
 
@@ -175,6 +176,13 @@ class PartitionedSearcher:
         pidx = engine.index
         hard_all = plan.sub_backend == "brute" or params.enforce_equality
         probes = pidx.probe(queries, plan.nprobe, hard_all)  # (B, nprobe)
+        sp = obs_trace.current()  # the executor's "execute" span when sampled
+        if sp:
+            # host-side probe attribution: -1 slots are summary-pruned
+            sp.set("partitions_scored", int(pidx.n_partitions))
+            sp.set("partitions_probed", int((probes >= 0).sum()))
+            sp.set("partitions_pruned", int((probes < 0).sum()))
+            sp.set("nprobe", int(probes.shape[1]))
         if plan.sub_backend == "brute":
             if is_pq_mode(plan.quant_mode):
                 return self._probe_pq(engine, queries, params, plan, probes)

@@ -45,6 +45,8 @@ import numpy as np
 
 from repro.api import Engine, QueryBatch, SearchParams
 from repro.api.executor import PlanSignature
+from repro.obs import trace as obs_trace
+from repro.obs.trace import Tracer
 from repro.serve.request import Completed, Request
 from repro.serve.stats import ServerStats
 
@@ -62,6 +64,7 @@ class _Pending:
     params: SearchParams  # resolved (tenant default or override)
     backend: str  # B=1 planner decision, pinned at flush
     arrival: float  # driver-clock enqueue time
+    sampled: bool = False  # tracer's per-request sampling decision
 
 
 class RequestQueue:
@@ -111,6 +114,7 @@ class Microbatcher:
         stats: ServerStats,
         window_s: float = 0.002,
         buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
+        tracer: Optional[Tracer] = None,
     ):
         ladder = tuple(sorted(set(int(b) for b in buckets)))
         if not ladder or ladder[0] < 1:
@@ -119,6 +123,7 @@ class Microbatcher:
         self.stats = stats
         self.buckets = ladder
         self.queue = RequestQueue(window_s)
+        self.tracer = tracer
 
     # -- compile + enqueue ----------------------------------------------------
 
@@ -141,7 +146,12 @@ class Microbatcher:
         only when this request filled the largest bucket)."""
         qb = QueryBatch.from_queries([req.query])
         key, backend = self.compile_key(qb, params)
-        size = self.queue.push(key, _Pending(req, qb, params, backend, now))
+        sampled = (
+            self.tracer is not None and self.tracer.should_sample()
+        )
+        size = self.queue.push(
+            key, _Pending(req, qb, params, backend, now, sampled)
+        )
         self.stats.record_queue_depth(self.queue.depth)
         if size >= self.buckets[-1]:
             return self.flush(key, now)
@@ -173,14 +183,31 @@ class Microbatcher:
             return []
         self.stats.record_queue_depth(self.queue.depth)
         bucket = self.bucket_for(len(group))
-        qb = self._assemble(key, group, bucket)
-        # pin the B=1 backend decision: the cost model's batch-amortized
-        # crossover must not flip a coalesced batch onto other semantics
-        params = dataclasses.replace(group[0].params, backend=group[0].backend)
-        t0 = time.perf_counter()
-        res = self.engine.search(qb, params)
-        jax.block_until_ready(res.ids)
-        service_s = time.perf_counter() - t0
+        # one trace per flushed batch: the first sampled pending is the lead
+        # request the trace narrates; the engine spans (plan/compile/
+        # execute) attach under "batch" via the thread-local current span
+        lead: Optional[_Pending] = None
+        if self.tracer is not None:
+            lead = next((p for p in group if p.sampled), None)
+        trace = self.tracer.start("request") if lead is not None else None
+        root = trace.root if trace is not None else obs_trace.NOOP_SPAN
+        with root.span("batch") as batch_sp:
+            with batch_sp.span("assemble"):
+                qb = self._assemble(key, group, bucket)
+            # pin the B=1 backend decision: the cost model's batch-amortized
+            # crossover must not flip a coalesced batch onto other semantics
+            params = dataclasses.replace(
+                group[0].params, backend=group[0].backend
+            )
+            t0 = time.perf_counter()
+            res = self.engine.search(qb, params)
+            jax.block_until_ready(res.ids)
+            service_s = time.perf_counter() - t0
+            if batch_sp:
+                batch_sp.set("bucket", bucket)
+                batch_sp.set("batch_real", len(group))
+                batch_sp.set("pad_rows", bucket - len(group))
+                batch_sp.set("backend", group[0].backend)
         ids = np.asarray(res.ids)
         dists = np.asarray(res.dists)
         self.stats.record_batch(len(group), bucket, service_s)
@@ -200,6 +227,23 @@ class Microbatcher:
                 bucket=bucket,
                 batch_fill=fill,
             ))
+        if trace is not None:
+            # the queue wait ran on the driver clock (virtual in serve_loop,
+            # wall in ThreadedServer) — attach it as a synthetic span ending
+            # where the batch began, and pin the root to queue + batch so
+            # the trace decomposes the end-to-end latency exactly
+            queue_s = max(now - lead.arrival, 0.0)
+            batch = root.children[0]
+            root.t0 = batch.t0 - queue_s
+            root.t1 = batch.t1
+            root.add("queue", root.t0, queue_s)
+            root.children.reverse()  # queue first, then batch
+            root.set("tenant", lead.req.tenant)
+            root.set("request_id", lead.req.request_id)
+            root.set("queue_ms", queue_s * 1e3)
+            root.set("service_ms", service_s * 1e3)
+            root.set("cached", False)
+            self.tracer.finish(trace)
         return out
 
     # -- batch assembly --------------------------------------------------------

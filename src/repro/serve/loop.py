@@ -23,6 +23,8 @@ from typing import Iterable, List, Optional, Tuple, Union
 
 from repro.api import Engine
 from repro.cache.results import ResultCache, result_key
+from repro.obs.http import MetricsServer
+from repro.obs.trace import Tracer
 from repro.serve import request as request_mod
 from repro.serve.batcher import DEFAULT_BUCKETS, Microbatcher
 from repro.serve.request import (
@@ -66,6 +68,7 @@ def serve_loop(
     max_queue: int = 1024,
     stats: Optional[ServerStats] = None,
     result_cache: Optional[ResultCache] = None,
+    tracer: Optional[Tracer] = None,
 ) -> Tuple[List[Response], ServerStats]:
     """Drive a scripted request trace through the serving stack.
 
@@ -95,6 +98,12 @@ def serve_loop(
     captured *at admission*, so an entry computed across a write can never
     serve afterwards.
 
+    ``tracer`` attaches sampled per-query tracing (``repro.obs.Tracer``):
+    each flushed batch whose group holds a sampled request records one
+    span tree (queue wait + batch, with the engine's plan/compile/execute
+    children) retrievable via ``tracer.traces()``. ``None`` (and a tracer
+    with ``sample_every=0``) keep the loop on the no-op path.
+
     Returns one response per submitted request, in submission order, plus
     the ``ServerStats`` for the run.
     """
@@ -103,7 +112,8 @@ def serve_loop(
     if result_cache is not None:
         stats.result_cache = result_cache
     mb = Microbatcher(
-        engine, stats, window_s=window_ms * 1e-3, buckets=buckets
+        engine, stats, window_s=window_ms * 1e-3, buckets=buckets,
+        tracer=tracer,
     )
     out: List[Optional[Response]] = []
     slot: dict = {}  # in-flight request_id → submission index
@@ -225,6 +235,8 @@ class ThreadedServer:
         buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
         max_queue: int = 1024,
         result_cache: Optional[ResultCache] = None,
+        tracer: Optional[Tracer] = None,
+        metrics_port: Optional[int] = None,
     ):
         self.registry = registry or TenantRegistry(
             default_policy=TenantPolicy()
@@ -234,8 +246,16 @@ class ThreadedServer:
         self._result_cache = result_cache
         if result_cache is not None:
             self.stats.result_cache = result_cache
+        self.tracer = tracer
         self._mb = Microbatcher(
-            engine, self.stats, window_s=window_ms * 1e-3, buckets=buckets
+            engine, self.stats, window_s=window_ms * 1e-3, buckets=buckets,
+            tracer=tracer,
+        )
+        #: scrape endpoint over this server's metrics registry; pass
+        #: ``metrics_port=0`` for an ephemeral port (read ``.port`` back)
+        self.metrics_server: Optional[MetricsServer] = (
+            None if metrics_port is None
+            else MetricsServer(self.stats.registry, port=metrics_port)
         )
         self.max_queue = max_queue
         self._inbox: "queue_mod.Queue" = queue_mod.Queue()
@@ -255,6 +275,8 @@ class ThreadedServer:
         if self._thread is None:
             self._thread = threading.Thread(target=self._run, daemon=True)
             self._thread.start()
+            if self.metrics_server is not None:
+                self.metrics_server.start()
         return self
 
     def stop(self) -> None:
@@ -291,6 +313,8 @@ class ThreadedServer:
                     request_id=req.request_id, tenant=req.tenant,
                     reason=request_mod.REJECT_STOPPED,
                 ))
+        if self.metrics_server is not None:
+            self.metrics_server.stop()
         self.stats.span_s = max(time.monotonic() - self._t0, 1e-9)
 
     def __enter__(self) -> "ThreadedServer":

@@ -1,11 +1,17 @@
 """Live serving metrics, sampled without device round-trips.
 
-``ServerStats`` accumulates host-side counters only: request latencies are
-host clock differences, batch shapes are Python ints, and the cache/trace
-rates come from host counters the executor and router already maintain
-(``Executor.stats()``, ``core.routing.trace_count``). ``snapshot()`` never
-touches a device array, so metrics can be scraped from a live server
-without stalling the serving stream.
+``ServerStats`` is a thin view over a ``repro.obs.MetricsRegistry`` plus
+the per-tenant breakdown: request latencies land in the registry's bounded
+streaming histograms (``serve_queue_ms`` / ``serve_service_ms`` /
+``serve_total_ms`` / ``serve_merge_ms`` — fixed log-spaced buckets, so a
+long-running server's memory no longer grows with every completion, which
+the old per-request Python lists did), and every other counter owner in
+the stack — the executor's plan cache, the jit retrace counter, the
+mutable engine's delta/WAL/merge gauges, the tier, the ``SegmentStore``
+and the serve-layer ``ResultCache`` — is registered as a pull-based
+*provider* on the same registry, so one scrape surface
+(``/metrics``, ``/metrics.json`` via ``repro.obs.MetricsServer``) sees
+them all with zero new work on any hot path.
 
 Latency is decomposed per request into ``queue`` (waiting for the
 micro-batch window — the driver's clock domain) and ``service`` (measured
@@ -14,10 +20,10 @@ percentiles reported are end-to-end (queue + service).
 
 All recording paths hold one re-entrant lock: under ``ThreadedServer`` the
 submit path runs on caller threads while completions/batches come from the
-worker and merges from the merge thread, and the previous bare
-read-modify-writes (counters, ``per_tenant`` dicts, latency lists) could
-drop updates. ``snapshot()`` takes the same lock, so a mid-stream scrape
-sees a consistent sample.
+worker and merges from the merge thread. ``snapshot()`` takes the same
+lock for the counter block, so a mid-stream scrape sees a consistent
+sample. ``snapshot()`` keys are backward-compatible with the pre-registry
+implementation.
 """
 from __future__ import annotations
 
@@ -25,10 +31,11 @@ import threading
 from collections import defaultdict
 from typing import TYPE_CHECKING, Optional
 
-import numpy as np
+from repro.obs.registry import MetricsRegistry
 
 if TYPE_CHECKING:
     from repro.api import Engine
+    from repro.cache.results import ResultCache
 
 __all__ = ["ServerStats"]
 
@@ -36,11 +43,16 @@ __all__ = ["ServerStats"]
 class ServerStats:
     """Serving-loop metrics accumulator (one per driver run or server)."""
 
-    def __init__(self, engine: Optional["Engine"] = None):
+    def __init__(
+        self,
+        engine: Optional["Engine"] = None,
+        registry: Optional[MetricsRegistry] = None,
+    ):
         from repro.core import routing as routing_mod
 
         self._engine = engine
         self._lock = threading.RLock()
+        self.registry = registry or MetricsRegistry()
         ex = engine.executor.stats() if engine is not None else None
         # baselines: snapshot deltas isolate *this* serving run from
         # whatever warmed the process earlier
@@ -60,10 +72,19 @@ class ServerStats:
         self.upserts = 0
         self.deletes = 0
         self.writes_rejected = 0
-        self.merge_ms: list = []
-        self.queue_ms: list = []
-        self.service_ms: list = []
-        self.total_ms: list = []
+        # bounded streaming latency state (the old unbounded lists)
+        self._h_queue = self.registry.histogram(
+            "serve_queue_ms", help="per-request micro-batch window wait"
+        )
+        self._h_service = self.registry.histogram(
+            "serve_service_ms", help="coalesced batch execution wall time"
+        )
+        self._h_total = self.registry.histogram(
+            "serve_total_ms", help="end-to-end request latency"
+        )
+        self._h_merge = self.registry.histogram(
+            "serve_merge_ms", help="delta merge wall time (prepare + apply)"
+        )
         self.batches = 0
         self.real_rows = 0
         self.bucket_rows = 0
@@ -73,9 +94,66 @@ class ServerStats:
         self.span_s = 0.0  # driver-clock span of the run (for QPS)
         #: completions served straight from the result cache (no device work)
         self.cache_served = 0
-        #: the attached ``repro.cache.ResultCache`` (set by the driver when
-        #: one is in play) — ``snapshot`` folds its counters in
-        self.result_cache = None
+        self._result_cache: Optional["ResultCache"] = None
+        self._register_providers()
+
+    def _register_providers(self) -> None:
+        """Expose every existing counter owner through the registry. All
+        providers are pulled at scrape time only — nothing new runs on a
+        serving hot path."""
+        from repro.core import routing as routing_mod
+
+        reg = self.registry
+        reg.register_provider("serve", self._serve_counters)
+        reg.register_provider(
+            "routing", lambda: {"jit_traces": routing_mod.trace_count()}
+        )
+        eng = self._engine
+        if eng is None:
+            return
+        reg.register_provider("executor", lambda: eng.executor.stats())
+        write_stats = getattr(eng, "write_stats", None)
+        if write_stats is not None:  # MutableEngine: delta/WAL/merge gauges
+            reg.register_provider("delta", write_stats)
+        tier_stats = getattr(eng, "tier_stats", None)
+        if tier_stats is not None:  # TieredEngine: hot/cold + tracker
+            reg.register_provider("tier", tier_stats)
+        store = getattr(getattr(eng, "index", None), "store", None)
+        if store is not None:  # partitioned: shard residency LRU
+            reg.register_provider("segment_store", store.stats)
+
+    def _serve_counters(self) -> dict:
+        with self._lock:
+            return {
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "rejected": self.rejected,
+                "upserts": self.upserts,
+                "deletes": self.deletes,
+                "writes_shed": self.writes_rejected,
+                "merges": self._h_merge.count,
+                "batches": self.batches,
+                "real_rows": self.real_rows,
+                "bucket_rows": self.bucket_rows,
+                "queue_depth": self.queue_depth,
+                "max_queue_depth": self.max_queue_depth,
+                "cache_served": self.cache_served,
+            }
+
+    @property
+    def result_cache(self) -> Optional["ResultCache"]:
+        """The attached ``repro.cache.ResultCache`` (set by the driver when
+        one is in play) — ``snapshot`` folds its counters in and the
+        assignment registers it as a registry provider."""
+        return self._result_cache
+
+    @result_cache.setter
+    def result_cache(self, rc: Optional["ResultCache"]) -> None:
+        self._result_cache = rc
+        if rc is not None:
+            self.registry.register_provider("result_cache", rc.stats)
+        else:
+            self.registry.unregister_provider("result_cache")
 
     # -- recording (host-side only) ------------------------------------------
 
@@ -110,8 +188,7 @@ class ServerStats:
 
     def record_merge(self, wall_ms: float) -> None:
         """One completed delta→main merge (prepare + apply wall time)."""
-        with self._lock:
-            self.merge_ms.append(float(wall_ms))
+        self._h_merge.observe(float(wall_ms))
 
     def record_queue_depth(self, depth: int) -> None:
         with self._lock:
@@ -136,11 +213,12 @@ class ServerStats:
             self.admitted += 1  # completion implies prior admission
             self.completed += 1
             self.per_tenant[tenant]["completed"] += 1
-            self.queue_ms.append(queue_ms)
-            self.service_ms.append(service_ms)
-            self.total_ms.append(queue_ms + service_ms)
             if cached:
                 self.cache_served += 1
+        # histograms carry their own locks; keep the hot section short
+        self._h_queue.observe(queue_ms)
+        self._h_service.observe(service_ms)
+        self._h_total.observe(queue_ms + service_ms)
 
     # -- reporting ------------------------------------------------------------
 
@@ -150,11 +228,10 @@ class ServerStats:
         the padding overhead of the bucket ladder (1.0 = no padding)."""
         return self.real_rows / self.bucket_rows if self.bucket_rows else 0.0
 
-    def _pct(self, xs: list, q: float) -> float:
-        return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
-
     def snapshot(self) -> dict:
-        """One host-side metrics sample (safe to call mid-stream)."""
+        """One host-side metrics sample (safe to call mid-stream). Keys
+        are unchanged from the list-backed implementation; percentiles are
+        now the registry histograms' streaming estimates."""
         from repro.core import routing as routing_mod
 
         with self._lock:
@@ -164,16 +241,13 @@ class ServerStats:
                 "rejected": self.rejected,
                 "rejected_by_reason": dict(self.rejected_by_reason),
                 "latency_ms": {
-                    "p50": round(self._pct(self.total_ms, 50), 3),
-                    "p95": round(self._pct(self.total_ms, 95), 3),
-                    "p99": round(self._pct(self.total_ms, 99), 3),
-                    "mean": round(
-                        float(np.mean(self.total_ms))
-                        if self.total_ms else 0.0, 3
-                    ),
+                    "p50": round(self._h_total.percentile(50), 3),
+                    "p95": round(self._h_total.percentile(95), 3),
+                    "p99": round(self._h_total.percentile(99), 3),
+                    "mean": round(self._h_total.mean, 3),
                 },
-                "queue_ms_p99": round(self._pct(self.queue_ms, 99), 3),
-                "service_ms_p99": round(self._pct(self.service_ms, 99), 3),
+                "queue_ms_p99": round(self._h_queue.percentile(99), 3),
+                "service_ms_p99": round(self._h_service.percentile(99), 3),
                 "queue_depth": self.queue_depth,
                 "max_queue_depth": self.max_queue_depth,
                 "batches": self.batches,
@@ -197,9 +271,9 @@ class ServerStats:
                     "upserts": self.upserts,
                     "deletes": self.deletes,
                     "shed": self.writes_rejected,
-                    "merges": len(self.merge_ms),
-                    "merge_ms_p50": round(self._pct(self.merge_ms, 50), 3),
-                    "merge_ms_p95": round(self._pct(self.merge_ms, 95), 3),
+                    "merges": self._h_merge.count,
+                    "merge_ms_p50": round(self._h_merge.percentile(50), 3),
+                    "merge_ms_p95": round(self._h_merge.percentile(95), 3),
                 }
             cache_served = self.cache_served
         # delta/tombstone occupancy gauges from a write-capable engine
@@ -208,9 +282,9 @@ class ServerStats:
             out["delta"] = write_stats()
         # serve-layer result cache: hit/invalidation counters plus how many
         # completions this run served without touching the device
-        if self.result_cache is not None:
+        if self._result_cache is not None:
             out["result_cache"] = {
-                **self.result_cache.stats(),
+                **self._result_cache.stats(),
                 "served": cache_served,
             }
         # hot/cold tier counters from a tiered engine (repro.cache)
